@@ -1,0 +1,74 @@
+"""Shared benchmark context: one dataset + engines, built once.
+
+CPU wall-times are for RELATIVE comparisons (this container has no TPU);
+each row's `derived` column carries the paper-relevant quantity (recall,
+modeled-TPU QPS, vector reads, scaling factor...). Modeled numbers use the
+v5e constants from launch/roofline.py and are labeled `modeled_*`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core.engine import ANNEngine
+from repro.core.hnsw_graph import HNSWConfig
+from repro.data import VectorDataset
+
+N, DIM, NQ = 8000, 128, 256
+K, EF = 10, 40
+
+
+@dataclasses.dataclass
+class BenchCtx:
+    vectors: np.ndarray
+    queries: np.ndarray
+    gt: np.ndarray
+    engine: ANNEngine            # 4 partitions
+    engine1: ANNEngine           # monolithic
+    cfg: HNSWConfig
+
+
+_CTX = None
+
+
+def get_ctx() -> BenchCtx:
+    global _CTX
+    if _CTX is not None:
+        return _CTX
+    t0 = time.time()
+    ds = VectorDataset(N, DIM, n_clusters=64, seed=0)
+    vectors = ds.vectors()
+    queries = ds.queries(NQ)
+    d2 = (np.einsum("nd,nd->n", vectors, vectors)[None]
+          - 2 * queries @ vectors.T
+          + np.einsum("qd,qd->q", queries, queries)[:, None])
+    gt = np.argsort(d2, axis=1, kind="stable")[:, :K]
+    cfg = HNSWConfig(M=16, ef_construction=100, seed=0)
+    engine = ANNEngine.build(vectors, num_partitions=4, cfg=cfg,
+                             keep_vectors=True)
+    engine1 = ANNEngine.build(vectors, num_partitions=1, cfg=cfg)
+    print(f"# bench context: n={N} built in {time.time()-t0:.1f}s")
+    _CTX = BenchCtx(vectors, queries, gt, engine, engine1, cfg)
+    return _CTX
+
+
+def recall_of(ids: np.ndarray, gt: np.ndarray) -> float:
+    k = gt.shape[1]
+    return float(np.mean(
+        [len(set(ids[b, :k]) & set(gt[b])) / k for b in range(len(gt))]))
+
+
+def timeit(fn, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall microseconds per call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)

@@ -1,0 +1,45 @@
+"""Paper Fig. 9: brute-force vs HNSW — QPS and number of vector reads.
+
+The paper: HNSW reads 0.03% of the vectors (338,739x fewer) and wins 6.86x
+in QPS despite the brute-force design being perfectly compute-efficient.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import get_ctx, timeit
+from repro.core.search import SearchParams
+
+
+def run():
+    ctx = get_ctx()
+    n = ctx.vectors.shape[0]
+    q = ctx.queries
+
+    ids_h, ds_h, stats = ctx.engine.search_with_stats(q, k=10, ef=40)
+    reads_hnsw = float(np.mean(np.asarray(stats.dist_calcs).sum(axis=0)))
+    us_hnsw = timeit(lambda: ctx.engine.search(q, k=10, ef=40)[0]) / len(q)
+
+    us_bf = timeit(lambda: ctx.engine.bruteforce(q, k=10)[0]) / len(q)
+
+    # scale extrapolation: HNSW reads grow ~a*ln(n) (hierarchical graph),
+    # brute force reads grow ~n. At the paper's n = 1e9 the measured
+    # coefficient puts the read ratio in the paper's regime (they measured
+    # 338,739x; see derived). At n = 8e3 the crossover has not happened and
+    # brute force wins wall-clock — report both honestly.
+    a = reads_hnsw / np.log(n)
+    reads_1b = a * np.log(1e9)
+    ratio_1b = 1e9 / reads_1b
+    rows = [
+        ("fig9_hnsw", us_hnsw,
+         f"vector_reads={reads_hnsw:.0f};frac={reads_hnsw/n:.4f}"),
+        ("fig9_bruteforce", us_bf,
+         f"vector_reads={n};read_ratio={n/reads_hnsw:.1f}x"),
+        ("fig9_qps_ratio", 0.0,
+         f"hnsw_over_bf_cpu_n8k={us_bf/us_hnsw:.2f}x;"
+         f"extrapolated_read_ratio_1B={ratio_1b:.0f}x;"
+         f"paper_1B=338739x"),
+    ]
+    return rows

@@ -1,0 +1,39 @@
+"""LM substrate microbench: reduced-arch train-step throughput on CPU.
+
+Not a paper figure — the observability hook for the serving/training side
+of the framework (tokens/s on this host; roofline cells in EXPERIMENTS.md
+carry the TPU-modeled numbers).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import timeit
+from repro.configs import reduced_config
+from repro.data.pipeline import make_batch
+from repro.models.model import make_train_state, train_step
+from repro.optim.adamw import AdamWConfig
+
+ARCHS = ["granite_3_8b", "deepseek_v2_lite_16b", "jamba_v01_52b"]
+
+
+def run():
+    rows = []
+    opt = AdamWConfig(total_steps=100, warmup_steps=5)
+    B, T = 2, 64
+    for arch in ARCHS:
+        cfg = reduced_config(arch)
+        holder = {"state": make_train_state(jax.random.PRNGKey(0), cfg)}
+        batch = jax.tree.map(jax.numpy.asarray,
+                             make_batch(cfg, "train", T, B, step=0))
+
+        def step(holder=holder, batch=batch, cfg=cfg):
+            # train_step donates its state: thread it through.
+            holder["state"], m = train_step(holder["state"], batch, cfg, opt)
+            return m["loss"]
+
+        us = timeit(step, warmup=1, iters=2)
+        rows.append((f"lm_train_step_{arch}", us,
+                     f"tokens_per_s_cpu={B*T/(us/1e6):.0f}"))
+    return rows

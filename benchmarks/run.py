@@ -1,0 +1,52 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (CPU wall for relative numbers,
+`derived` carries recall / modeled-TPU quantities / paper references).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig9,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "fig1_recall_qps",
+    "fig8_engines",
+    "fig9_bruteforce",
+    "fig11_parallelism",
+    "fig12_platforms",
+    "table2_kernels",
+    "lm_substrate",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module prefixes")
+    args = ap.parse_args()
+    mods = MODULES
+    if args.only:
+        want = args.only.split(",")
+        mods = [m for m in MODULES if any(m.startswith(w) for w in want)]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name in mods:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for row in mod.run():
+                print(f"{row[0]},{row[1]:.1f},{row[2]}")
+            sys.stdout.flush()
+        except Exception:
+            failed += 1
+            print(f"{name},nan,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,47 @@
+"""Architecture registry: get_config / reduced_config / input_specs.
+
+Every assigned architecture is a selectable config (``--arch <id>``); each
+module defines CONFIG (full, dry-run-only) and REDUCED (CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "h2o_danube3_4b",
+    "qwen3_14b",
+    "minitron_8b",
+    "granite_3_8b",
+    "deepseek_v2_lite_16b",
+    "dbrx_132b",
+    "xlstm_350m",
+    "paligemma_3b",
+    "musicgen_large",
+    "jamba_v01_52b",
+]
+
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def _module(name: str):
+    name = ALIASES.get(name, name).replace("-", "_").replace(".", "")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(name: str):
+    return _module(name).CONFIG
+
+
+def reduced_config(name: str):
+    return _module(name).REDUCED
+
+
+def list_archs():
+    return list(ARCHS)
+
+
+from repro.configs.shapes import SHAPES, input_specs, cache_spec  # noqa: E402
+
+__all__ = ["ARCHS", "get_config", "reduced_config", "list_archs",
+           "SHAPES", "input_specs", "cache_spec"]

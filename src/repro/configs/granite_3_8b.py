@@ -1,0 +1,13 @@
+"""granite-3-8b [dense]: 40L d4096 32H (GQA kv=8) d_ff=12800 vocab=49155.
+
+GQA [hf:ibm-granite/granite-3.0-2b-base; hf]. Standard SiLU-GLU llama-style
+stack. Pure full attention -> long_500k skipped.
+"""
+
+from repro.configs.common import dense_lm, reduce_dense
+
+CONFIG = dense_lm(
+    "granite-3-8b", layers=40, d_model=4096, n_heads=32, n_kv=8,
+    d_ff=12800, vocab=49155, head_dim=128, tie=True)
+
+REDUCED = reduce_dense(CONFIG)

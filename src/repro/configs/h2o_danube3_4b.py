@@ -1,0 +1,18 @@
+"""h2o-danube-3-4b [dense]: 24L d3840 32H (GQA kv=8) d_ff=10240 vocab=32000.
+
+llama+mistral mix with sliding-window attention [arXiv:2401.16818;
+unverified]. All layers use SWA (mistral-style, window 4096), which bounds
+the decode KV cache to the window — this is what makes `long_500k`
+legitimately sub-quadratic for this arch (ring-buffer cache, DESIGN.md).
+head_dim = 3840/32 = 120 (not a 128 multiple: the MXU pads the contraction;
+noted in the roofline commentary).
+"""
+
+from repro.configs.common import dense_lm, reduce_dense
+
+CONFIG = dense_lm(
+    "h2o-danube3-4b", layers=24, d_model=3840, n_heads=32, n_kv=8,
+    d_ff=10240, vocab=32000, head_dim=120, window=4096,
+    rope_theta=5e5, sub_quadratic=True)
+
+REDUCED = reduce_dense(CONFIG, window=8)

@@ -1,0 +1,27 @@
+"""musicgen-large [audio]: 48L d2048 32H (MHA kv=32) d_ff=8192 vocab=2048.
+
+Decoder-only over EnCodec tokens [arXiv:2306.05284; hf]. The EnCodec
+frontend is a STUB: input_specs() provides precomputed frame embeddings
+(sum of the 4 codebook embeddings after the delay pattern) [B, T, d]; the
+output is 4 codebook heads of vocab 2048 each (num_output_heads=4).
+Non-gated GELU MLP. Full attention -> long_500k skipped.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.transformer import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large", d_model=2048, n_heads=32, n_kv_heads=32,
+    head_dim=64, d_ff=8192, vocab_size=2048,
+    pattern=(LayerSpec("attn", "dense"),), num_periods=48,
+    act="gelu", embed_inputs=False, num_output_heads=4,
+    family="audio", param_dtype=jnp.bfloat16, kv_quant=True)
+
+REDUCED = dataclasses.replace(
+    CONFIG, d_model=128, n_heads=4, n_kv_heads=4, head_dim=32, d_ff=256,
+    vocab_size=512, num_periods=2,
+    param_dtype=jnp.float32, loss_chunk=16, block_q=16, block_k=32,
+    kv_quant=False)

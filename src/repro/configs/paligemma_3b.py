@@ -1,0 +1,26 @@
+"""paligemma-3b [vlm]: 18L d2048 8H (MQA kv=1) d_ff=16384 vocab=257216.
+
+SigLIP + gemma [arXiv:2407.07726; hf]. The SigLIP frontend is a STUB per
+the assignment: input_specs() provides precomputed patch+text embeddings
+[B, T, d]; the first `prefix_len` positions (image patches) attend
+bidirectionally (prefix-LM). head_dim=256 (gemma-2b). Full prefix attention
+-> long_500k skipped.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.transformer import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b", d_model=2048, n_heads=8, n_kv_heads=1, head_dim=256,
+    d_ff=16384, vocab_size=257216,
+    pattern=(LayerSpec("attn", "glu"),), num_periods=18,
+    act="gelu", embed_inputs=False, prefix_lm=True,
+    family="vlm", param_dtype=jnp.bfloat16)
+
+REDUCED = dataclasses.replace(
+    CONFIG, d_model=128, n_heads=4, n_kv_heads=1, head_dim=32, d_ff=256,
+    vocab_size=512, num_periods=2,
+    param_dtype=jnp.float32, loss_chunk=16, block_q=16, block_k=32)

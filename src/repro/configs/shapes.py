@@ -1,0 +1,84 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+train_4k    : train_step,   seq 4096,    global_batch 256
+prefill_32k : prefill_step, seq 32768,   global_batch 32
+decode_32k  : decode_step,  KV 32768,    global_batch 128
+long_500k   : decode_step,  KV 524288,   global_batch 1   (sub-quadratic only)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig, init_cache
+
+__all__ = ["SHAPES", "ShapeCfg", "input_specs", "cache_spec", "shape_runnable"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCfg("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCfg("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCfg("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_runnable(cfg: ModelConfig, shape: ShapeCfg) -> tuple[bool, str]:
+    """long_500k only for sub-quadratic archs (SWA / SSM / hybrid)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("skipped: pure full-attention architecture — "
+                       "unbounded KV at 512k context (see DESIGN.md)")
+    return True, ""
+
+
+def _tok(b, t):
+    return jax.ShapeDtypeStruct((b, t), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg, act_dtype=jnp.bfloat16):
+    """Inputs for the step function of this cell (no allocation)."""
+    B, T = shape.batch, shape.seq
+    if shape.kind == "train":
+        if cfg.embed_inputs:
+            inputs = _tok(B, T)
+        else:  # modality frontend stub: precomputed frame/patch embeddings
+            inputs = jax.ShapeDtypeStruct((B, T, cfg.d_model), act_dtype)
+        labels = (
+            _tok(B, T) if cfg.num_output_heads == 1
+            else jax.ShapeDtypeStruct((B, T, cfg.num_output_heads), jnp.int32))
+        batch = {"inputs": inputs, "labels": labels}
+        if cfg.prefix_lm:
+            batch["prefix_len"] = jax.ShapeDtypeStruct((), jnp.int32)
+        return batch
+    if shape.kind == "prefill":
+        if cfg.embed_inputs:
+            inputs = _tok(B, T)
+        else:
+            inputs = jax.ShapeDtypeStruct((B, T, cfg.d_model), act_dtype)
+        batch = {"inputs": inputs}
+        if cfg.prefix_lm:
+            batch["prefix_len"] = jax.ShapeDtypeStruct((), jnp.int32)
+        return batch
+    # decode: one new token against a seq-length cache
+    if cfg.embed_inputs:
+        tokens = _tok(B, 1)
+    else:
+        tokens = jax.ShapeDtypeStruct((B, 1, cfg.d_model), act_dtype)
+    return {"tokens": tokens, "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def cache_spec(cfg: ModelConfig, shape: ShapeCfg, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree of the KV/recurrent cache for this cell."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.batch, shape.seq, dtype=dtype))

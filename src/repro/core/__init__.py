@@ -1,0 +1,22 @@
+"""The paper's contribution: two-stage partitioned HNSW search for
+accelerator-resident graph databases (SmartSSD -> TPU adaptation)."""
+
+from repro.core.hnsw_graph import HNSWConfig, DeviceDB, build_hnsw, restructure
+from repro.core.search import SearchParams, batch_search
+from repro.core.partitioned import PartitionedDB, build_partitioned_db, search_partitioned
+from repro.core.bruteforce import bruteforce_topk
+from repro.core.engine import ANNEngine
+
+__all__ = [
+    "HNSWConfig",
+    "DeviceDB",
+    "build_hnsw",
+    "restructure",
+    "SearchParams",
+    "batch_search",
+    "PartitionedDB",
+    "build_partitioned_db",
+    "search_partitioned",
+    "bruteforce_topk",
+    "ANNEngine",
+]

@@ -1,0 +1,114 @@
+"""Distributed two-stage search: graph parallelism + query parallelism
+(paper Fig. 10/11) as explicit shard_map collectives.
+
+Graph parallelism (the paper's winning strategy — 3.67x at 4 devices):
+partitions shard over the `model` axis; each device searches only its
+resident sub-graphs; per-device top-K results are all-gathered along
+`model` and rank-merged (stage 2). The merge is O(P*K) — the paper measured
+0.2% of runtime for its host-side equivalent.
+
+Query parallelism: the query batch shards over `data` (and `pod` across
+pods). Unlike the paper's variant — where every device had to LOAD THE
+WHOLE DATABASE and scaling collapsed to 1.56x — here partitions stay
+resident in HBM, so sharding queries across the replicas of the *graph-
+sharded* engine is free. The hybrid (graph || within `model`, query ||
+across `data`/`pod`) is the scale-out story for 1000+ nodes: pods never
+exchange database shards, only (gid, dist) result tuples.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.hnsw_graph import DeviceDB
+from repro.core.partitioned import PartitionedDB, merge_topk
+from repro.core.search import SearchParams, batch_search
+
+__all__ = ["shard_db", "distributed_search", "DistributedANNEngine"]
+
+
+def shard_db(pdb: PartitionedDB, mesh) -> PartitionedDB:
+    """Place partitions round-robin over the `model` axis (P % model == 0)."""
+    spec = P("model")
+    db = jax.tree.map(
+        lambda a: jax.device_put(a, NamedSharding(mesh, P(*( ("model",) + (None,) * (a.ndim - 1))))),
+        pdb.db)
+    return PartitionedDB(db=db, num_partitions=pdb.num_partitions, dim=pdb.dim)
+
+
+def _dp_spec(mesh):
+    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return axes
+
+
+def make_distributed_search(mesh, p: SearchParams, maxM0: int,
+                            graph_axes=("model",), query_axes=None):
+    """Builds the jitted two-stage distributed search for a mesh.
+
+    graph_axes : mesh axes the partitions shard over. For the SIFT1B-scale
+        deployment this is the WHOLE pod ("data", "model") — one ~3.9M-vector
+        partition per chip, the paper's one-sub-graph-per-SmartSSD mapping.
+    query_axes : mesh axes the query batch shards over (e.g. ("pod",) across
+        pods). None -> queries replicated over the graph axes.
+    """
+    p = p.resolve(maxM0)
+    query_axes = tuple(query_axes or ())
+    in_specs = (
+        DeviceDB(*(P(graph_axes) for _ in DeviceDB._fields)),
+        P(query_axes if query_axes else None, None),
+    )
+    qspec = P(query_axes if query_axes else None, None)
+    out_specs = (qspec, qspec, qspec)
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False)
+    def _search(db_local: DeviceDB, queries):
+        # stage 1: every local partition searches the local query shard.
+        ids, ds, stats = jax.vmap(
+            lambda db: batch_search(db, queries, p))(db_local)
+        # [P_loc, B_loc, k] -> [B_loc, P_loc * k]
+        ids = jnp.swapaxes(ids, 0, 1).reshape(queries.shape[0], -1)
+        ds = jnp.swapaxes(ds, 0, 1).reshape(queries.shape[0], -1)
+        # stage 2: gather candidates across the graph axes, rank-merge.
+        all_ids = ids
+        all_ds = ds
+        for ax in graph_axes:
+            all_ids = jax.lax.all_gather(all_ids, ax, axis=1, tiled=True)
+            all_ds = jax.lax.all_gather(all_ds, ax, axis=1, tiled=True)
+        order = jnp.argsort(all_ds, axis=1, stable=True)[:, : p.k]
+        out_i = jnp.take_along_axis(all_ids, order, axis=1)
+        out_d = jnp.take_along_axis(all_ds, order, axis=1)
+        return out_i, out_d, jnp.sum(stats.dist_calcs)[None, None].repeat(
+            queries.shape[0], 0)
+
+    return jax.jit(_search)
+
+
+class DistributedANNEngine:
+    """Mesh-wide engine: partitions on `model`, queries on `data`/`pod`."""
+
+    def __init__(self, pdb: PartitionedDB, mesh, params: SearchParams):
+        n_model = mesh.shape["model"]
+        assert pdb.num_partitions % n_model == 0, (
+            f"{pdb.num_partitions} partitions must divide over model={n_model}")
+        self.mesh = mesh
+        self.pdb = shard_db(pdb, mesh)
+        self.params = params
+        maxM0 = int(self.pdb.db.l0_nbrs.shape[-1])
+        self._search = make_distributed_search(
+            mesh, params, maxM0, graph_axes=("model",),
+            query_axes=_dp_spec(mesh))
+
+    def search(self, queries):
+        dp = _dp_spec(self.mesh)
+        q = jax.device_put(
+            jnp.asarray(queries),
+            NamedSharding(self.mesh, P(dp, None)))
+        ids, ds, _ = self._search(self.pdb.db, q)
+        return ids, ds

@@ -1,0 +1,127 @@
+"""High-level ANN engine API (single-host; distributed version in
+core/distributed.py).
+
+Mirrors the platform dataflow of paper Fig. 4: the bulk tier (host / object
+store) holds all partitions, the engine loads them into the accelerator
+memory once, and queries stream through without touching the bulk tier
+again. `rerank=True` reproduces the paper's host-side stage-2 brute force
+over raw vectors exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hnsw_graph as hg
+from repro.core.bruteforce import bruteforce_topk
+from repro.core.partitioned import (
+    PartitionedDB,
+    build_partitioned_db,
+    search_partitioned,
+)
+from repro.core.search import SearchParams
+
+__all__ = ["ANNEngine"]
+
+
+@dataclasses.dataclass
+class ANNEngine:
+    """Build once, search many times.
+
+    >>> eng = ANNEngine.build(vectors, num_partitions=4)
+    >>> ids, dists = eng.search(queries, k=10, ef=40)
+    """
+
+    pdb: PartitionedDB
+    cfg: hg.HNSWConfig
+    vectors: np.ndarray | None = None   # kept only if rerank is requested
+
+    @classmethod
+    def build(
+        cls,
+        vectors: np.ndarray,
+        num_partitions: int = 1,
+        cfg: hg.HNSWConfig | None = None,
+        keep_vectors: bool = False,
+    ) -> "ANNEngine":
+        cfg = cfg or hg.HNSWConfig()
+        pdb = build_partitioned_db(vectors, num_partitions, cfg)
+        pdb = PartitionedDB(
+            db=jax.tree.map(jnp.asarray, pdb.db),
+            num_partitions=pdb.num_partitions,
+            dim=pdb.dim,
+        )
+        return cls(pdb=pdb, cfg=cfg, vectors=vectors if keep_vectors else None)
+
+    def search(self, queries, k: int = 10, ef: int = 40, rerank: bool = False):
+        p = SearchParams(ef=ef, k=k)
+        ids, dists, _ = search_partitioned(self.pdb, jnp.asarray(queries), p)
+        if rerank:
+            ids, dists = self._rerank(np.asarray(queries), np.asarray(ids), k)
+        return ids, dists
+
+    def search_with_stats(self, queries, k: int = 10, ef: int = 40):
+        p = SearchParams(ef=ef, k=k)
+        return search_partitioned(self.pdb, jnp.asarray(queries), p)
+
+    def _rerank(self, queries: np.ndarray, ids: np.ndarray, k: int):
+        """Paper stage 2: exact distances over the P*K intermediate results."""
+        assert self.vectors is not None, "build with keep_vectors=True to rerank"
+        out_i = np.full((ids.shape[0], k), -1, np.int32)
+        out_d = np.full((ids.shape[0], k), np.inf, np.float32)
+        for b, (q, row) in enumerate(zip(queries, ids)):
+            cand = np.unique(row[row >= 0])
+            d = np.einsum("nd,nd->n", self.vectors[cand] - q, self.vectors[cand] - q)
+            order = np.argsort(d, kind="stable")[:k]
+            out_i[b, : len(order)] = cand[order]
+            out_d[b, : len(order)] = d[order]
+        return out_i, out_d
+
+    def save(self, path: str):
+        """Persist the restructured partitioned DB (the paper's one-time SSD
+        initialization, Fig. 4 step 1) via the checkpoint store."""
+        from repro.checkpoint import save_checkpoint
+        tree = {"db": self.pdb.db._asdict(),
+                "meta": {"num_partitions": jnp.int32(self.pdb.num_partitions),
+                         "dim": jnp.int32(self.pdb.dim)}}
+        return save_checkpoint(path, 0, tree)
+
+    @classmethod
+    def load(cls, path: str, cfg: hg.HNSWConfig | None = None) -> "ANNEngine":
+        """Restore a saved engine (the SSD -> HBM fetch of Fig. 4 step 2)."""
+        import json as _json
+        import os as _os
+
+        import numpy as _np
+        from repro.checkpoint import restore_checkpoint
+        d = _os.path.join(path, "step_00000000")
+        with open(_os.path.join(d, "manifest.json")) as f:
+            manifest = _json.load(f)
+        leaves = {}
+        for e in manifest["leaves"]:
+            arr = _np.load(_os.path.join(d, e["file"] + ".npy"))
+            leaves[e["path"]] = arr
+        db = hg.DeviceDB(**{k.split("/", 1)[1]: jnp.asarray(v)
+                            for k, v in leaves.items()
+                            if k.startswith("db/")})
+        pdb = PartitionedDB(db=db,
+                            num_partitions=int(leaves["meta/num_partitions"]),
+                            dim=int(leaves["meta/dim"]))
+        return cls(pdb=pdb, cfg=cfg or hg.HNSWConfig())
+
+    def bruteforce(self, queries, k: int = 10):
+        """Exact search over the restructured DB (Fig. 9 baseline)."""
+        db = self.pdb.db
+        P, Np, Dp = db.vectors.shape
+        vecs = db.vectors.reshape(P * Np, Dp)
+        sq = db.sqnorms.reshape(P * Np)
+        queries = jnp.asarray(queries)
+        if queries.shape[-1] < Dp:       # lane-padding, as in batch_search
+            queries = jnp.pad(queries, ((0, 0), (0, Dp - queries.shape[-1])))
+        ids, dists = bruteforce_topk(vecs, sq, queries, k=k, chunk=Np)
+        gids = db.gids.reshape(P * Np)
+        return jnp.where(ids >= 0, gids[jnp.maximum(ids, 0)], -1), dists

@@ -1,0 +1,361 @@
+"""Host-side HNSW graph construction and the restructured device database.
+
+The construction path is a numpy re-implementation of hnswlib's insertion
+algorithm (Malkov & Yashunin, Algorithms 1-5): per-point level sampling,
+greedy descent through upper layers, ef_construction beam at the insertion
+level, and heuristic neighbor selection with reverse-link pruning.
+
+The *restructured database* follows the paper's Fig. 5: instead of hnswlib's
+compact variable-stride layout (which forces unaligned, multi-read accesses),
+we emit fixed-stride, padded structure-of-arrays tables:
+
+  - raw-data table   : vectors[N, D_pad]            (lane-aligned, D_pad % 128 == 0)
+  - layer-0 table    : l0_nbrs[N, maxM0_pad] int32  (-1 padded)
+  - upper list table : up_nbrs[L_max, U, maxM_pad]  (rows only for points with
+                       level >= 1; U is the padded count of such points)
+  - index table      : up_ptr[N] int32 (row into the upper tables, -1 if the
+                       point only exists at layer 0) + levels[N]
+
+A single index-table read per point yields everything needed to address its
+neighbor lists — the paper's "one access per point" property. Degrees are not
+stored separately: padding with -1 encodes list length (the paper stores an
+explicit size; a sentinel is the SoA equivalent and removes one fetch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import numpy as np
+
+__all__ = [
+    "HNSWConfig",
+    "HostGraph",
+    "DeviceDB",
+    "build_hnsw",
+    "restructure",
+    "db_size_bytes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HNSWConfig:
+    """Construction/search parameters (paper Table nomenclature).
+
+    maxM is the per-node list budget in upper layers; maxM0 = 2*maxM at
+    layer 0, both exactly as hnswlib / the paper set them.
+    """
+
+    M: int = 16
+    ef_construction: int = 100
+    max_level_cap: int = 8          # fixed upper bound so device shapes are static
+    seed: int = 0
+    # Device-layout padding knobs (the paper's 64B alignment analogue).
+    lane: int = 128                 # vector feature padding (TPU lane width)
+    nbr_pad: int = 8                # neighbor-list stride rounding
+
+    @property
+    def maxM(self) -> int:
+        return self.M
+
+    @property
+    def maxM0(self) -> int:
+        return 2 * self.M
+
+    @property
+    def ml(self) -> float:
+        return 1.0 / math.log(self.M)
+
+
+class HostGraph(NamedTuple):
+    """Mutable-free snapshot of a built HNSW graph (host representation)."""
+
+    vectors: np.ndarray          # [N, D] float32
+    levels: np.ndarray           # [N] int32, level of each point (0-based)
+    l0_nbrs: np.ndarray          # [N, maxM0] int32, -1 padded
+    up_nbrs: np.ndarray          # [L_max, N_up, maxM] int32 (-1 padded)
+    up_ptr: np.ndarray           # [N] int32 row into up_nbrs, -1 if level==0
+    entry: int                   # entry point id
+    max_level: int               # current top layer
+    cfg: HNSWConfig
+
+
+class DeviceDB(NamedTuple):
+    """Restructured, alignment-padded database (pytree of arrays).
+
+    This is the object that lives in HBM (the paper's DRAM-resident
+    per-partition database). All shapes are static given (N_pad, D_pad,
+    strides), so it can be stacked across partitions and sharded.
+    """
+
+    vectors: np.ndarray          # [N_pad, D_pad] float32 (rows >= n_valid are 0)
+    sqnorms: np.ndarray          # [N_pad] float32, ||x||^2 (pad rows = +inf)
+    l0_nbrs: np.ndarray          # [N_pad, maxM0_pad] int32, -1 padded
+    up_nbrs: np.ndarray          # [L_max, U_pad, maxM_pad] int32, -1 padded
+    up_ptr: np.ndarray           # [N_pad] int32 (-1 for level-0-only/pad rows)
+    levels: np.ndarray           # [N_pad] int32 (pad rows = -1)
+    gids: np.ndarray             # [N_pad] int32 global ids (pad rows = -1)
+    entry: np.ndarray            # [] int32
+    max_level: np.ndarray        # [] int32
+    n_valid: np.ndarray          # [] int32
+
+
+# ---------------------------------------------------------------------------
+# Construction (hnswlib-equivalent, numpy)
+# ---------------------------------------------------------------------------
+
+
+def _dist(vectors: np.ndarray, ids: np.ndarray, q: np.ndarray) -> np.ndarray:
+    """Squared L2 distance between q and vectors[ids] (batched)."""
+    diff = vectors[ids] - q[None, :]
+    return np.einsum("nd,nd->n", diff, diff)
+
+
+def _search_layer_host(
+    vectors: np.ndarray,
+    nbr_of,                      # callable(point_id) -> np.ndarray of neighbor ids
+    q: np.ndarray,
+    eps: list[int],
+    ef: int,
+) -> tuple[list[int], list[float]]:
+    """Algorithm 2 of the HNSW paper: beam search at one layer (host)."""
+    visited = set(eps)
+    ep_d = _dist(vectors, np.asarray(eps, dtype=np.int64), q)
+    # candidate min-heap and result max-heap emulated with sorted lists —
+    # sizes here are tiny (<= ef + maxM0), simplicity over asymptotics.
+    cand: list[tuple[float, int]] = sorted(zip(ep_d.tolist(), eps))
+    found: list[tuple[float, int]] = sorted(zip(ep_d.tolist(), eps))[:ef]
+    while cand:
+        d_c, c = cand.pop(0)
+        if found and d_c > found[-1][0] and len(found) >= ef:
+            break
+        nbrs = [int(e) for e in nbr_of(c) if e >= 0 and int(e) not in visited]
+        if not nbrs:
+            continue
+        visited.update(nbrs)
+        ds = _dist(vectors, np.asarray(nbrs, dtype=np.int64), q)
+        bound = found[-1][0] if len(found) >= ef else np.inf
+        for d_e, e in zip(ds.tolist(), nbrs):
+            if d_e < bound or len(found) < ef:
+                _insort(cand, (d_e, e))
+                _insort(found, (d_e, e))
+                if len(found) > ef:
+                    found.pop()
+                    bound = found[-1][0]
+    return [i for _, i in found], [d for d, _ in found]
+
+
+def _insort(lst: list[tuple[float, int]], item: tuple[float, int]) -> None:
+    lo, hi = 0, len(lst)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if lst[mid][0] < item[0]:
+            lo = mid + 1
+        else:
+            hi = mid
+    lst.insert(lo, item)
+
+
+def _select_heuristic(
+    vectors: np.ndarray, cand_ids: list[int], cand_ds: list[float], m: int
+) -> list[int]:
+    """Algorithm 4: heuristic neighbor selection (keeps diverse neighbors)."""
+    order = np.argsort(cand_ds)
+    selected: list[int] = []
+    for idx in order:
+        if len(selected) >= m:
+            break
+        e, d_e = cand_ids[idx], cand_ds[idx]
+        ok = True
+        for s in selected:
+            diff = vectors[e] - vectors[s]
+            if float(diff @ diff) < d_e:
+                ok = False
+                break
+        if ok:
+            selected.append(e)
+    # hnswlib keepPrunedConnections: fill remaining slots by distance order.
+    if len(selected) < m:
+        for idx in order:
+            e = cand_ids[idx]
+            if e not in selected:
+                selected.append(e)
+                if len(selected) >= m:
+                    break
+    return selected
+
+
+def build_hnsw(vectors: np.ndarray, cfg: HNSWConfig) -> HostGraph:
+    """Insert all points (Algorithm 1 of the HNSW paper), return the graph."""
+    vectors = np.ascontiguousarray(vectors, dtype=np.float32)
+    n, _ = vectors.shape
+    rng = np.random.default_rng(cfg.seed)
+    levels = np.minimum(
+        (-np.log(rng.uniform(1e-12, 1.0, size=n)) * cfg.ml).astype(np.int32),
+        cfg.max_level_cap - 1,
+    )
+    l0 = np.full((n, cfg.maxM0), -1, dtype=np.int32)
+    upper_ids = np.flatnonzero(levels >= 1)
+    up_ptr = np.full(n, -1, dtype=np.int32)
+    up_ptr[upper_ids] = np.arange(len(upper_ids), dtype=np.int32)
+    n_up = max(1, len(upper_ids))
+    up = np.full((cfg.max_level_cap - 1, n_up, cfg.maxM), -1, dtype=np.int32)
+
+    def nbrs_at(layer: int):
+        if layer == 0:
+            return lambda p: l0[p]
+        return lambda p: up[layer - 1, up_ptr[p]]
+
+    def set_nbrs(layer: int, p: int, ids: list[int]) -> None:
+        if layer == 0:
+            row, width = l0[p], cfg.maxM0
+        else:
+            row, width = up[layer - 1, up_ptr[p]], cfg.maxM
+        row[:] = -1
+        row[: min(len(ids), width)] = ids[:width]
+
+    entry, max_level = 0, int(levels[0])
+    for i in range(1, n):
+        lvl = int(levels[i])
+        q = vectors[i]
+        eps = [entry]
+        # 1) greedy descent from the top to lvl+1.
+        for layer in range(max_level, lvl, -1):
+            changed = True
+            cur_d = float(_dist(vectors, np.asarray(eps[:1]), q)[0])
+            cur = eps[0]
+            while changed:
+                changed = False
+                nb = [int(e) for e in nbrs_at(layer)(cur) if e >= 0]
+                if nb:
+                    ds = _dist(vectors, np.asarray(nb), q)
+                    j = int(np.argmin(ds))
+                    if float(ds[j]) < cur_d:
+                        cur, cur_d, changed = nb[j], float(ds[j]), True
+            eps = [cur]
+        # 2) beam insert from min(max_level, lvl) down to 0.
+        for layer in range(min(max_level, lvl), -1, -1):
+            width = cfg.maxM0 if layer == 0 else cfg.maxM
+            cand_ids, cand_ds = _search_layer_host(
+                vectors, nbrs_at(layer), q, eps, cfg.ef_construction
+            )
+            sel = _select_heuristic(vectors, cand_ids, cand_ds, cfg.M)
+            set_nbrs(layer, i, sel)
+            # reverse links with pruning (Algorithm 1 lines 10-17).
+            for e in sel:
+                row = nbrs_at(layer)(e)
+                cur = [int(x) for x in row if x >= 0]
+                if i not in cur:
+                    cur.append(i)
+                if len(cur) > width:
+                    ds = _dist(vectors, np.asarray(cur), vectors[e]).tolist()
+                    cur = _select_heuristic(vectors, cur, ds, width)
+                set_nbrs(layer, e, cur)
+            eps = cand_ids
+        if lvl > max_level:
+            entry, max_level = i, lvl
+    return HostGraph(vectors, levels, l0, up, up_ptr, entry, max_level, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Restructuring (paper Fig. 5) — host graph -> aligned device DB
+# ---------------------------------------------------------------------------
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _dedup_rows(table: np.ndarray) -> np.ndarray:
+    """Mask duplicate ids within each neighbor list to -1 (keep first).
+
+    The device search kernel's visited-bitmap update scatter-adds one
+    power-of-two bit per list entry; uniqueness within a row makes that
+    exactly bitwise-OR. Construction already produces unique lists — this is
+    the enforcement point for externally-loaded graphs.
+    """
+    flat = table.reshape(-1, table.shape[-1])
+    out = flat.copy()
+    srt = np.sort(flat, axis=1)
+    has_dup = (srt[:, 1:] == srt[:, :-1]) & (srt[:, 1:] >= 0)
+    for r in np.flatnonzero(has_dup.any(axis=1)):
+        seen: set[int] = set()
+        for j, v in enumerate(flat[r]):
+            if v < 0:
+                continue
+            if int(v) in seen:
+                out[r, j] = -1
+            else:
+                seen.add(int(v))
+    return out.reshape(table.shape)
+
+
+def restructure(
+    g: HostGraph,
+    gids: np.ndarray | None = None,
+    n_pad: int | None = None,
+    up_pad: int | None = None,
+) -> DeviceDB:
+    """Emit the aligned SoA tables. Padding makes shapes partition-uniform."""
+    cfg = g.cfg
+    n, d = g.vectors.shape
+    n_pad = n_pad or _round_up(n, 32)   # multiple of 32 -> whole bitmap words
+    d_pad = _round_up(d, cfg.lane)
+    m0p = _round_up(cfg.maxM0, cfg.nbr_pad)
+    mp = _round_up(cfg.maxM, cfg.nbr_pad)
+    n_up = g.up_nbrs.shape[1]
+    up_pad_n = up_pad or _round_up(max(n_up, 1), 8)
+
+    vec = np.zeros((n_pad, d_pad), dtype=np.float32)
+    vec[:n, :d] = g.vectors
+    sq = np.full((n_pad,), np.inf, dtype=np.float32)
+    sq[:n] = np.einsum("nd,nd->n", g.vectors, g.vectors)
+    l0 = np.full((n_pad, m0p), -1, dtype=np.int32)
+    l0[:n, : cfg.maxM0] = _dedup_rows(g.l0_nbrs)
+    up = np.full((cfg.max_level_cap - 1, up_pad_n, mp), -1, dtype=np.int32)
+    up[:, :n_up, : cfg.maxM] = _dedup_rows(g.up_nbrs)
+    ptr = np.full((n_pad,), -1, dtype=np.int32)
+    ptr[:n] = g.up_ptr
+    lv = np.full((n_pad,), -1, dtype=np.int32)
+    lv[:n] = g.levels
+    if gids is None:
+        gids = np.arange(n, dtype=np.int32)
+    gid = np.full((n_pad,), -1, dtype=np.int32)
+    gid[:n] = gids.astype(np.int32)
+    return DeviceDB(
+        vectors=vec,
+        sqnorms=sq,
+        l0_nbrs=l0,
+        up_nbrs=up,
+        up_ptr=ptr,
+        levels=lv,
+        gids=gid,
+        entry=np.asarray(g.entry, dtype=np.int32),
+        max_level=np.asarray(g.max_level, dtype=np.int32),
+        n_valid=np.asarray(n, dtype=np.int32),
+    )
+
+
+def db_size_bytes(db: DeviceDB) -> dict[str, int]:
+    """Table sizes — used to reproduce the paper's '+4% size' observation."""
+    out = {}
+    for name in ("vectors", "l0_nbrs", "up_nbrs", "up_ptr", "sqnorms"):
+        out[name] = getattr(db, name).nbytes
+    out["total"] = sum(out.values())
+    return out
+
+
+def original_size_bytes(g: HostGraph) -> int:
+    """Size of the hnswlib-style compact layout (paper §4.3 baseline):
+    layer0: per point [size:4B][maxM0 links][raw vector]; upper: variable."""
+    cfg = g.cfg
+    n, d = g.vectors.shape
+    l0 = n * (4 + 4 * cfg.maxM0 + 4 * d)
+    upper = 0
+    for i in range(n):
+        lvl = int(g.levels[i])
+        if lvl >= 1:
+            upper += 4 + lvl * (4 + 4 * cfg.maxM)
+    return l0 + upper

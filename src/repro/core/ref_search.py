@@ -1,0 +1,110 @@
+"""Pure-numpy oracle for the fixed-shape search kernel (tests compare exactly).
+
+This mirrors core/search.py operation-for-operation (same list sizes, same
+hop budgets, same tie-breaking: existing list entries win ties over the new
+batch, and the batch is stably sorted) so tests can assert bit-identical ids.
+It plays the role of the paper's HLS baseline: a readable, obviously-correct
+rendition of the modified algorithm.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hnsw_graph import DeviceDB
+from repro.core.search import SearchParams
+
+__all__ = ["ref_search_one", "ref_batch_search"]
+
+
+def _dists(db: DeviceDB, q: np.ndarray, qsq: float, ids: np.ndarray, valid: np.ndarray):
+    safe = np.where(valid, ids, 0)
+    d = db.sqnorms[safe] - 2.0 * (db.vectors[safe] @ q) + qsq
+    d = np.maximum(d, 0.0)
+    return np.where(valid, d, np.inf), safe
+
+
+def _merge(ad, ai, bd, bi, out):
+    """Stable merge with existing (a) winning ties — matches merge_sorted."""
+    d = np.concatenate([ad, bd])
+    i = np.concatenate([ai, bi])
+    order = np.argsort(d, kind="stable")
+    return d[order][:out], i[order][:out]
+
+
+def ref_search_one(db: DeviceDB, q: np.ndarray, p: SearchParams):
+    p = p.resolve(db.l0_nbrs.shape[1])
+    q = np.asarray(q, np.float32)
+    d_pad = db.vectors.shape[-1]
+    if q.shape[-1] < d_pad:
+        q = np.pad(q, (0, d_pad - q.shape[-1]))
+    qsq = float(q @ q)
+    n_layers = db.up_nbrs.shape[0]
+    max_level = int(db.max_level)
+
+    # --- upper layers: greedy descent --------------------------------------
+    cur = int(db.entry)
+    cur_d = float(db.sqnorms[cur] - 2.0 * (db.vectors[cur] @ q) + qsq)
+    calcs = 1
+    for layer in range(n_layers, 0, -1):
+        if layer > max_level:
+            continue
+        hops = 0
+        improved = True
+        while improved and hops < p.upper_hops:
+            row = int(db.up_ptr[cur])
+            nbrs = db.up_nbrs[layer - 1, max(row, 0)]
+            valid = (nbrs >= 0) & (row >= 0)
+            d, safe = _dists(db, q, qsq, nbrs, valid)
+            calcs += int(valid.sum())
+            j = int(np.argmin(d))
+            improved = bool(d[j] < cur_d)
+            if improved:
+                cur, cur_d = int(safe[j]), float(d[j])
+            hops += 1
+
+    # --- layer 0: beam ------------------------------------------------------
+    C, EF = p.cand_size, p.ef
+    n_pad = db.vectors.shape[0]
+    visited = np.zeros(n_pad, bool)
+    visited[cur] = True
+    cand_d = np.full(C, np.inf); cand_d[0] = cur_d
+    cand_i = np.full(C, -1, np.int64); cand_i[0] = cur
+    fin_d = np.full(EF, np.inf); fin_d[0] = cur_d
+    fin_i = np.full(EF, -1, np.int64); fin_i[0] = cur
+
+    hops = 0
+    while cand_d[0] < fin_d[-1] and hops < p.max_hops:
+        c = int(cand_i[0])
+        cand_d = np.roll(cand_d, -1); cand_d[-1] = np.inf
+        cand_i = np.roll(cand_i, -1); cand_i[-1] = -1
+
+        nbrs = db.l0_nbrs[c]
+        valid = nbrs >= 0
+        safe0 = np.where(valid, nbrs, 0)
+        active = valid & ~visited[safe0]
+        visited[safe0[active]] = True
+        d, safe = _dists(db, q, qsq, nbrs, active)
+        calcs += int(active.sum())
+        d = np.where(d < fin_d[-1], d, np.inf)
+        ids = np.where(np.isfinite(d), safe, -1)
+        order = np.argsort(d, kind="stable")
+        bd, bi = d[order], ids[order]
+
+        fin_d, fin_i = _merge(fin_d, fin_i, bd, bi, EF)
+        cand_d, cand_i = _merge(cand_d, cand_i, bd, bi, C)
+        hops += 1
+
+    k_i = fin_i[: p.k]
+    k_d = fin_d[: p.k]
+    k_g = np.where(k_i >= 0, db.gids[np.maximum(k_i, 0)], -1)
+    return k_g.astype(np.int32), k_d.astype(np.float32), hops, calcs
+
+
+def ref_batch_search(db: DeviceDB, queries: np.ndarray, p: SearchParams):
+    outs = [ref_search_one(db, q, p) for q in np.asarray(queries)]
+    ids = np.stack([o[0] for o in outs])
+    ds = np.stack([o[1] for o in outs])
+    hops = np.array([o[2] for o in outs], np.int32)
+    calcs = np.array([o[3] for o in outs], np.int32)
+    return ids, ds, hops, calcs

@@ -1,0 +1,257 @@
+"""Fixed-shape HNSW search kernel in JAX (paper Algorithm 1, HW-modified).
+
+This is the TPU analogue of the paper's RTL search kernel (§5.2). All of the
+paper's hardware modifications carry over:
+
+  * single-bit visited list       -> packed uint32 bitmap, N/8 bytes/query
+                                     (the paper's 0.62 MB for 5M points)
+  * parallel distance calculator  -> MXU-friendly ||q-x||^2 = ||x||^2 - 2 x.q + ||q||^2
+                                     over a whole (padded) neighbor list at once
+  * parallel insertion sort via   -> rank-based merge of two sorted arrays:
+    comparison bit-vector            pos = index + searchsorted(other)
+                                     (searchsorted == popcount of "smaller" bits)
+  * multi-query processing        -> vmap over the query batch; the masked
+                                     lockstep while_loop is the many-module
+                                     generalization of the paper's 2 modules
+  * fixed-size candidate list     -> the paper sets |C| "larger than ef";
+                                     we default to ef + maxM0
+
+Shapes are fully static: candidate/final lists are sorted arrays padded with
++inf, neighbor lists are -1-padded fixed-stride rows (the restructured DB of
+hnsw_graph.py), and the data-dependent traversal runs under
+``jax.lax.while_loop`` with an explicit hop budget (returned in the stats so
+benchmarks can report the paper's "number of vector reads", Fig. 9).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hnsw_graph import DeviceDB
+
+__all__ = [
+    "SearchParams",
+    "SearchStats",
+    "merge_sorted",
+    "visited_test_and_set",
+    "search_one",
+    "batch_search",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Search-time knobs (paper: ef=40, K=10 for all SIFT1B results)."""
+
+    ef: int = 40
+    k: int = 10
+    cand_size: int = 0        # 0 -> resolved to ef + maxM0
+    max_hops: int = 0         # 0 -> resolved to 4*ef + 16
+    upper_hops: int = 32      # per-layer greedy budget in upper layers
+
+    def resolve(self, maxM0: int) -> "SearchParams":
+        cand = self.cand_size or (self.ef + maxM0)
+        hops = self.max_hops or (4 * self.ef + 16)
+        return dataclasses.replace(self, cand_size=cand, max_hops=hops)
+
+
+class SearchStats(NamedTuple):
+    hops: jnp.ndarray         # candidate pops at layer 0 (per query)
+    dist_calcs: jnp.ndarray   # distance evaluations == "vector reads" (Fig. 9)
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def merge_sorted(ad, ai, bd, bi):
+    """Merge two ascending (dist, id) arrays; ties keep `a` first.
+
+    The paper's parallel insertion sort computes an insert position as the
+    popcount of a comparison bit-vector; ``searchsorted`` computes exactly
+    that rank, vectorized over every element of both lists at once.
+    """
+    na, nb = ad.shape[0], bd.shape[0]
+    pa = jnp.arange(na, dtype=jnp.int32) + jnp.searchsorted(
+        bd, ad, side="left"
+    ).astype(jnp.int32)
+    pb = jnp.arange(nb, dtype=jnp.int32) + jnp.searchsorted(
+        ad, bd, side="right"
+    ).astype(jnp.int32)
+    od = jnp.zeros(na + nb, ad.dtype).at[pa].set(ad).at[pb].set(bd)
+    oi = jnp.zeros(na + nb, ai.dtype).at[pa].set(ai).at[pb].set(bi)
+    return od, oi
+
+
+def visited_test_and_set(bitmap, ids, valid):
+    """Packed-bitmap visited list (paper §5.1.1 / §5.2.6).
+
+    Returns (was_visited[bool], new_bitmap). `ids` must be unique where
+    `valid` (guaranteed by the restructured DB's de-duplicated rows), so the
+    scatter-add of distinct power-of-two bits within a word equals bitwise OR.
+    """
+    w = jax.lax.shift_right_logical(ids, 5)
+    b = (ids & 31).astype(jnp.uint32)
+    bit = jax.lax.shift_left(jnp.uint32(1), b)
+    old = bitmap[w]
+    was = (jax.lax.shift_right_logical(old, b) & jnp.uint32(1)) > 0
+    was = was | ~valid
+    add = jnp.where(~was, bit, jnp.uint32(0))
+    return was, bitmap.at[w].add(add)
+
+
+def _batch_distances(db: DeviceDB, q, qsq, ids, valid):
+    """Distances from q to db.vectors[ids]; invalid lanes -> +inf.
+
+    One fused gather + matvec: the whole (padded) neighbor list is evaluated
+    at once — the analogue of the paper's 8x16-PE distance array consuming a
+    full 128-dim vector per cycle.
+    """
+    safe = jnp.where(valid, ids, 0)
+    vecs = db.vectors[safe]                      # [M, D_pad]
+    d = db.sqnorms[safe] - 2.0 * (vecs @ q) + qsq
+    d = jnp.maximum(d, 0.0)
+    return jnp.where(valid, d, jnp.inf), safe
+
+
+# ---------------------------------------------------------------------------
+# Upper layers: greedy descent (ef = 1), paper §5.2.2
+# ---------------------------------------------------------------------------
+
+
+def _greedy_upper(db: DeviceDB, q, qsq, p: SearchParams):
+    """Descend from db.max_level to layer 1, returning the layer-0 entry."""
+    ep = db.entry.astype(jnp.int32)
+    ep_vec = db.vectors[ep]
+    ep_d = db.sqnorms[ep] - 2.0 * (ep_vec @ q) + qsq
+    n_layers = db.up_nbrs.shape[0]               # static cap - 1
+
+    def layer_body(i, carry):
+        cur, cur_d, calcs = carry
+        layer = n_layers - i                      # n_layers .. 1
+        active_layer = layer <= db.max_level
+
+        def hop_cond(s):
+            _, _, improved, hops, _ = s
+            return improved & (hops < p.upper_hops)
+
+        def hop_body(s):
+            c, c_d, _, hops, calcs = s
+            row = db.up_ptr[c]
+            nbrs = db.up_nbrs[layer - 1, jnp.maximum(row, 0)]
+            valid = (nbrs >= 0) & (row >= 0)
+            d, safe = _batch_distances(db, q, qsq, nbrs, valid)
+            j = jnp.argmin(d)
+            best_d, best = d[j], safe[j]
+            improved = best_d < c_d
+            c = jnp.where(improved, best, c)
+            c_d = jnp.where(improved, best_d, c_d)
+            return c, c_d, improved, hops + 1, calcs + jnp.sum(valid)
+
+        cur2, cur_d2, _, _, calcs2 = jax.lax.while_loop(
+            hop_cond,
+            hop_body,
+            (cur, cur_d, jnp.bool_(True), jnp.int32(0), calcs),
+        )
+        cur = jnp.where(active_layer, cur2, cur)
+        cur_d = jnp.where(active_layer, cur_d2, cur_d)
+        calcs = jnp.where(active_layer, calcs2, calcs)
+        return cur, cur_d, calcs
+
+    cur, cur_d, calcs = jax.lax.fori_loop(
+        0, n_layers, layer_body, (ep, ep_d, jnp.int32(1))
+    )
+    return cur, cur_d, calcs
+
+
+# ---------------------------------------------------------------------------
+# Layer 0: beam search with candidate/final lists (paper §5.2.3)
+# ---------------------------------------------------------------------------
+
+
+def _search_layer0(db: DeviceDB, q, qsq, ep, ep_d, p: SearchParams):
+    n_words = db.vectors.shape[0] // 32
+    C, EF = p.cand_size, p.ef
+
+    visited = jnp.zeros((n_words,), jnp.uint32)
+    _, visited = visited_test_and_set(
+        visited, ep[None], jnp.ones((1,), jnp.bool_)
+    )
+    cand_d = jnp.full((C,), jnp.inf).at[0].set(ep_d)
+    cand_i = jnp.full((C,), -1, jnp.int32).at[0].set(ep)
+    fin_d = jnp.full((EF,), jnp.inf).at[0].set(ep_d)
+    fin_i = jnp.full((EF,), -1, jnp.int32).at[0].set(ep)
+
+    def cond(s):
+        cand_d, _, fin_d, _, _, hops, _ = s
+        # Algorithm 1 lines 2&5: candidates remain AND the nearest candidate
+        # can still improve the final list. inf < inf is False, so an empty
+        # candidate list terminates naturally.
+        return (cand_d[0] < fin_d[-1]) & (hops < p.max_hops)
+
+    def body(s):
+        cand_d, cand_i, fin_d, fin_i, visited, hops, calcs = s
+        c = cand_i[0]
+        # pop: shift the sorted array left (line 3).
+        cand_d = jnp.roll(cand_d, -1).at[-1].set(jnp.inf)
+        cand_i = jnp.roll(cand_i, -1).at[-1].set(-1)
+
+        nbrs = db.l0_nbrs[c]                       # [maxM0_pad]
+        valid = nbrs >= 0
+        was, visited = visited_test_and_set(visited, jnp.where(valid, nbrs, 0), valid)
+        active = valid & ~was
+        d, safe = _batch_distances(db, q, qsq, nbrs, active)
+        calcs = calcs + jnp.sum(active)
+        # line 11 guard: only candidates that can enter the final list.
+        d = jnp.where(d < fin_d[-1], d, jnp.inf)
+        ids = jnp.where(jnp.isfinite(d), safe, -1)
+        order = jnp.argsort(d, stable=True)
+        bd, bi = d[order], ids[order]
+
+        fd, fi = merge_sorted(fin_d, fin_i, bd, bi)
+        fin_d, fin_i = fd[:EF], fi[:EF]
+        cd, ci = merge_sorted(cand_d, cand_i, bd, bi)
+        cand_d, cand_i = cd[:C], ci[:C]
+        return cand_d, cand_i, fin_d, fin_i, visited, hops + 1, calcs
+
+    cand_d, cand_i, fin_d, fin_i, visited, hops, calcs = jax.lax.while_loop(
+        cond,
+        body,
+        (cand_d, cand_i, fin_d, fin_i, visited, jnp.int32(0), jnp.int32(0)),
+    )
+    return fin_d, fin_i, hops, calcs
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+def search_one(db: DeviceDB, q, p: SearchParams):
+    """Full multi-layer search for one query. Returns (ids[k], dists[k], stats).
+
+    Returned ids are *global* ids (db.gids applied); -1 marks empty slots.
+    """
+    q = q.astype(jnp.float32)
+    qsq = q @ q
+    ep, ep_d, up_calcs = _greedy_upper(db, q, qsq, p)
+    fin_d, fin_i, hops, calcs = _search_layer0(db, q, qsq, ep, ep_d, p)
+    k_d, k_i = fin_d[: p.k], fin_i[: p.k]
+    k_g = jnp.where(k_i >= 0, db.gids[jnp.maximum(k_i, 0)], -1)
+    return k_g, k_d, SearchStats(hops, calcs + up_calcs)
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def batch_search(db: DeviceDB, queries, p: SearchParams):
+    """Multi-query search (paper §5.1.3): lockstep-masked vmap."""
+    p = p.resolve(db.l0_nbrs.shape[1])
+    d_pad = db.vectors.shape[-1]
+    if queries.shape[-1] < d_pad:  # zero-pad to the lane-aligned raw-data table
+        queries = jnp.pad(queries, ((0, 0), (0, d_pad - queries.shape[-1])))
+    return jax.vmap(lambda q: search_one(db, q, p))(queries)

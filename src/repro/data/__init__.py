@@ -1,0 +1,6 @@
+from repro.data.pipeline import (
+    TokenDataset, VectorDataset, make_batch, sift_like_vectors, clustered_vectors,
+)
+
+__all__ = ["TokenDataset", "VectorDataset", "make_batch",
+           "sift_like_vectors", "clustered_vectors"]

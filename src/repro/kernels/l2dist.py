@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: blocked pairwise squared-L2 distance.
+
+TPU adaptation of the paper's distance calculator (§5.2.5): the FPGA uses
+8 units x 16 PEs + adder trees to consume one 128-dim vector pair per cycle;
+the MXU-native formulation is
+
+    D2[i, j] = ||q_i||^2 + ||x_j||^2 - 2 * Q @ X^T
+
+i.e. one 128x128 systolic matmul per (block_q x block_x x block_d) tile with
+the norm terms added on the first K-step. Blocks are sized so a
+(block_q x block_d) query tile, a (block_x x block_d) database tile and the
+f32 accumulator tile all fit VMEM, and every matmul dim is a multiple of the
+128-lane / 8-sublane hardware tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["l2dist_pallas"]
+
+
+def _kernel(qsq_ref, xsq_ref, q_ref, x_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = qsq_ref[...][:, None] + xsq_ref[...][None, :]
+
+    q = q_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] += -2.0 * jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_x", "block_d", "interpret")
+)
+def l2dist_pallas(
+    queries,          # [Bq, D]
+    xs,               # [Bx, D]
+    qsq=None,         # [Bq] optional precomputed ||q||^2
+    xsq=None,         # [Bx] optional precomputed ||x||^2 (+inf marks padding)
+    *,
+    block_q: int = 128,
+    block_x: int = 512,
+    block_d: int = 128,
+    interpret: bool = True,
+):
+    """Returns D2[Bq, Bx] float32. Dims must divide by the block sizes
+    (ops.l2dist pads arbitrary shapes before calling this)."""
+    bq, d = queries.shape
+    bx, _ = xs.shape
+    assert bq % block_q == 0 and bx % block_x == 0 and d % block_d == 0
+    if qsq is None:
+        qsq = jnp.einsum("bd,bd->b", queries.astype(jnp.float32), queries.astype(jnp.float32))
+    if xsq is None:
+        xsq = jnp.einsum("bd,bd->b", xs.astype(jnp.float32), xs.astype(jnp.float32))
+    grid = (bq // block_q, bx // block_x, d // block_d)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda i, j, k: (i,)),
+            pl.BlockSpec((block_x,), lambda i, j, k: (j,)),
+            pl.BlockSpec((block_q, block_d), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_x, block_d), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_x), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bq, bx), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(qsq, xsq, queries, xs)

@@ -1,0 +1,105 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handles arbitrary (unaligned) shapes by padding to block multiples — the
+software analogue of the paper's database restructuring: callers never pay
+for unaligned accesses because alignment is established once at the edge.
+
+`interpret` defaults to True off-TPU (this container is CPU-only; interpret
+mode executes the kernel bodies exactly, so correctness tests are real),
+and to False on TPU where the Mosaic lowering runs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.l2dist import l2dist_pallas
+from repro.kernels.l2topk import l2topk_pallas
+from repro.kernels.attention import flash_attention_pallas
+from repro.kernels.topk import topk_pallas
+
+__all__ = ["l2dist", "topk", "l2topk", "flash_attention", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad_rows(a, to_rows, fill=0.0):
+    pad = to_rows - a.shape[0]
+    if pad == 0:
+        return a
+    return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1), constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_x", "interpret"))
+def l2dist(queries, xs, *, block_q=128, block_x=512, interpret=None):
+    """Pairwise squared-L2 for arbitrary shapes; returns [Bq, Bx] f32."""
+    interpret = default_interpret() if interpret is None else interpret
+    bq, d = queries.shape
+    bx, _ = xs.shape
+    bq_p, bx_p = _round_up(bq, block_q), _round_up(bx, block_x)
+    d_p = _round_up(d, 128)
+    q = jnp.pad(queries, ((0, bq_p - bq), (0, d_p - d)))
+    x = jnp.pad(xs, ((0, bx_p - bx), (0, d_p - d)))
+    out = l2dist_pallas(
+        q, x, block_q=block_q, block_x=block_x, block_d=min(d_p, 512),
+        interpret=interpret,
+    )
+    return out[:bq, :bx]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_b", "block_x", "interpret"))
+def topk(x, k: int, *, block_b=8, block_x=1024, interpret=None):
+    """Per-row k smallest of x [B, N] -> (values, ids) ascending."""
+    interpret = default_interpret() if interpret is None else interpret
+    b, n = x.shape
+    b_p, n_p = _round_up(b, block_b), _round_up(n, block_x)
+    xp = jnp.pad(x, ((0, b_p - b), (0, n_p - n)), constant_values=jnp.inf)
+    v, i = topk_pallas(xp, k, block_b=block_b, block_x=block_x, interpret=interpret)
+    return v[:b], i[:b]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_x", "interpret"))
+def l2topk(queries, xs, xsq=None, *, k=10, block_q=128, block_x=1024, interpret=None):
+    """Fused exact k-NN: (dists [Bq, k], ids [Bq, k]); xs padding gets +inf."""
+    interpret = default_interpret() if interpret is None else interpret
+    bq, d = queries.shape
+    bx, _ = xs.shape
+    bq_p, bx_p = _round_up(bq, block_q), _round_up(bx, block_x)
+    d_p = _round_up(d, 128)
+    q = jnp.pad(queries, ((0, bq_p - bq), (0, d_p - d)))
+    x = jnp.pad(xs, ((0, bx_p - bx), (0, d_p - d)))
+    if xsq is None:
+        xf = xs.astype(jnp.float32)
+        xsq = jnp.einsum("bd,bd->b", xf, xf)
+    xsq = jnp.pad(xsq, (0, bx_p - bx), constant_values=jnp.inf)
+    v, i = l2topk_pallas(
+        q, x, xsq=xsq, k=k, block_q=block_q, block_x=block_x, interpret=interpret
+    )
+    return v[:bq], i[:bq]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, block_q=256, block_k=256,
+                    interpret=None):
+    """Causal flash attention for arbitrary [BH, T, hd]; pads T/S to blocks."""
+    interpret = default_interpret() if interpret is None else interpret
+    bh, t, hd = q.shape
+    s = k.shape[1]
+    bq, bk = min(block_q, max(t, 8)), min(block_k, max(s, 8))
+    t_p, s_p = _round_up(t, bq), _round_up(s, bk)
+    qp = jnp.pad(q, ((0, 0), (0, t_p - t), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, s_p - s), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, s_p - s), (0, 0)))
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, block_q=bq,
+                                 block_k=bk, interpret=interpret, s_valid=s)
+    return out[:, :t]

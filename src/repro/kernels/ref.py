@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+__all__ = ["l2dist_ref", "topk_ref", "l2topk_ref"]
+
+
+def l2dist_ref(queries, xs, qsq=None, xsq=None):
+    """D2[i, j] = ||q_i - x_j||^2 (squared L2, f32 accumulate)."""
+    q = queries.astype(jnp.float32)
+    x = xs.astype(jnp.float32)
+    if qsq is None:
+        qsq = jnp.einsum("bd,bd->b", q, q)
+    if xsq is None:
+        xsq = jnp.einsum("bd,bd->b", x, x)
+    return qsq[:, None] + xsq[None, :] - 2.0 * (q @ x.T)
+
+
+def topk_ref(x, k: int):
+    """Per-row k smallest (ascending) values and their column ids."""
+    v, i = jax.lax.top_k(-x.astype(jnp.float32), k)
+    return -v, i.astype(jnp.int32)
+
+
+def l2topk_ref(queries, xs, qsq=None, xsq=None, *, k: int = 10):
+    d2 = jnp.maximum(l2dist_ref(queries, xs, qsq, xsq), 0.0)
+    return topk_ref(d2, k)
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """Naive softmax attention oracle. q/k/v: [BH, T|S, hd]."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bth,bsh->bts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        t, S = s.shape[1], s.shape[2]
+        row = jnp.arange(t)[:, None]
+        col = jnp.arange(S)[None, :]
+        s = jnp.where(col <= row, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsh->bth", p, v.astype(jnp.float32)).astype(q.dtype)

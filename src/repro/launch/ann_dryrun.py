@@ -1,0 +1,99 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512").strip()
+
+"""SIFT1B-scale dry-run of the paper's engine itself on the production mesh.
+
+The paper's deployment: 1B x 128-dim vectors split into DRAM-sized
+sub-graphs, graph parallelism across devices. Here: 256 partitions of
+~3.9M vectors (cf. the paper's ~5M per SmartSSD), one per chip on the
+single-pod mesh; queries shard over `data` (and `pod`). This lowers and
+compiles the full two-stage distributed search (stage-1 beam + all-gather +
+rank-merge) from ShapeDtypeStructs — no allocation — and reports the memory
+and collective footprint.
+
+  PYTHONPATH=src python -m repro.launch.ann_dryrun [--multi-pod]
+"""
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.distributed import make_distributed_search
+from repro.core.hnsw_graph import DeviceDB
+from repro.core.search import SearchParams
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import HW, collective_bytes
+
+
+def sift1b_db_specs(mesh, n_total=1_000_000_000, dim=128, M=16, levels=7):
+    """ShapeDtypeStruct stand-ins for the restructured SIFT1B database."""
+    P_parts = 256
+    n_pad = -(-(n_total // P_parts) // 32) * 32
+    d_pad = 128 * -(-dim // 128)
+    m0p, mp = 2 * M, M
+    up_rows = -(-n_pad // 16) * 2        # ~1/(M-1) of points have level>=1
+    sh = lambda spec: NamedSharding(mesh, spec)
+    f = jax.ShapeDtypeStruct
+    m = P(("data", "model"))   # one partition per chip within a pod
+    return DeviceDB(
+        vectors=f((P_parts, n_pad, d_pad), jnp.float32, sharding=sh(m)),
+        sqnorms=f((P_parts, n_pad), jnp.float32, sharding=sh(m)),
+        l0_nbrs=f((P_parts, n_pad, m0p), jnp.int32, sharding=sh(m)),
+        up_nbrs=f((P_parts, levels, up_rows, mp), jnp.int32, sharding=sh(m)),
+        up_ptr=f((P_parts, n_pad), jnp.int32, sharding=sh(m)),
+        levels=f((P_parts, n_pad), jnp.int32, sharding=sh(m)),
+        gids=f((P_parts, n_pad), jnp.int32, sharding=sh(m)),
+        entry=f((P_parts,), jnp.int32, sharding=sh(m)),
+        max_level=f((P_parts,), jnp.int32, sharding=sh(m)),
+        n_valid=f((P_parts,), jnp.int32, sharding=sh(m)),
+    ), n_pad, d_pad, m0p
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--batch", type=int, default=4096)
+    args = ap.parse_args()
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    db, n_pad, d_pad, m0p = sift1b_db_specs(mesh)
+    p = SearchParams(ef=40, k=10)                 # the paper's SIFT1B point
+    qaxes = ("pod",) if args.multi_pod else ()
+    search = make_distributed_search(mesh, p, m0p,
+                                     graph_axes=("data", "model"),
+                                     query_axes=qaxes)
+    q = jax.ShapeDtypeStruct((args.batch, d_pad), jnp.float32,
+                             sharding=NamedSharding(
+                                 mesh, P(qaxes if qaxes else None, None)))
+    with jax.set_mesh(mesh):
+        lowered = search.lower(db, q)
+        compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    resident = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    coll = collective_bytes(compiled.as_text())
+    hw = HW()
+    # memory-bound engine roofline: per-query HBM traffic per hop-budget.
+    reads_per_query = 4 * p.ef + 16                # hop budget (worst case)
+    bytes_per_query = reads_per_query * m0p * (d_pad * 4 + 4)
+    qps_chip = hw.hbm_bw / bytes_per_query
+    rec = {
+        "mesh": "multi" if args.multi_pod else "single",
+        "devices": int(mesh.devices.size),
+        "partitions": 256,
+        "vectors_per_partition": n_pad,
+        "db_bytes_per_device": int(resident - ma.temp_size_in_bytes),
+        "resident_bytes": int(resident),
+        "fits_hbm": bool(resident < hw.hbm_bytes),
+        "collectives": {k: float(v) for k, v in coll.items()},
+        "modeled_worstcase_qps_per_chip": round(qps_chip, 1),
+        "note": ("stage-2 merge traffic per query = P*k*(4+4)B across "
+                 "`model` — negligible vs stage-1 HBM reads (paper: 0.2%)"),
+    }
+    print(json.dumps(rec, indent=2))
+
+
+if __name__ == "__main__":
+    main()

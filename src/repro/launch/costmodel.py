@@ -1,0 +1,292 @@
+"""Loop-aware analytic FLOPs/bytes/collective model per (arch x shape) cell.
+
+Why this exists: XLA's `cost_analysis()` counts a `while` body ONCE, not
+times its trip count (verified experimentally — a scan of 8 matmuls reports
+1/8 of the unrolled FLOPs). Every model here runs under scan-over-periods
+plus inner scans (flash-attention KV blocks, SSM time steps, loss chunks),
+so compiled-artifact totals undercount by 1-2 orders of magnitude.
+
+This module enumerates the einsums the model code actually performs (it is
+the same source tree — drift is caught by the calibration test, which
+compares this model against XLA cost_analysis on a small config compiled
+with UNROLLED periods: tests/test_costmodel.py, agreement within ~10%).
+
+Conventions:
+  * 1 MAC = 2 FLOPs; train multiplies forward FLOPs by 4
+    (fwd + 2x bwd + 1x remat recompute), inference by 1.
+  * bytes = HBM traffic per device per step (params read + opt state r/w +
+    carry/cache r/w + dominant activation traffic).
+  * collectives = bytes crossing links per device per step given the
+    baseline sharding of launch/sharding.py (FSDP gathers, grad
+    reduce-scatters, SP gathers, MoE all-to-all, vocab psum).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.transformer import LayerSpec, ModelConfig
+
+__all__ = ["cell_costs"]
+
+
+def _attn_flops_tok(cfg, t_kv):
+    """Per-token attention flops against t_kv keys (projections + scores)."""
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    proj = 2 * d * hd * (2 * H + 2 * KV)          # q,o: H; k,v: KV
+    sdpa = 2 * 2 * t_kv * H * hd                  # scores + AV
+    return proj + sdpa
+
+
+def _mla_flops_tok(cfg, t_kv, decode: bool):
+    d, H = cfg.d_model, cfg.n_heads
+    m = cfg.mla
+    qd = m.qk_nope + m.qk_rope
+    f = 2 * d * H * qd + 2 * d * (m.kv_lora + m.qk_rope)       # wq + w_dkv
+    if decode:  # absorbed: q_eff [H,lora], scores vs c, out via w_uv
+        f += 2 * H * m.qk_nope * m.kv_lora                      # absorb per tok
+        f += 2 * t_kv * H * (m.kv_lora + m.qk_rope)             # scores
+        f += 2 * t_kv * H * m.kv_lora                           # AV over c
+        f += 2 * H * m.kv_lora * m.v_dim                        # up-proj out
+    else:
+        f += 2 * m.kv_lora * H * (m.qk_nope + m.v_dim)          # k/v up-proj
+        f += 2 * 2 * t_kv * H * qd                              # scores + AV
+    f += 2 * H * m.v_dim * d                                    # wo
+    return f
+
+
+def _ffn_flops_tok(cfg, spec: LayerSpec):
+    d = cfg.d_model
+    if spec.ffn == "glu":
+        return 2 * 3 * d * cfg.d_ff
+    if spec.ffn == "dense":
+        return 2 * 2 * d * cfg.d_ff
+    if spec.ffn == "moe":
+        mc = cfg.moe
+        f = 2 * d * mc.num_experts                               # router
+        f += mc.top_k * 2 * 3 * d * mc.d_ff * mc.capacity_factor
+        if mc.n_shared:
+            f += 2 * 3 * d * mc.shared_ff()
+        return f
+    return 0
+
+
+def _mamba_flops_tok(cfg):
+    d = cfg.d_model
+    mc = cfg.mamba
+    di, r, S = mc.inner(d), mc.rank(d), mc.d_state
+    f = 2 * d * 2 * di + 2 * mc.d_conv * di                      # in_proj+conv
+    f += 2 * di * (r + 2 * S) + 2 * r * di                       # x_proj + dt
+    f += 8 * di * S                                              # scan step
+    f += 2 * di * d + 3 * di                                     # out + gate
+    return f
+
+
+def _mlstm_flops_tok(cfg):
+    d = cfg.d_model
+    xc = cfg.xlstm
+    di = int(xc.m_proj_factor * d)
+    dh = di // xc.n_heads
+    f = 2 * d * 2 * di + 2 * xc.d_conv * di
+    f += 3 * 2 * di * di                                         # q,k,v
+    f += 6 * di * dh                                             # cell update
+    f += 2 * di * d + 4 * di
+    return f
+
+
+def _slstm_flops_tok(cfg):
+    d = cfg.d_model
+    xc = cfg.xlstm
+    dh = d // xc.n_heads
+    f = 2 * d * 4 * d + 2 * 4 * d * dh                           # gates + rec
+    f += 2 * 3 * d * int(xc.s_ffn_factor * d)                    # block ffn
+    return f + 10 * d
+
+
+def _layer_flops_tok(cfg, spec: LayerSpec, t_kv, decode):
+    if spec.kind == "attn":
+        eff = min(t_kv, spec.window) if spec.window else t_kv
+        f = _attn_flops_tok(cfg, eff)
+    elif spec.kind == "mla":
+        f = _mla_flops_tok(cfg, t_kv, decode)
+    elif spec.kind == "mamba":
+        f = _mamba_flops_tok(cfg)
+    elif spec.kind == "mlstm":
+        f = _mlstm_flops_tok(cfg)
+    else:
+        f = _slstm_flops_tok(cfg)
+    return f + _ffn_flops_tok(cfg, spec)
+
+
+def _head_flops_tok(cfg):
+    return 2 * cfg.d_model * cfg.num_output_heads * cfg.padded_vocab + \
+        5 * cfg.num_output_heads * cfg.padded_vocab                # softmax/lse
+
+
+@dataclasses.dataclass
+class CellCost:
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    flops_total: float
+    detail: dict
+
+
+def cell_costs(cfg: ModelConfig, kind: str, seq: int, batch: int,
+               n_devices: int = 256, model_ax: int = 16, dp_ax: int = 16,
+               fsdp: bool = True, state_mode: str = "fsdp") -> CellCost:
+    """Analytic per-device roofline inputs for one cell."""
+    decode = kind == "decode"
+    tokens = batch * (1 if decode else seq)
+    specs = cfg.all_specs()
+
+    # ---- FLOPs ------------------------------------------------------------
+    # t_kv = seq (NOT seq/2): the blockwise attention computes every KV block
+    # and masks — executed flops are full T^2. The causal-average "useful"
+    # count is what MODEL_FLOPS captures; the gap is a hillclimb target
+    # (masked-block skipping, EXPERIMENTS.md §Perf).
+    f_tok = 0.0
+    for s in specs:
+        t_kv = seq
+        if (not decode and s.kind in ("attn", "mla")
+                and getattr(cfg, "skip_masked_blocks", False)):
+            t_kv = seq / 2          # causal block skipping executes ~T^2/2
+        f_tok += _layer_flops_tok(cfg, s, t_kv, decode)
+    fwd = f_tok * tokens
+    # head/logit flops: every position in train (loss), ONLY the last
+    # position per sequence in prefill, the single new token in decode.
+    head_positions = batch if kind == "prefill" else tokens
+    fwd += _head_flops_tok(cfg) * head_positions
+    mult = 4.0 if kind == "train" else 1.0
+    flops_total = fwd * mult
+    flops_per_dev = flops_total / n_devices
+
+    # ---- params / state bytes ----------------------------------------------
+    p_bytes = 2.0  # bf16
+    n_params = _count_params(cfg)
+    if kind == "train":
+        # fwd+bwd weight reads (all-gathered once each under FSDP) + grad
+        # reduce + AdamW m/v/param r/w in f32.
+        w_traffic = 3 * n_params * p_bytes / model_ax
+        opt_traffic = n_params * (6 * 4.0) / n_devices
+        act_traffic = _act_bytes(cfg, tokens, seq, kind) / n_devices
+        bytes_per_dev = w_traffic / dp_ax + opt_traffic + act_traffic \
+            + 2 * n_params * p_bytes / n_devices
+    else:
+        shard = n_devices if fsdp else model_ax
+        w_read = n_params * p_bytes / shard
+        cache_rw = _cache_bytes(cfg, batch, seq) / n_devices * (2 if decode else 1)
+        act_traffic = _act_bytes(cfg, tokens, seq, kind) / n_devices
+        bytes_per_dev = w_read + cache_rw + act_traffic
+
+    # ---- collectives --------------------------------------------------------
+    coll = 0.0
+    if kind == "train":
+        if state_mode == "zero1":
+            # one grad all-reduce (f32, ring 2x) + post-update param bcast.
+            coll += 2 * n_params * 4.0 / model_ax
+            coll += n_params * p_bytes / model_ax
+        elif fsdp:
+            coll += 2 * 2 * n_params * p_bytes / model_ax      # AG fwd+bwd(remat)
+            coll += 2 * n_params * 4.0 / model_ax              # grad RS (f32)
+        # SP all-gathers: per layer, x gathered from T/model shards (fwd+bwd).
+        coll += len(specs) * 3 * tokens * cfg.d_model * p_bytes / n_devices * 2
+        # vocab-parallel loss psum (logsumexp partials, f32).
+        coll += 2 * tokens * 4.0 * 4 / n_devices
+    else:
+        if fsdp:
+            coll += 2 * n_params * p_bytes / model_ax          # AG weights
+        # TP activation reductions: ~2 all-reduce of [tokens, d] per layer.
+        coll += len(specs) * 2 * 2 * tokens * cfg.d_model * p_bytes / n_devices
+    moe_layers = sum(1 for s in specs if s.ffn == "moe")
+    if moe_layers:
+        mc = cfg.moe
+        coll += moe_layers * 2 * tokens * mc.top_k * cfg.d_model * p_bytes \
+            / n_devices * (2 if kind == "train" else 1)        # a2a disp+comb
+    coll_per_dev = coll
+
+    detail = {"fwd_flops_tok": f_tok, "n_params": n_params, "tokens": tokens}
+    return CellCost(flops_per_dev, bytes_per_dev, coll_per_dev,
+                    flops_total, detail)
+
+
+def _count_params(cfg: ModelConfig) -> float:
+    """Total param count (matches init_params; calibrated in tests)."""
+    d = cfg.d_model
+    n = 0.0
+    if cfg.embed_inputs:
+        n += cfg.padded_vocab * d
+    for s in cfg.all_specs():
+        n += d  # ln1
+        if s.kind == "attn":
+            n += d * cfg.head_dim * (2 * cfg.n_heads + 2 * cfg.n_kv_heads)
+            if cfg.qk_norm:
+                n += 2 * cfg.head_dim
+        elif s.kind == "mla":
+            m = cfg.mla
+            n += d * cfg.n_heads * (m.qk_nope + m.qk_rope)
+            n += d * (m.kv_lora + m.qk_rope) + m.kv_lora
+            n += m.kv_lora * cfg.n_heads * (m.qk_nope + m.v_dim)
+            n += cfg.n_heads * m.v_dim * d
+        elif s.kind == "mamba":
+            mc = cfg.mamba
+            di, r, S = mc.inner(d), mc.rank(d), mc.d_state
+            n += d * 2 * di + mc.d_conv * di + di
+            n += di * (r + 2 * S) + r * di + di + di * S + di + di * d
+        elif s.kind == "mlstm":
+            xc = cfg.xlstm
+            di = int(xc.m_proj_factor * d)
+            n += d * 2 * di + xc.d_conv * di + di
+            n += 3 * di * di + 2 * di * xc.n_heads + 3 * di + di * d
+        elif s.kind == "slstm":
+            xc = cfg.xlstm
+            dh = d // xc.n_heads
+            ff = int(xc.s_ffn_factor * d)
+            n += d * 4 * d + 4 * d * dh + 4 * d + d
+            n += d * 2 * ff + ff * d
+        if s.ffn == "glu":
+            n += d + 3 * d * cfg.d_ff
+        elif s.ffn == "dense":
+            n += d + 2 * d * cfg.d_ff
+        elif s.ffn == "moe":
+            mc = cfg.moe
+            n += d + d * mc.num_experts
+            n += mc.num_experts * 3 * d * mc.d_ff
+            if mc.n_shared:
+                n += 3 * d * mc.shared_ff()
+    n += d
+    if not (cfg.tie_embeddings and cfg.embed_inputs):
+        n += d * cfg.num_output_heads * cfg.padded_vocab
+    return n
+
+
+def _act_bytes(cfg: ModelConfig, tokens, seq, kind) -> float:
+    """Dominant activation HBM traffic (global): layer inputs written+read,
+    x2 for train (bwd reads the remat carry again)."""
+    per_layer = tokens * cfg.d_model * 2.0
+    mult = {"train": 4.0, "prefill": 2.0, "decode": 2.0}[kind]
+    return cfg.num_layers * per_layer * mult
+
+
+def _cache_bytes(cfg: ModelConfig, batch, seq) -> float:
+    """Global KV/recurrent cache size in bytes (bf16 KV, f32 states)."""
+    total = 0.0
+    for s in cfg.all_specs():
+        if s.kind == "attn":
+            S = min(seq, s.window) if s.window else seq
+            kv_b = 1.06 if getattr(cfg, "kv_quant", False) else 2.0
+            total += 2 * batch * S * cfg.n_kv_heads * cfg.head_dim * kv_b
+        elif s.kind == "mla":
+            total += batch * seq * (cfg.mla.kv_lora + cfg.mla.qk_rope) * 2.0
+        elif s.kind == "mamba":
+            mc = cfg.mamba
+            di = mc.inner(cfg.d_model)
+            total += batch * di * (mc.d_state * 4.0 + (mc.d_conv - 1) * 2.0)
+        elif s.kind == "mlstm":
+            xc = cfg.xlstm
+            di = int(xc.m_proj_factor * cfg.d_model)
+            dh = di // xc.n_heads
+            total += batch * (di * dh + di) * 4.0
+        elif s.kind == "slstm":
+            total += batch * 4 * cfg.d_model * 4.0
+    return total

@@ -1,0 +1,72 @@
+"""Recompute analytic roofline terms for existing sweep records.
+
+The compiled artifacts (memory analysis, HLO collective inventory) are
+unchanged by cost-model fixes — only the analytic terms need refreshing.
+Rewrites the JSONL in place.
+
+  PYTHONPATH=src python -m repro.launch.reterm experiments/dryrun_all.jsonl
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+
+from repro.configs import SHAPES, get_config
+from repro.launch.costmodel import cell_costs
+from repro.launch.roofline import model_flops, roofline_terms
+
+
+def refresh(rec: dict) -> dict:
+    if rec.get("status") != "ok":
+        return rec
+    cfg = get_config(rec["arch"])
+    state_mode = "fsdp"
+    for v in [x for x in rec.get("variant", "").split(",") if x]:
+        if v == "skip":
+            cfg = dataclasses.replace(cfg, skip_masked_blocks=True)
+        elif v == "kvq":
+            cfg = dataclasses.replace(cfg, kv_quant=True)
+        elif v == "zero1":
+            state_mode = "zero1"
+        elif v.startswith("accum"):
+            cfg = dataclasses.replace(cfg, grad_accum=int(v[5:]))
+    shape = SHAPES[rec["shape"]]
+    n_dev = rec["devices"]
+    serve_fsdp = (rec["params_total"] * 2 / 16) > 6e9
+    cost = cell_costs(cfg, shape.kind, shape.seq, shape.batch,
+                      n_devices=n_dev, model_ax=16, dp_ax=n_dev // 16,
+                      fsdp=(shape.kind == "train" or serve_fsdp),
+                      state_mode=state_mode)
+    rec["flops_per_dev"] = cost.flops_per_dev
+    rec["bytes_per_dev"] = cost.bytes_per_dev
+    rec["coll_bytes_analytic"] = cost.coll_bytes_per_dev
+    coll_hlo = rec.get("collectives_hlo_raw", {}).get("total", 0.0)
+    rec.update(roofline_terms(cost.flops_per_dev, cost.bytes_per_dev,
+                              max(cost.coll_bytes_per_dev, coll_hlo)))
+    tokens = shape.batch * (1 if shape.kind == "decode" else shape.seq)
+    mf = model_flops(rec["params_active"], tokens, shape.kind)
+    rec["model_flops_total"] = mf
+    rec["model_flops_per_dev"] = mf / n_dev
+    if cost.flops_per_dev:
+        rec["useful_flops_ratio"] = mf / n_dev / cost.flops_per_dev
+    return rec
+
+
+def main():
+    for path in sys.argv[1:]:
+        recs = []
+        for line in open(path):
+            line = line.strip()
+            if not line or line == "ALLDONE":
+                continue
+            recs.append(refresh(json.loads(line)))
+        with open(path, "w") as f:
+            for r in recs:
+                f.write(json.dumps(r) + "\n")
+        print(f"refreshed {len(recs)} records in {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Three-term roofline from a compiled dry-run artifact (TPU v5e targets).
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / link_bw
+
+`cost_analysis()` on the partitioned module is per-device (verified against
+a hand-counted matmul). Collective bytes are parsed from the compiled HLO
+text: we sum the result-shape bytes of every collective op, scaled by the
+ring-traffic factor (all-reduce moves ~2x its payload over the slowest
+link; the others ~1x).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e chip constants (per assignment)."""
+
+    peak_flops: float = 197e12      # bf16 FLOP/s
+    hbm_bw: float = 819e9           # B/s
+    ici_bw: float = 50e9            # B/s per link
+    hbm_bytes: float = 16e9
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_FACTOR = {
+    # ring all-reduce = reduce-scatter + all-gather: ~2x payload on a link.
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-device bytes by collective kind (result-shape * ring factor)."""
+    out: dict[str, float] = {}
+    for type_str, kind in _COLL_RE.findall(hlo_text):
+        b = _shape_bytes(type_str) * _FACTOR[kind]
+        out[kind] = out.get(kind, 0.0) + b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def roofline_terms(flops_per_dev, bytes_per_dev, coll_bytes_per_dev,
+                   hw: HW = HW()):
+    t_c = flops_per_dev / hw.peak_flops
+    t_m = bytes_per_dev / hw.hbm_bw
+    t_n = coll_bytes_per_dev / hw.ici_bw
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_n}
+    dom = max(terms, key=terms.get)
+    bound = max(t_c, t_m, t_n)
+    frac = t_c / bound if bound > 0 else 0.0
+    return {**terms, "dominant": dom, "compute_fraction": frac}
+
+
+def model_flops(n_params_active: float, tokens: float, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D for train, 2*N*D for inference forward."""
+    per_tok = 6.0 if kind == "train" else 2.0
+    return per_tok * n_params_active * tokens

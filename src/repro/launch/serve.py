@@ -1,0 +1,77 @@
+"""Batched ANN serving loop (the paper's deployment mode).
+
+The request path mirrors paper Fig. 4: the database (all partitions) is
+resident on the accelerators; the host only batches queries and collects
+(gid, dist) results. QPS / latency percentiles are printed per window —
+benchmarks/fig12_platforms.py reuses this loop.
+
+  PYTHONPATH=src python -m repro.launch.serve --n 20000 --partitions 4 \
+      --batch 64 --num-batches 50
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.engine import ANNEngine
+from repro.core.hnsw_graph import HNSWConfig
+from repro.data import VectorDataset
+
+
+def serve_loop(engine: ANNEngine, queries, batch: int, k: int, ef: int,
+               log=print):
+    lat = []
+    n = 0
+    ids_all = []
+    t_start = time.perf_counter()
+    for i in range(0, len(queries) - batch + 1, batch):
+        q = queries[i : i + batch]
+        t0 = time.perf_counter()
+        ids, _ = engine.search(q, k=k, ef=ef)
+        ids.block_until_ready()
+        lat.append(time.perf_counter() - t0)
+        ids_all.append(np.asarray(ids))
+        n += batch
+    wall = time.perf_counter() - t_start
+    lat_ms = np.array(lat) * 1e3
+    stats = {
+        "qps": n / wall,
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "batches": len(lat),
+    }
+    log(f"[serve] {n} queries  {stats['qps']:.1f} QPS  "
+        f"p50 {stats['p50_ms']:.1f}ms  p99 {stats['p99_ms']:.1f}ms")
+    return np.concatenate(ids_all) if ids_all else np.zeros((0, k)), stats
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--dim", type=int, default=128)
+    ap.add_argument("--partitions", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--num-batches", type=int, default=20)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--ef", type=int, default=40)
+    ap.add_argument("--M", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    ds = VectorDataset(args.n, args.dim)
+    print(f"[serve] building {args.partitions}-partition HNSW over "
+          f"{args.n} vectors ...")
+    t0 = time.perf_counter()
+    engine = ANNEngine.build(
+        ds.vectors(), num_partitions=args.partitions,
+        cfg=HNSWConfig(M=args.M))
+    print(f"[serve] build {time.perf_counter()-t0:.1f}s")
+    queries = ds.queries(args.batch * args.num_batches)
+    _, stats = serve_loop(engine, queries, args.batch, args.k, args.ef)
+    return stats
+
+
+if __name__ == "__main__":
+    main()

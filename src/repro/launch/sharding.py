@@ -1,0 +1,259 @@
+"""Path-based sharding rules: DP / FSDP / TP / EP / SP from one rule table.
+
+Strategy (baseline — §Perf iterates on the dominant roofline term):
+  * params: TP on `model` (heads / d_ff / experts / d_inner), FSDP on `data`
+    for the orthogonal dim. Serving replicates the FSDP dim for models whose
+    bf16 params fit HBM at TP-only sharding (<= ~6 GB/chip), else keeps 2D.
+  * optimizer state mirrors its param.
+  * batch: global batch on (pod, data).
+  * decode caches: batch on (pod, data) when divisible; KV sequence on
+    `model` (flash-decoding-style partial softmax via GSPMD reductions);
+    B==1 long-context shards the sequence on (data, model).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes, mesh_shape
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "state_specs",
+           "named", "count_bytes"]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/" + "/".join(parts)
+
+
+def _divisible(n: int, axes, sizes) -> bool:
+    total = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        total *= sizes[a]
+    return n % total == 0
+
+
+def _param_rule(path: str, shape, sizes, fsdp: bool):
+    """Return a PartitionSpec for one param leaf."""
+    dp = "data" if ("data" in sizes and fsdp) else None
+    leaf = path.rsplit("/", 1)[-1]
+    nd = len(shape)
+
+    if leaf == "embed":
+        return P("model", dp)                        # [V, d]
+    if leaf == "head":
+        return P(dp, None, "model")                  # [d, nH, V]
+    if leaf in ("wq", "wk", "wv") and nd == 3:
+        return P(dp, "model", None)                  # [d, H, hd]
+    if leaf == "wo" and nd == 3:
+        return P("model", None, dp)                  # [H, hd, d]
+    if leaf in ("wq", "wk", "wv") and nd == 2:       # mlstm [di, di]
+        return P(None, "model")
+    if leaf == "w_dkv":
+        return P(dp, None)                           # [d, lora+rope]
+    if leaf in ("w_uk", "w_uv"):
+        return P(None, "model", None)                # [lora, H, x]
+    if leaf == "w_in" and nd == 4:
+        return P("model", dp, None, None)            # MoE [E, d, 2, F]
+    if leaf == "w_out" and nd == 3 and "moe" in path:
+        return P("model", None, dp)                  # MoE [E, F, d]
+    if leaf in ("w_in", "shared_w_in", "ffn_in") and nd == 3:
+        return P(dp, None, "model")                  # GLU [d, 2, F]
+    if leaf in ("w_in", "shared_w_in") and nd == 2:
+        return P(dp, "model")                        # dense [d, F]
+    if leaf in ("w_out", "shared_w_out", "ffn_out") and nd == 2:
+        return P("model", dp)                        # [F, d]
+    if leaf == "router":
+        return P(dp, None)                           # [d, E]
+    if leaf in ("in_proj",):
+        return P(dp, None, "model")                  # [d, 2, di]
+    if leaf == "dt_proj":
+        return P(dp, "model")                        # [r, di]: di rides model
+    if leaf == "out_proj":
+        return P("model", dp) if nd == 2 else P("model")
+    if leaf in ("x_proj",):
+        return P("model", None)                      # [di, r+2S]
+    if leaf in ("conv_w",):
+        return P(None, "model")                      # [K, di]
+    if leaf in ("A_log",):
+        return P("model", None)                      # [di, S]
+    if leaf in ("conv_b", "dt_bias", "D", "gn_scale", "skip", "w_i", "w_f"):
+        return P("model") if nd == 1 else P("model", None)
+    if leaf == "w_gates":
+        return P(dp, None, None, "model")            # slstm [d, 4, H, dh]
+    if leaf == "r_gates":
+        return P(None, None, "model", None)          # [4, H, dh, dh]
+    if leaf == "b_gates":
+        return P(None, None, None)
+    # norms / scalars / fallback: replicate
+    return P(*([None] * nd))
+
+
+def _sanitize(spec: P, shape, sizes) -> P:
+    """Drop mesh axes whose size does not evenly divide the dim (explicit
+    input shardings require exact tiling)."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        total = 1
+        for a in axs:
+            total *= sizes[a]
+        out.append(ax if (total and dim % total == 0) else None)
+    return P(*out)
+
+
+def _place_missing(spec: P, shape, sizes, want=("model",)) -> P:
+    """If a wanted mesh axis was dropped (non-divisible dim), re-home it:
+    first on an unsharded dim it divides, else combined with an existing
+    axis tuple on a dim both divide. Keeps big-param leaves sharded even
+    when the 'natural' dim is awkward (40 heads, 49155 vocab, ...)."""
+    entries = list(tuple(spec) + (None,) * (len(shape) - len(spec)))
+    used = set()
+    for e in entries:
+        for a in (e if isinstance(e, tuple) else (e,) if e else ()):
+            used.add(a)
+    for ax in want:
+        if ax in used:
+            continue
+        placed = False
+        for i in range(len(shape) - 1, -1, -1):       # prefer trailing dims
+            if entries[i] is None and shape[i] % sizes[ax] == 0:
+                entries[i] = ax
+                placed = True
+                break
+        if not placed:
+            for i in range(len(shape)):
+                e = entries[i]
+                if e is None:
+                    continue
+                cur = e if isinstance(e, tuple) else (e,)
+                total = sizes[ax]
+                for a in cur:
+                    total *= sizes[a]
+                if shape[i] % total == 0:
+                    entries[i] = tuple(cur) + (ax,)
+                    break
+    return P(*entries)
+
+
+def param_specs(params_shapes, mesh, *, fsdp: bool = True):
+    """Pytree of PartitionSpec matching a params (or m/v) shape tree.
+
+    Leaves under /periods/ are scan-stacked with a leading period axis —
+    the rule applies to shape[1:] with the stack axis replicated.
+    """
+    sizes = mesh_shape(mesh)
+
+    def rule(path, leaf):
+        p = _path_str(path)
+        stacked = p.startswith("/periods/")
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        spec = _param_rule(p, shape, sizes, fsdp)
+        spec = _sanitize(spec, shape, sizes)
+        if leaf.size >= 1 << 16:      # only big leaves worth re-homing
+            spec = _place_missing(spec, shape, sizes)
+        return P(None, *spec) if stacked else spec
+
+    return jax.tree_util.tree_map_with_path(rule, params_shapes)
+
+
+def state_specs(state_shapes, mesh, *, fsdp: bool = True, mode: str = "fsdp"):
+    """Specs for {"params": ..., "opt": {"m","v","step"}}.
+
+    mode="fsdp"  : params AND optimizer state sharded on `data` (ZeRO-3-ish;
+                   params all-gather per layer fwd+bwd, grads reduce-scatter).
+    mode="zero1" : params replicated on `data` (one all-reduce of grads per
+                   step), optimizer m/v still data-sharded — trades param
+                   memory for ~2x less per-step collective traffic on
+                   collective-bound cells (EXPERIMENTS.md §Perf).
+    """
+    p = param_specs(state_shapes["params"], mesh,
+                    fsdp=(fsdp and mode == "fsdp"))
+    return {
+        "params": p,
+        "opt": {
+            "m": param_specs(state_shapes["opt"]["m"], mesh, fsdp=fsdp),
+            "v": param_specs(state_shapes["opt"]["v"], mesh, fsdp=fsdp),
+            "step": P(),
+        },
+    }
+
+
+def batch_specs(batch_shapes, mesh):
+    sizes = mesh_shape(mesh)
+    dp = dp_axes(mesh)
+
+    def rule(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        b = leaf.shape[0]
+        lead = dp if _divisible(b, dp, sizes) else None
+        return P(lead, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shapes)
+
+
+def cache_specs(cache_shapes, mesh):
+    """Decode/prefill cache sharding (see module docstring)."""
+    sizes = mesh_shape(mesh)
+    dp = dp_axes(mesh)
+
+    def rule(path, leaf):
+        p = _path_str(path)
+        name = p.rsplit("/", 1)[-1]
+        stacked = p.startswith("/periods/")
+        shape = leaf.shape[1:] if stacked else leaf.shape
+
+        def out(spec):
+            return P(None, *spec) if stacked else spec
+
+        b = shape[0]
+        nd = len(shape)
+        b_ax = dp if _divisible(b, dp, sizes) else None
+        if name in ("k", "v", "ks", "vs"):   # [B, S, KV, hd|1]
+            s_ax = ("model",) if b_ax else ("data", "model")
+            s_ax = s_ax if _divisible(shape[1], s_ax, sizes) else None
+            return out(P(b_ax, s_ax, None, None))
+        if name in ("c", "kr"):         # MLA [B, S, lora]
+            s_ax = ("model",) if b_ax else ("data", "model")
+            s_ax = s_ax if _divisible(shape[1], s_ax, sizes) else None
+            return out(P(b_ax, s_ax, None))
+        if name == "conv":              # [B, K-1, di]
+            m = "model" if _divisible(shape[2], "model", sizes) else None
+            return out(P(b_ax, None, m))
+        if name == "ssm":               # [B, di, S]
+            m = "model" if _divisible(shape[1], "model", sizes) else None
+            return out(P(b_ax, m, None))
+        if name == "C":                 # mlstm [B, H, dh, dh]
+            m = "model" if _divisible(shape[2], "model", sizes) else None
+            return out(P(b_ax, None, m, None))
+        if name in ("n", "sc", "sn", "sh", "sm") and nd == 3:  # [B, H, dh]
+            m = "model" if _divisible(shape[2], "model", sizes) else None
+            return out(P(b_ax, None, m))
+        if nd >= 1:
+            return out(P(b_ax, *([None] * (nd - 1))))
+        return out(P())
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)
+
+
+def named(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def count_bytes(shapes_tree) -> int:
+    return sum(
+        leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(shapes_tree))

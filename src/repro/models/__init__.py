@@ -1,0 +1,2 @@
+"""LM substrate: the 10 assigned architectures served/trained by the same
+runtime that hosts the paper's ANN engine."""

@@ -1,0 +1,512 @@
+"""Attention + MLP building blocks for the assigned architectures.
+
+Everything is written as pure init/apply function pairs over plain dict
+pytrees (no flax dependency) so param trees can be stacked for
+scan-over-periods and sharded with path-based rules.
+
+Attention comes in three execution paths:
+  * blockwise (flash-style) streaming softmax for train/prefill — O(block)
+    memory, mandatory at 32k context;
+  * direct single-token decode against a KV cache (full or ring-buffer for
+    sliding-window);
+  * MLA (DeepSeek) with the compressed-KV cache and the *absorbed* decode
+    path (w_uk/w_uv folded into the query/output projections).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import shard_ctx  # noqa: F401  (used by attention pins)
+
+__all__ = [
+    "rms_norm",
+    "apply_rope",
+    "blockwise_attn",
+    "attn_init",
+    "attn_apply",
+    "mla_init",
+    "mla_apply",
+    "mlp_init",
+    "mlp_apply",
+]
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def _pin_btd(t):
+    if t.ndim == 3:
+        return shard_ctx.constrain(t, ("dp", "tp", None))
+    return t
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x, scale, eps=1e-5):
+    dt = x.dtype
+    xf = _pin_btd(x.astype(jnp.float32))
+    xh = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (_pin_btd(xh) * scale.astype(jnp.float32)).astype(dt)
+
+
+def _rms_fwd(x, scale, eps):
+    return rms_norm(x, scale, eps), (x, scale)
+
+
+def _rms_bwd(eps, res, dy):
+    """Hand-written backward: per-token math only, with explicit sharding
+    pins — the autodiff transpose otherwise loses (dp, tp) on the f32
+    cotangents and GSPMD all-gathers [B, T, d] per layer (~6 GB/layer on
+    dbrx-132b). rms is recomputed (cheaper than saving it)."""
+    x, scale = res
+    xf = _pin_btd(x.astype(jnp.float32))
+    r = _pin_btd(jax.lax.rsqrt(
+        jnp.mean(jnp.square(xf), -1, keepdims=True) + eps))
+    xh = _pin_btd(xf * r)
+    g = dy.astype(jnp.float32) * scale.astype(jnp.float32)
+    g = _pin_btd(g)
+    proj = _pin_btd(jnp.mean(xh * g, -1, keepdims=True))
+    dx = _pin_btd(r * (g - xh * proj)).astype(x.dtype)
+    axes = tuple(range(dy.ndim - 1))
+    dscale = jnp.sum(dy.astype(jnp.float32) * xh, axis=axes).astype(scale.dtype)
+    return dx, dscale
+
+
+rms_norm.defvjp(_rms_fwd, _rms_bwd)
+
+
+def _rope_angles(positions, dim, theta):
+    """positions [...,T] -> (cos, sin) [..., T, dim/2] (f32)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta=1e4):
+    """Rotate pairs (x[..., :half], x[..., half:]). x: [B, T, H, hd]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    cos, sin = _rope_angles(positions, hd, theta)     # [B, T, half] or [T, half]
+    cos, sin = cos[..., :, None, :], sin[..., :, None, :]  # head axis
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style blockwise attention (jnp; the Pallas twin lives in kernels/)
+# ---------------------------------------------------------------------------
+
+
+def _mask_block(row, col, *, causal, window, prefix_len, s_valid):
+    ok = col < s_valid
+    if causal:
+        cm = col[None, :] <= row[:, None]
+        if prefix_len is not None:
+            cm = cm | (col[None, :] < prefix_len)
+        ok = ok[None, :] & cm
+    else:
+        ok = jnp.broadcast_to(ok[None, :], (row.shape[0], col.shape[0]))
+    if window and window > 0:
+        ok = ok & (col[None, :] > row[:, None] - window)
+    return ok
+
+
+def blockwise_attn(
+    q,                    # [B, T, H, hd]
+    k,                    # [B, S, KV, hd]
+    v,                    # [B, S, KV, hd]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    prefix_len=None,      # scalar or None: bidirectional prefix (prefix-LM)
+    q_offset=0,           # global position of q[0] (prefill continuation)
+    block_q: int = 512,
+    block_k: int = 1024,
+    skip_masked_blocks: bool = False,
+):
+    """Memory-efficient attention with running-softmax over KV blocks."""
+    B, T, H, hd = q.shape
+    _, S, KV, _ = k.shape
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    bq, bk = min(block_q, T), min(block_k, S)
+    Tp, Sp = -(-T // bq) * bq, -(-S // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    qb = qp.reshape(B, Tp // bq, bq, KV, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    kb = kp.reshape(B, Sp // bk, bk, KV, hd).transpose(1, 0, 3, 2, 4)
+    vb = vp.reshape(B, Sp // bk, bk, KV, hd).transpose(1, 0, 3, 2, 4)
+
+    def one_q_block(args):
+        qi, qblk = args                                # qblk [B, KV, G, bq, hd]
+        row = q_offset + qi * bq + jnp.arange(bq)
+
+        @jax.checkpoint
+        def inner(carry, xs):
+            m, l, acc = carry
+            kj, kblk, vblk = xs                        # [B, KV, bk, hd]
+            col = kj * bk + jnp.arange(bk)
+
+            def compute(carry):
+                m, l, acc = carry
+                s = jnp.einsum(
+                    "bKgqh,bKkh->bKgqk", qblk.astype(jnp.float32),
+                    kblk.astype(jnp.float32)) * scale
+                ok = _mask_block(row, col, causal=causal, window=window,
+                                 prefix_len=prefix_len, s_valid=S)
+                s = jnp.where(ok[None, None, None], s, -jnp.inf)
+                m_new = jnp.maximum(m, s.max(-1))
+                # guard fully-masked rows (exp(-inf - -inf))
+                m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+                p = jnp.exp(s - m_safe[..., None])
+                corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+                l = l * corr + p.sum(-1)
+                acc = acc * corr[..., None] + jnp.einsum(
+                    "bKgqk,bKkh->bKgqh", p, vblk.astype(jnp.float32))
+                return m_new, l, acc
+
+            if skip_masked_blocks and causal and prefix_len is None:
+                # §Perf: a KV block strictly in the causal future of every
+                # query row in this block contributes nothing — skip the two
+                # matmuls entirely (upper triangle of the block grid ~= half
+                # the attention FLOPs at long T).
+                live = kj * bk <= row[-1]
+                carry = jax.lax.cond(live, compute, lambda c: c, carry)
+            else:
+                carry = compute(carry)
+            return carry, None
+
+        m0 = jnp.full((B, KV, G, bq), -jnp.inf)
+        l0 = jnp.zeros((B, KV, G, bq))
+        a0 = jnp.zeros((B, KV, G, bq, hd))
+        (m, l, acc), _ = jax.lax.scan(
+            inner, (m0, l0, a0),
+            (jnp.arange(Sp // bk), kb, vb))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return out                                      # [B, KV, G, bq, hd]
+
+    # checkpoint per q-block: backward recomputes scores (flash-attention
+    # remat) instead of storing [B,KV,G,bq,bk] probabilities per block.
+    outs = jax.lax.map(jax.checkpoint(one_q_block), (jnp.arange(Tp // bq), qb))
+    # outs: [nq, B, KV, G, bq, hd] -> [B, (nq bq), (KV G), hd]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Tp, H, hd)[:, :T]
+    return out.astype(q.dtype)
+
+
+def _decode_attn(q, k, v, *, s_valid, window=0, pos=None):
+    """Single-token attention against the cache. q: [B, 1, H, hd]."""
+    B, _, H, hd = q.shape
+    _, S, KV, _ = k.shape
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bKgh,bsKh->bKgs", qf, k.astype(jnp.float32)) * scale
+    col = jnp.arange(S)
+    ok = col[None, :] < s_valid if jnp.ndim(s_valid) == 0 else col[None, :] < s_valid[:, None]
+    s = jnp.where(ok[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bKgs,bsKh->bKgh", p, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-cache quantization (per-token-per-head scale)
+# ---------------------------------------------------------------------------
+
+
+def quant_kv(x):
+    """[..., hd] -> (int8 values, bf16 scale[..., 1]). Halves decode-cell
+    cache residency (musicgen-large decode_32k: 12.9 -> 6.5 GB/device)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(scale, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def dequant_kv(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Standard GQA attention layer (full / sliding-window, optional qk_norm)
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, d_model, n_heads, n_kv, head_dim, qk_norm=False, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    p = {
+        "wq": jax.random.normal(ks[0], (d_model, n_heads, head_dim), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d_model, n_kv, head_dim), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d_model, n_kv, head_dim), dtype) * s,
+        "wo": jax.random.normal(ks[3], (n_heads, head_dim, d_model), dtype)
+        * (1.0 / math.sqrt(n_heads * head_dim)),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), dtype)
+        p["k_norm"] = jnp.ones((head_dim,), dtype)
+    return p
+
+
+def attn_apply(
+    p,
+    x,                       # [B, T, d]
+    *,
+    mode: str,               # "train" | "prefill" | "decode"
+    cache=None,              # {"k": [B, S, KV, hd], "v": ...} or None
+    pos=0,                   # scalar int: position of x[:, 0]
+    window: int = 0,
+    prefix_len=None,
+    rope_theta: float = 1e4,
+    block_q: int = 512,
+    block_k: int = 1024,
+    skip_masked_blocks: bool = False,
+):
+    B, T, _ = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    positions = pos + jnp.arange(T)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    # Megatron-SP contract: sequence sharding outside, head sharding inside.
+    # (axes that don't divide — e.g. 8 KV heads on a 16-way model axis —
+    # drop automatically and GSPMD replicates those heads instead.)
+    q = shard_ctx.constrain(q, ("dp", None, "tp", None))
+    if mode != "decode":
+        # K/V must span the full sequence for attention: pin them
+        # T-replicated so the SP->attention boundary gathers these small
+        # bf16 tensors, not the f32 residual stream.
+        k = shard_ctx.constrain(k, ("dp", None, None, None))
+        v = shard_ctx.constrain(v, ("dp", None, None, None))
+    else:
+        k = shard_ctx.constrain(k, ("dp", None, "tp", None))
+        v = shard_ctx.constrain(v, ("dp", None, "tp", None))
+
+    if mode == "decode":
+        S = cache["k"].shape[1]
+        quant = "ks" in cache
+        if window and window > 0:
+            slot = pos % S                                # ring-buffer write
+            k_all = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+            v_all = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+            s_valid = jnp.minimum(pos + 1, S)
+            new_cache = {"k": k_all, "v": v_all}
+        elif quant:
+            kq, ks = quant_kv(k)
+            vq, vs = quant_kv(v)
+            k_all = jax.lax.dynamic_update_slice(cache["k"], kq, (0, pos, 0, 0))
+            v_all = jax.lax.dynamic_update_slice(cache["v"], vq, (0, pos, 0, 0))
+            ks_all = jax.lax.dynamic_update_slice(cache["ks"], ks, (0, pos, 0, 0))
+            vs_all = jax.lax.dynamic_update_slice(cache["vs"], vs, (0, pos, 0, 0))
+            new_cache = {"k": k_all, "v": v_all, "ks": ks_all, "vs": vs_all}
+            k_all = dequant_kv(k_all, ks_all, k.dtype)
+            v_all = dequant_kv(v_all, vs_all, v.dtype)
+            s_valid = pos + 1
+        else:
+            k_all = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+            v_all = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+            s_valid = pos + 1
+            new_cache = {"k": k_all, "v": v_all}
+        out = _decode_attn(q, k_all, v_all, s_valid=s_valid, window=window)
+    else:
+        out = blockwise_attn(
+            q, k, v, causal=True, window=window, prefix_len=prefix_len,
+            q_offset=pos, block_q=block_q, block_k=block_k,
+            skip_masked_blocks=skip_masked_blocks)
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            S = cache["k"].shape[1]
+            if window and window > 0:
+                # keep the last `window` positions in the ring buffer, laid out
+                # so slot = position % S (S == window here).
+                W = S
+                last = jnp.maximum(T - W, 0)
+                k_tail = jax.lax.dynamic_slice_in_dim(k, last, min(W, T), 1)
+                v_tail = jax.lax.dynamic_slice_in_dim(v, last, min(W, T), 1)
+                tail_pos = (pos + last + jnp.arange(min(W, T))) % W
+                kc = cache["k"].at[:, tail_pos].set(k_tail)
+                vc = cache["v"].at[:, tail_pos].set(v_tail)
+                new_cache = {"k": kc, "v": vc}
+            else:
+                kw, vw = k, v
+                if "ks" in cache:
+                    kw, ks = quant_kv(k)
+                    vw, vs = quant_kv(v)
+                kc = jax.lax.dynamic_update_slice(cache["k"], kw, (0, pos, 0, 0))
+                vc = jax.lax.dynamic_update_slice(cache["v"], vw, (0, pos, 0, 0))
+                # keep the written cache in its resident layout (B: dp,
+                # S: model) — the T-replicated k/v above otherwise drag the
+                # whole cache into an unsharded copy (4x 5.4GB on qwen3).
+                kc = shard_ctx.constrain(kc, ("dp", "tp", None, None))
+                vc = shard_ctx.constrain(vc, ("dp", "tp", None, None))
+                new_cache = {"k": kc, "v": vc}
+                if "ks" in cache:
+                    ksc = jax.lax.dynamic_update_slice(cache["ks"], ks, (0, pos, 0, 0))
+                    vsc = jax.lax.dynamic_update_slice(cache["vs"], vs, (0, pos, 0, 0))
+                    new_cache["ks"] = shard_ctx.constrain(ksc, ("dp", "tp", None, None))
+                    new_cache["vs"] = shard_ctx.constrain(vsc, ("dp", "tp", None, None))
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    return y, new_cache
+
+
+def attn_cache_init(batch, s_max, n_kv, head_dim, window=0, dtype=jnp.float32,
+                    quant=False):
+    S = min(window, s_max) if window and window > 0 else s_max
+    if quant and not (window and window > 0):
+        return {
+            "k": jnp.zeros((batch, S, n_kv, head_dim), jnp.int8),
+            "v": jnp.zeros((batch, S, n_kv, head_dim), jnp.int8),
+            "ks": jnp.zeros((batch, S, n_kv, 1), jnp.bfloat16),
+            "vs": jnp.zeros((batch, S, n_kv, 1), jnp.bfloat16),
+        }
+    return {
+        "k": jnp.zeros((batch, S, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, S, n_kv, head_dim), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): compressed KV cache + absorbed decode
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_dim: int = 128
+
+
+def mla_init(key, d_model, n_heads, mla: MLAConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d_model)
+    qd = mla.qk_nope + mla.qk_rope
+    return {
+        "wq": jax.random.normal(ks[0], (d_model, n_heads, qd), dtype) * s,
+        "w_dkv": jax.random.normal(ks[1], (d_model, mla.kv_lora + mla.qk_rope), dtype) * s,
+        "kv_norm": jnp.ones((mla.kv_lora,), dtype),
+        "w_uk": jax.random.normal(ks[2], (mla.kv_lora, n_heads, mla.qk_nope), dtype)
+        * (1.0 / math.sqrt(mla.kv_lora)),
+        "w_uv": jax.random.normal(ks[3], (mla.kv_lora, n_heads, mla.v_dim), dtype)
+        * (1.0 / math.sqrt(mla.kv_lora)),
+        "wo": jax.random.normal(ks[4], (n_heads, mla.v_dim, d_model), dtype)
+        * (1.0 / math.sqrt(n_heads * mla.v_dim)),
+    }
+
+
+def mla_apply(p, x, *, mode, cache=None, pos=0, mla: MLAConfig,
+              rope_theta=1e4, block_q=512, block_k=1024):
+    """MLA attention. Cache stores only (c_kv, k_rope): kv_lora + qk_rope
+    floats per token — the technique's entire point for decode cells."""
+    B, T, _ = x.shape
+    H = p["wq"].shape[1]
+    nope, rope_d, lora = mla.qk_nope, mla.qk_rope, mla.kv_lora
+    scale_dim = nope + rope_d
+
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    dkv = jnp.einsum("btd,dk->btk", x, p["w_dkv"])
+    c_kv = rms_norm(dkv[..., :lora], p["kv_norm"])
+    k_rope = dkv[..., lora:][:, :, None, :]              # single shared head
+    positions = pos + jnp.arange(T)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    k_rope = apply_rope(k_rope, positions, rope_theta)
+
+    if mode == "decode":
+        # absorbed path: q_eff = q_nope @ w_uk -> score against cached c_kv.
+        c_all = jax.lax.dynamic_update_slice(cache["c"], c_kv, (0, pos, 0))
+        kr_all = jax.lax.dynamic_update_slice(cache["kr"], k_rope[:, :, 0, :], (0, pos, 0))
+        s_valid = pos + 1
+        q_eff = jnp.einsum("bthn,lhn->bthl", q_nope, p["w_uk"])   # [B,1,H,lora]
+        s = (
+            jnp.einsum("bthl,bsl->bhts", q_eff.astype(jnp.float32), c_all.astype(jnp.float32))
+            + jnp.einsum("bthr,bsr->bhts", q_rope.astype(jnp.float32), kr_all.astype(jnp.float32))
+        ) / math.sqrt(scale_dim)
+        ok = jnp.arange(c_all.shape[1])[None, None, None, :] < s_valid
+        s = jnp.where(ok, s, -jnp.inf)
+        pa = jax.nn.softmax(s, axis=-1)
+        out_c = jnp.einsum("bhts,bsl->bthl", pa, c_all.astype(jnp.float32))
+        out = jnp.einsum("bthl,lhv->bthv", out_c, p["w_uv"].astype(jnp.float32))
+        y = jnp.einsum("bthv,hvd->btd", out.astype(x.dtype), p["wo"])
+        return y, {"c": c_all, "kr": kr_all}
+
+    # train/prefill: materialize per-head k, v (naive path).
+    k_nope = jnp.einsum("btl,lhn->bthn", c_kv, p["w_uk"])
+    v = jnp.einsum("btl,lhv->bthv", c_kv, p["w_uv"])
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, T, H, rope_d))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # pad v to qk dim so the shared blockwise kernel applies, then slice.
+    vd = mla.v_dim
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, scale_dim - vd)))
+    # MLA has KV == H == 16: heads shard exactly onto the model axis.
+    q_full = shard_ctx.constrain(q_full, ("dp", None, "tp", None))
+    k_full = shard_ctx.constrain(k_full, ("dp", None, "tp", None))
+    v_pad = shard_ctx.constrain(v_pad, ("dp", None, "tp", None))
+    out = blockwise_attn(q_full, k_full, v_pad, causal=True, q_offset=pos,
+                         block_q=block_q, block_k=block_k)[..., :vd]
+    out = shard_ctx.constrain(out, ("dp", None, "tp", None))
+    y = jnp.einsum("bthv,hvd->btd", out, p["wo"])
+    new_cache = None
+    if mode == "prefill" and cache is not None:
+        c_all = jax.lax.dynamic_update_slice(cache["c"], c_kv, (0, pos, 0))
+        kr_all = jax.lax.dynamic_update_slice(cache["kr"], k_rope[:, :, 0, :], (0, pos, 0))
+        c_all = shard_ctx.constrain(c_all, ("dp", "tp", None))
+        kr_all = shard_ctx.constrain(kr_all, ("dp", "tp", None))
+        new_cache = {"c": c_all, "kr": kr_all}
+    return y, new_cache
+
+
+def mla_cache_init(batch, s_max, mla: MLAConfig, dtype=jnp.float32):
+    return {
+        "c": jnp.zeros((batch, s_max, mla.kv_lora), dtype),
+        "kr": jnp.zeros((batch, s_max, mla.qk_rope), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model, d_ff, kind="glu", dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    s = 1.0 / math.sqrt(d_model)
+    if kind == "glu":
+        return {
+            "w_in": jax.random.normal(k1, (d_model, 2, d_ff), dtype) * s,
+            "w_out": jax.random.normal(k2, (d_ff, d_model), dtype) / math.sqrt(d_ff),
+        }
+    return {  # non-gated (e.g. nemotron relu^2)
+        "w_in": jax.random.normal(k1, (d_model, d_ff), dtype) * s,
+        "w_out": jax.random.normal(k2, (d_ff, d_model), dtype) / math.sqrt(d_ff),
+    }
+
+
+def mlp_apply(p, x, act="silu"):
+    f = ACTS[act]
+    if p["w_in"].ndim == 3:  # gated
+        h = jnp.einsum("btd,dgf->btgf", x, p["w_in"])
+        h = f(h[:, :, 0]) * h[:, :, 1]
+    else:
+        h = f(jnp.einsum("btd,df->btf", x, p["w_in"]))
+    return jnp.einsum("btf,fd->btd", h, p["w_out"])

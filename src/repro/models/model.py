@@ -1,0 +1,103 @@
+"""Step functions: train / prefill / decode over any ModelConfig.
+
+These are the functions the dry-run lowers for every (arch x shape) cell:
+  * train_step   — fwd + chunked-vocab loss + bwd + AdamW (train_4k)
+  * prefill_step — build the KV cache, return last-position logits (prefill_32k)
+  * decode_step  — one token against a seq_len cache (decode_32k, long_500k)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import (
+    ModelConfig, chunked_xent, compute_logits, forward, init_cache, init_params,
+)
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+__all__ = [
+    "make_train_state", "train_step", "prefill_step", "decode_step",
+    "loss_fn", "ModelConfig",
+]
+
+
+def make_train_state(key, cfg: ModelConfig, opt_cfg: AdamWConfig | None = None):
+    params = init_params(key, cfg)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """batch: {"inputs": tokens|embeds, "labels": [B,T] or [B,T,nH]}."""
+    hidden, _, aux = forward(params, cfg, batch["inputs"], mode="train",
+                             prefix_len=batch.get("prefix_len"))
+    loss = chunked_xent(params, cfg, hidden, batch["labels"],
+                        mask=batch.get("mask"))
+    return loss + 0.01 * aux, {"xent": loss, "aux": aux}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "opt_cfg"),
+                   donate_argnums=(0,))
+def train_step(state, batch, cfg: ModelConfig, opt_cfg: AdamWConfig):
+    import math as _math
+
+    from repro.models import shard_ctx
+    B = jax.tree.leaves(batch)[0].shape[0]
+    M = _math.gcd(max(cfg.grad_accum, 1), B)   # smoke batches may be tiny
+    # never shrink a microbatch below the DP extent: an unshardable batch
+    # replicates every activation across data shards (jamba multi-pod).
+    dpn = shard_ctx.dp_size()
+    while M > 1 and (B // M) % dpn != 0:
+        M //= 2
+    if M == 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], cfg, batch)
+    else:
+        # gradient accumulation: scan over microbatches, f32 accumulator —
+        # activation/carry memory scales 1/M at the cost of M smaller steps
+        # (compute identical; the collective schedule repeats per microbatch).
+        scalars = {k: v for k, v in batch.items() if jnp.ndim(v) == 0}
+        arrays = {k: v for k, v in batch.items() if jnp.ndim(v) > 0}
+        mb = jax.tree.map(
+            lambda a: a.reshape((M, a.shape[0] // M) + a.shape[1:]), arrays)
+
+        def micro(acc, mbatch):
+            (l, met), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"], cfg, {**mbatch, **scalars})
+            acc = jax.tree.map(
+                lambda a, gg: a + gg.astype(jnp.float32) / M, acc, g)
+            return acc, (l, met)
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+        grads, (losses, mets) = jax.lax.scan(micro, zeros, mb)
+        loss = losses.mean()
+        metrics = jax.tree.map(lambda x: x.mean(), mets)
+    params, opt, opt_metrics = adamw_update(
+        opt_cfg, state["params"], grads, state["opt"])
+    metrics = {"loss": loss, **metrics, **opt_metrics}
+    return {"params": params, "opt": opt}, metrics
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2,))
+def prefill_step(params, batch, cache, cfg: ModelConfig):
+    """Fill the cache with batch["inputs"] ([B, T]); return last logits."""
+    hidden, new_cache, _ = forward(params, cfg, batch["inputs"], mode="prefill",
+                                   cache=cache, pos=0,
+                                   prefix_len=batch.get("prefix_len"))
+    logits = compute_logits(params, cfg, hidden[:, -1:])
+    return logits, new_cache
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(2,))
+def decode_step(params, tokens, cache, pos, cfg: ModelConfig):
+    """One decode step. tokens: [B, 1] int32 (or [B, 1, d] embeds);
+    pos: scalar int32 current position. Cache is donated (updated in place
+    on device)."""
+    hidden, new_cache, _ = forward(params, cfg, tokens, mode="decode",
+                                   cache=cache, pos=pos)
+    logits = compute_logits(params, cfg, hidden)
+    return logits, new_cache

@@ -1,0 +1,363 @@
+"""Recurrent blocks: Mamba-1 (Jamba), mLSTM and sLSTM (xLSTM).
+
+All three expose the same (init, apply) contract as attention layers:
+apply(params, x, mode, cache, pos) -> (y, new_cache). Sequence processing
+uses a *chunked, rematerialized* scan: the outer scan checkpoints only the
+recurrent state every `chunk` steps, so train-time memory is
+O(T/chunk * state) instead of O(T * state) — this is what makes the
+`long_500k` cells feasible for the SSM/hybrid architectures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import shard_ctx
+from repro.models.layers import rms_norm
+
+__all__ = [
+    "MambaConfig", "mamba_init", "mamba_apply", "mamba_cache_init",
+    "XLSTMConfig", "mlstm_init", "mlstm_apply", "mlstm_cache_init",
+    "slstm_init", "slstm_apply", "slstm_cache_init",
+]
+
+
+def chunked_scan(step, init, xs, chunk: int, remat: bool = True):
+    """lax.scan over time with per-chunk remat. xs leaves: [T, ...]."""
+    T = jax.tree.leaves(xs)[0].shape[0]
+    if T % chunk != 0:
+        chunk = math.gcd(T, chunk) or T
+    n = T // chunk
+
+    def chunk_fn(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    if remat:
+        chunk_fn = jax.checkpoint(chunk_fn)
+    xs_c = jax.tree.map(lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
+    carry, ys = jax.lax.scan(chunk_fn, init, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape((T,) + a.shape[2:]), ys)
+    return carry, ys
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv along T. x: [B, T, D], w: [K, D], state: [B, K-1, D]."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    return out + b[None, None, :], new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (selective SSM) — Jamba's sequence mixer
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0      # 0 -> ceil(d_model / 16)
+    chunk: int = 256
+
+    def inner(self, d_model):
+        return self.expand * d_model
+
+    def rank(self, d_model):
+        return self.dt_rank or -(-d_model // 16)
+
+
+def mamba_init(key, d_model, mc: MambaConfig, dtype=jnp.float32):
+    di, r = mc.inner(d_model), mc.rank(d_model)
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d_model)
+    A = jnp.broadcast_to(jnp.arange(1, mc.d_state + 1, dtype=jnp.float32), (di, mc.d_state))
+    return {
+        "in_proj": jax.random.normal(ks[0], (d_model, 2, di), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (mc.d_conv, di), dtype) * 0.1,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": jax.random.normal(ks[2], (di, r + 2 * mc.d_state), dtype) / math.sqrt(di),
+        "dt_proj": jax.random.normal(ks[3], (r, di), dtype) / math.sqrt(r),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01, jnp.float32))).astype(dtype),
+        "A_log": jnp.log(A).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(ks[4], (di, d_model), dtype) / math.sqrt(di),
+    }
+
+
+def mamba_apply(p, x, *, mode, cache=None, pos=0, mc: MambaConfig):
+    # recurrent mixers iterate time sequentially: replicate T across
+    # the model axis here (a tp-sharded scan axis forces a full gather
+    # per step); dp stays on batch.
+    x = shard_ctx.constrain(x, ("dp", None, None))
+    B, T, d_model = x.shape
+    di, r, S = p["D"].shape[0], mc.rank(d_model), mc.d_state
+    xz = jnp.einsum("btd,dge->btge", x, p["in_proj"])
+    xb, z = xz[:, :, 0], xz[:, :, 1]   # gate/up split on an UNSHARDED axis
+    xb = shard_ctx.constrain(xb, ("dp", None, "tp"))
+    z = shard_ctx.constrain(z, ("dp", None, "tp"))
+    conv_state = cache["conv"] if (cache is not None and mode == "decode") else None
+    xc, new_conv = _causal_conv(xb, p["conv_w"], p["conv_b"], conv_state)
+    if mode != "decode":
+        # prefill must still hand the decoder a valid conv state.
+        K = p["conv_w"].shape[0]
+        pad = jnp.pad(xb, ((0, 0), (K - 1, 0), (0, 0)))
+        new_conv = jax.lax.dynamic_slice_in_dim(pad, pad.shape[1] - (K - 1), K - 1, 1)
+    xc = shard_ctx.constrain(jax.nn.silu(xc), ("dp", None, "tp"))
+    proj = jnp.einsum("bti,ie->bte", xc, p["x_proj"])
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,ri->bti", proj[..., :r], p["dt_proj"]) + p["dt_bias"]
+    )                                                     # [B, T, di]
+    dt = shard_ctx.constrain(dt, ("dp", None, "tp"))
+    Bm, Cm = proj[..., r : r + S], proj[..., r + S :]     # [B, T, S]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # [di, S]
+
+    def step(h, xs):
+        dt_t, B_t, C_t, x_t = xs                          # [B,di],[B,S],[B,S],[B,di]
+        dA = jnp.exp(dt_t[..., None] * A[None])           # [B, di, S]
+        dBx = dt_t[..., None] * B_t[:, None, :] * x_t[..., None]
+        h = dA * h + dBx
+        y = jnp.einsum("bis,bs->bi", h, C_t)
+        return h, y
+
+    xs_t = (
+        dt.swapaxes(0, 1), Bm.swapaxes(0, 1), Cm.swapaxes(0, 1), xc.swapaxes(0, 1)
+    )
+    h0 = (
+        cache["ssm"] if (cache is not None and mode == "decode")
+        else jnp.zeros((B, di, S), jnp.float32)
+    )
+    # shard the recurrent state (and thus every per-step backward residual)
+    # on the model axis: T/chunk boundary states + chunk-length inner
+    # residuals are the memory wall of recurrent backward.
+    h0 = shard_ctx.constrain(h0, ("dp", "tp", None))
+    if mode == "decode":
+        h, ys = jax.lax.scan(step, h0, xs_t)
+    else:
+        h, ys = chunked_scan(step, h0, xs_t, mc.chunk, remat=(mode == "train"))
+    y = ys.swapaxes(0, 1) + xc * p["D"][None, None, :]
+    y = shard_ctx.constrain(y, ("dp", None, "tp"))
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bti,id->btd", y.astype(x.dtype), p["out_proj"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "ssm": h}
+    return out, new_cache
+
+
+def mamba_cache_init(batch, d_model, mc: MambaConfig, dtype=jnp.float32):
+    di = mc.inner(d_model)
+    return {
+        "conv": jnp.zeros((batch, mc.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, mc.d_state), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory, parallelizable) + sLSTM (scalar, recurrent)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    n_heads: int = 4
+    m_proj_factor: float = 2.0
+    s_ffn_factor: float = 4.0 / 3.0
+    d_conv: int = 4
+    chunk: int = 256
+
+
+def mlstm_init(key, d_model, xc: XLSTMConfig, dtype=jnp.float32):
+    di = int(xc.m_proj_factor * d_model)
+    H = xc.n_heads
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d_model)
+    si = 1.0 / math.sqrt(di)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d_model, 2, di), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (xc.d_conv, di), dtype) * 0.1,
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": jax.random.normal(ks[2], (di, di), dtype) * si,
+        "wk": jax.random.normal(ks[3], (di, di), dtype) * si,
+        "wv": jax.random.normal(ks[4], (di, di), dtype) * si,
+        "w_i": jax.random.normal(ks[5], (di, H), dtype) * si,
+        "w_f": jax.random.normal(ks[6], (di, H), dtype) * si + 3.0,  # open f-gate
+        "gn_scale": jnp.ones((di,), dtype),
+        "skip": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(ks[7], (di, d_model), dtype) * si,
+    }
+
+
+def _mlstm_cell(q, k, v, log_i, log_f, state):
+    """One stabilized mLSTM step. q,k,v: [B,H,dh]; log_i/f: [B,H]."""
+    C, n, m = state
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_p = jnp.exp(log_i - m_new)[..., None]
+    f_p = jnp.exp(log_f + m - m_new)[..., None]
+    C = f_p[..., None] * C + i_p[..., None] * (v[..., :, None] * k[..., None, :])
+    n = f_p * n + i_p * k
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), jnp.exp(-m_new)
+    )[..., None]
+    h = jnp.einsum("bhvd,bhd->bhv", C, q) / denom
+    return (C, n, m_new), h
+
+
+def mlstm_apply(p, x, *, mode, cache=None, pos=0, xc: XLSTMConfig):
+    # recurrent mixers iterate time sequentially: replicate T across
+    # the model axis here (a tp-sharded scan axis forces a full gather
+    # per step); dp stays on batch.
+    x = shard_ctx.constrain(x, ("dp", None, None))
+    B, T, d_model = x.shape
+    di = p["conv_b"].shape[0]
+    H = xc.n_heads
+    dh = di // H
+    xz = jnp.einsum("btd,dge->btge", x, p["in_proj"])
+    xb, z = xz[:, :, 0], xz[:, :, 1]   # gate/up split on an UNSHARDED axis
+    xb = shard_ctx.constrain(xb, ("dp", None, "tp"))
+    z = shard_ctx.constrain(z, ("dp", None, "tp"))
+    conv_state = cache["conv"] if (cache is not None and mode == "decode") else None
+    xcv, new_conv = _causal_conv(xb, p["conv_w"], p["conv_b"], conv_state)
+    if mode != "decode":
+        K = p["conv_w"].shape[0]
+        pad = jnp.pad(xb, ((0, 0), (K - 1, 0), (0, 0)))
+        new_conv = jax.lax.dynamic_slice_in_dim(pad, pad.shape[1] - (K - 1), K - 1, 1)
+    xcv = shard_ctx.constrain(jax.nn.silu(xcv), ("dp", None, "tp"))
+    q = jnp.einsum("bti,ij->btj", xcv, p["wq"]).reshape(B, T, H, dh)
+    k = jnp.einsum("bti,ij->btj", xcv, p["wk"]).reshape(B, T, H, dh) / math.sqrt(dh)
+    v = jnp.einsum("bti,ij->btj", xb, p["wv"]).reshape(B, T, H, dh)
+    q = shard_ctx.constrain(q, ("dp", None, None, "tp"))
+    k = shard_ctx.constrain(k, ("dp", None, None, "tp"))
+    v = shard_ctx.constrain(v, ("dp", None, None, "tp"))
+    log_i = jnp.einsum("bti,ih->bth", xb, p["w_i"]).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bti,ih->bth", xb, p["w_f"]).astype(jnp.float32))
+
+    def step(state, xs):
+        q_t, k_t, v_t, li, lf = xs
+        return _mlstm_cell(q_t, k_t, v_t, li, lf, state)
+
+    if cache is not None and mode == "decode":
+        state0 = (cache["C"], cache["n"], cache["m"])
+    else:
+        state0 = (
+            shard_ctx.constrain(jnp.zeros((B, H, dh, dh), jnp.float32),
+                                ("dp", None, "tp", None)),
+            shard_ctx.constrain(jnp.zeros((B, H, dh), jnp.float32),
+                                ("dp", None, "tp")),
+            jnp.full((B, H), -jnp.inf, jnp.float32),
+        )
+    xs_t = tuple(
+        a.swapaxes(0, 1).astype(jnp.float32)
+        for a in (q, k, v, log_i, log_f)
+    )
+    if mode == "decode":
+        state, hs = jax.lax.scan(step, state0, xs_t)
+    else:
+        state, hs = chunked_scan(step, state0, xs_t, xc.chunk, remat=(mode == "train"))
+    h = hs.swapaxes(0, 1).reshape(B, T, di)               # [B, T, di]
+    h = rms_norm(h.astype(x.dtype), p["gn_scale"])        # per-channel norm
+    h = h + p["skip"][None, None, :] * xcv
+    h = h * jax.nn.silu(z)
+    out = jnp.einsum("bti,id->btd", h, p["out_proj"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "C": state[0], "n": state[1], "m": state[2]}
+    return out, new_cache
+
+
+def mlstm_cache_init(batch, d_model, xc: XLSTMConfig, dtype=jnp.float32):
+    di = int(xc.m_proj_factor * d_model)
+    H, dh = xc.n_heads, int(xc.m_proj_factor * d_model) // xc.n_heads
+    return {
+        "conv": jnp.zeros((batch, xc.d_conv - 1, di), dtype),
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -jnp.inf, jnp.float32),
+    }
+
+
+def slstm_init(key, d_model, xc: XLSTMConfig, dtype=jnp.float32):
+    H = xc.n_heads
+    dh = d_model // H
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    ff = int(xc.s_ffn_factor * d_model)
+    return {
+        "w_gates": jax.random.normal(ks[0], (d_model, 4, H, dh), dtype) * s,
+        "r_gates": jax.random.normal(ks[1], (4, H, dh, dh), dtype) / math.sqrt(dh),
+        "b_gates": jnp.zeros((4, H, dh), dtype).at[1].set(3.0),  # open f-gate
+        "gn_scale": jnp.ones((d_model,), dtype),
+        "ffn_in": jax.random.normal(ks[2], (d_model, 2, ff), dtype) * s,
+        "ffn_out": jax.random.normal(ks[3], (ff, d_model), dtype) / math.sqrt(ff),
+    }
+
+
+def _slstm_cell(gx, r, state):
+    """gx: [B, 4, H, dh] input contributions; r: [4, H, dh, dh]."""
+    c, n, h, m = state
+    rec = jnp.einsum("bhd,ghde->bghe", h, r)              # [B, 4, H, dh]
+    z_in, f_in, i_in, o_in = [gx[:, g] + rec[:, g] for g in range(4)]
+    z = jnp.tanh(z_in)
+    o = jax.nn.sigmoid(o_in)
+    log_f = jax.nn.log_sigmoid(f_in)
+    m_new = jnp.maximum(log_f + m, i_in)
+    i_p = jnp.exp(i_in - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c = f_p * c + i_p * z
+    n = f_p * n + i_p
+    h = o * (c / jnp.maximum(n, 1e-6))
+    return (c, n, h, m_new), h
+
+
+def slstm_apply(p, x, *, mode, cache=None, pos=0, xc: XLSTMConfig):
+    # recurrent mixers iterate time sequentially: replicate T across
+    # the model axis here (a tp-sharded scan axis forces a full gather
+    # per step); dp stays on batch.
+    x = shard_ctx.constrain(x, ("dp", None, None))
+    B, T, d_model = x.shape
+    H = xc.n_heads
+    dh = d_model // H
+    gx = jnp.einsum("btd,dghe->btghe", x, p["w_gates"]) + p["b_gates"][None, None]
+    gx = gx.astype(jnp.float32)
+
+    def step(state, gx_t):
+        return _slstm_cell(gx_t, p["r_gates"].astype(jnp.float32), state)
+
+    if cache is not None and mode == "decode":
+        state0 = (cache["sc"], cache["sn"], cache["sh"], cache["sm"])
+    else:
+        zeros = jnp.zeros((B, H, dh), jnp.float32)
+        state0 = (zeros, zeros, zeros, jnp.full((B, H, dh), -jnp.inf))
+    gx_t = gx.swapaxes(0, 1)
+    if mode == "decode":
+        state, hs = jax.lax.scan(step, state0, gx_t)
+    else:
+        state, hs = chunked_scan(step, state0, gx_t, xc.chunk, remat=(mode == "train"))
+    h = hs.swapaxes(0, 1).reshape(B, T, d_model).astype(x.dtype)
+    h = rms_norm(h, p["gn_scale"])
+    ff = jnp.einsum("btd,dgf->btgf", h, p["ffn_in"])
+    ff = jax.nn.gelu(ff[:, :, 0], approximate=True) * ff[:, :, 1]
+    out = jnp.einsum("btf,fd->btd", ff, p["ffn_out"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"sc": state[0], "sn": state[1], "sh": state[2], "sm": state[3]}
+    return out, new_cache
+
+
+def slstm_cache_init(batch, d_model, xc: XLSTMConfig, dtype=jnp.float32):
+    H, dh = xc.n_heads, d_model // xc.n_heads
+    zeros = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"sc": zeros, "sn": zeros, "sh": zeros,
+            "sm": jnp.full((batch, H, dh), -jnp.inf, jnp.float32)}

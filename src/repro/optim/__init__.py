@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from repro.optim.compression import CompressionConfig, compress_grads, decompress_grads
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "cosine_lr",
+    "CompressionConfig", "compress_grads", "decompress_grads",
+]

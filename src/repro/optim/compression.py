@@ -1,0 +1,51 @@
+"""int8 error-feedback gradient compression for cross-pod all-reduce.
+
+At 1000+ nodes the `pod` axis rides DCI links an order of magnitude slower
+than ICI; compressing the pod-axis all-reduce 4x (f32 -> int8 + per-tensor
+scale) trades negligible accuracy (error feedback keeps the quantization
+residual and re-injects it next step) for 4x less cross-pod traffic.
+
+Usage in the train step:
+    g_q, scales, err = compress_grads(grads, err)
+    g_q = lax.psum(g_q_as_int32, 'pod')   # cheap collective
+    grads = decompress_grads(g_q, scales, n_pods)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompressionConfig", "compress_grads", "decompress_grads"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    enabled: bool = False
+    bits: int = 8
+
+
+def _q(x, err):
+    x = x.astype(jnp.float32) + (err if err is not None else 0.0)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    new_err = x - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def compress_grads(grads, err_state=None):
+    leaves, tdef = jax.tree.flatten(grads)
+    errs = jax.tree.leaves(err_state) if err_state is not None else [None] * len(leaves)
+    qs, scales, new_errs = zip(*[_q(g, e) for g, e in zip(leaves, errs)])
+    return (
+        jax.tree.unflatten(tdef, qs),
+        jax.tree.unflatten(tdef, scales),
+        jax.tree.unflatten(tdef, new_errs),
+    )
+
+
+def decompress_grads(q_grads, scales, denom: float = 1.0):
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s / denom, q_grads, scales)

@@ -1,0 +1,3 @@
+from repro.runtime.trainloop import TrainLoop, TrainLoopConfig
+
+__all__ = ["TrainLoop", "TrainLoopConfig"]

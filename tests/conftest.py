@@ -1,0 +1,33 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single CPU device; only launch/dryrun.py forces 512."""
+
+import numpy as np
+import pytest
+
+from repro.core import hnsw_graph as hg
+from repro.data import clustered_vectors
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    """2k clustered vectors + queries + exact ground truth (session-cached)."""
+    n, d, nq, k = 2000, 64, 16, 10
+    vecs = clustered_vectors(n, d, k=24, seed=0)
+    rng = np.random.default_rng(1)
+    queries = vecs[rng.integers(0, n, nq)] + rng.normal(
+        scale=2.0, size=(nq, d)).astype(np.float32)
+    queries = queries.astype(np.float32)
+    d2 = (
+        np.einsum("nd,nd->n", vecs, vecs)[None]
+        - 2 * queries @ vecs.T
+        + np.einsum("qd,qd->q", queries, queries)[:, None]
+    )
+    gt = np.argsort(d2, axis=1, kind="stable")[:, :k]
+    return {"vectors": vecs, "queries": queries, "gt": gt, "k": k}
+
+
+@pytest.fixture(scope="session")
+def built_graph(small_dataset):
+    cfg = hg.HNSWConfig(M=12, ef_construction=80, seed=0)
+    g = hg.build_hnsw(small_dataset["vectors"], cfg)
+    return g, cfg

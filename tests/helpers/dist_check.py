@@ -1,0 +1,68 @@
+"""Distributed ANN correctness worker (run under 8 fake devices).
+
+Asserts:
+  * graph-parallel shard_map search returns the same results as the
+    single-device partitioned engine;
+  * query parallelism (dp axis) returns per-query-identical output.
+Exit code 0 == pass. Launched by tests/test_distributed.py in a subprocess
+so the parent pytest process keeps its 1-device view.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+).strip()
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hnsw_graph as hg
+from repro.core.distributed import DistributedANNEngine
+from repro.core.partitioned import build_partitioned_db, search_partitioned
+from repro.core.search import SearchParams
+from repro.data import clustered_vectors
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    vecs = clustered_vectors(1600, 32, k=16, seed=0)
+    rng = np.random.default_rng(1)
+    queries = vecs[rng.integers(0, 1600, 8)] + rng.normal(
+        scale=1.0, size=(8, 32)).astype(np.float32)
+    queries = queries.astype(np.float32)
+
+    cfg = hg.HNSWConfig(M=8, ef_construction=60)
+    pdb = build_partitioned_db(vecs, 4, cfg)           # 4 partitions / 4 model
+    p = SearchParams(ef=32, k=8)
+
+    # single-device reference
+    pdb_host = pdb._replace(db=jax.tree.map(jnp.asarray, pdb.db))
+    ref_ids, ref_ds, _ = search_partitioned(pdb_host, jnp.asarray(queries), p)
+    ref_ids = np.asarray(ref_ids)
+
+    # graph parallelism over the mesh
+    eng = DistributedANNEngine(pdb, mesh, p)
+    ids, ds = eng.search(queries)
+    ids = np.asarray(ids)
+
+    for b in range(len(queries)):
+        assert set(ids[b]) == set(ref_ids[b]), (b, ids[b], ref_ids[b])
+    np.testing.assert_allclose(np.sort(np.asarray(ds), 1),
+                               np.sort(np.asarray(ref_ds), 1), rtol=1e-5)
+    print("DIST OK: graph-parallel == single-device")
+
+    # query parallelism: batch twice the dp size, same per-query answers
+    q2 = np.concatenate([queries, queries], 0)
+    ids2, _ = eng.search(q2)
+    ids2 = np.asarray(ids2)
+    for b in range(len(queries)):
+        assert set(ids2[b]) == set(ids2[b + len(queries)])
+    print("DIST OK: query-parallel consistent")
+
+
+if __name__ == "__main__":
+    main()

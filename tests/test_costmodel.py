@@ -1,0 +1,67 @@
+"""Calibrate the analytic cost model against XLA's cost_analysis.
+
+XLA counts while-loop bodies once, so calibration uses configs where every
+loop has trip count 1: num_periods=1, attention blocks >= T, loss chunks =
+T, SSM chunk >= T. On such configs cost_analysis is complete and must agree
+with launch/costmodel.py within tolerance.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.launch.costmodel import _count_params, cell_costs
+from repro.models.model import prefill_step
+from repro.models.transformer import init_cache, init_params
+
+T, B = 64, 4
+
+
+def _single_trip(cfg):
+    kw = dict(num_periods=1, prefix_pattern=(), block_q=T, block_k=T,
+              loss_chunk=T, param_dtype=jnp.float32)
+    if cfg.mamba is not None:
+        kw["mamba"] = dataclasses.replace(cfg.mamba, chunk=T)
+    if cfg.xlstm is not None:
+        kw["xlstm"] = dataclasses.replace(cfg.xlstm, chunk=T)
+    return dataclasses.replace(cfg, **kw)
+
+
+@pytest.mark.parametrize("arch,tol", [
+    ("granite_3_8b", 0.30),
+    ("qwen3_14b", 0.30),
+    ("deepseek_v2_lite_16b", 0.45),   # scatter/gather flops are fuzzier
+])
+def test_prefill_flops_match_xla(arch, tol):
+    cfg = _single_trip(reduced_config(arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    cache = init_cache(cfg, B, T)
+    if cfg.embed_inputs:
+        inputs = jnp.zeros((B, T), jnp.int32)
+    else:
+        inputs = jnp.zeros((B, T, cfg.d_model), jnp.float32)
+    lowered = prefill_step.lower(params, {"inputs": inputs}, cache, cfg)
+    got = lowered.compile().cost_analysis()["flops"]
+    want = cell_costs(cfg, "prefill", T, B, n_devices=1, model_ax=1,
+                      dp_ax=1, fsdp=False).flops_per_dev
+    # analytic excludes elementwise ops XLA counts (norms, rope, softmax),
+    # so allow an asymmetric band.
+    ratio = got / want
+    assert (1 - tol) < ratio < (1 + 2 * tol), (
+        f"{arch}: XLA {got/1e6:.1f}MF vs analytic {want/1e6:.1f}MF "
+        f"(ratio {ratio:.2f})")
+
+
+@pytest.mark.parametrize("arch", ["granite_3_8b", "qwen3_14b",
+                                  "deepseek_v2_lite_16b", "jamba_v01_52b",
+                                  "xlstm_350m", "musicgen_large"])
+def test_param_count_matches_init(arch):
+    cfg = reduced_config(arch)
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    actual = sum(l.size for l in jax.tree.leaves(shapes))
+    analytic = _count_params(cfg)
+    assert abs(actual - analytic) / actual < 0.02, (actual, analytic)

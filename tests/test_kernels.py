@@ -1,0 +1,92 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU): shape/dtype
+sweeps per the deliverable."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import l2dist_ref, l2topk_ref, topk_ref
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("bq,bx,d", [
+    (7, 100, 17), (128, 512, 128), (33, 1000, 96), (1, 2048, 128), (64, 64, 64),
+])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_l2dist_matches_ref(bq, bx, d, dtype):
+    q = jnp.asarray(RNG.normal(size=(bq, d)).astype(np.float32)).astype(dtype)
+    x = jnp.asarray(RNG.normal(size=(bx, d)).astype(np.float32)).astype(dtype)
+    got = ops.l2dist(q, x)
+    want = l2dist_ref(q, x)
+    tol = 1e-4 if dtype == np.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,n,k", [
+    (4, 100, 5), (16, 3000, 10), (3, 1024, 32), (8, 4096, 1),
+])
+def test_topk_matches_ref(b, n, k):
+    x = jnp.asarray(RNG.normal(size=(b, n)).astype(np.float32))
+    gv, gi = ops.topk(x, k)
+    wv, wi = topk_ref(x, k)
+    np.testing.assert_allclose(gv, wv, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+@pytest.mark.parametrize("bq,bx,d,k", [
+    (5, 1500, 64, 10), (64, 2048, 128, 20), (1, 999, 32, 8),
+])
+def test_l2topk_fused_matches_ref(bq, bx, d, k):
+    q = jnp.asarray(RNG.normal(size=(bq, d)).astype(np.float32))
+    x = jnp.asarray(RNG.normal(size=(bx, d)).astype(np.float32))
+    gv, gi = ops.l2topk(q, x, k=k)
+    wv, wi = l2topk_ref(q, x, k=k)
+    np.testing.assert_allclose(gv, wv, rtol=1e-3, atol=1e-3)
+    # float ties can reorder ids at equal distance; values must agree.
+    match = (np.asarray(gi) == np.asarray(wi)).mean()
+    assert match > 0.97, match
+
+
+def test_l2topk_handles_padding_rows():
+    """+inf sqnorm padding rows must never appear in the top-k."""
+    q = jnp.asarray(RNG.normal(size=(4, 32)).astype(np.float32))
+    x = jnp.asarray(RNG.normal(size=(700, 32)).astype(np.float32))
+    xsq = jnp.einsum("nd,nd->n", x, x)
+    xsq = xsq.at[100:].set(jnp.inf)                 # only first 100 valid
+    _, gi = ops.l2topk(q, x, xsq=xsq, k=10)
+    assert np.asarray(gi).max() < 100
+
+
+def test_topk_values_sorted_ascending():
+    x = jnp.asarray(RNG.normal(size=(6, 512)).astype(np.float32))
+    gv, _ = ops.topk(x, 16)
+    assert np.all(np.diff(np.asarray(gv), axis=1) >= -1e-7)
+
+
+@pytest.mark.parametrize("bh,t,hd,causal", [
+    (4, 128, 64, True), (2, 100, 32, True), (3, 257, 128, False),
+    (1, 31, 16, False), (8, 300, 64, True),
+])
+def test_flash_attention_matches_ref(bh, t, hd, causal):
+    from repro.kernels.ref import flash_attention_ref
+    q = jnp.asarray(RNG.normal(size=(bh, t, hd)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(bh, t, hd)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(bh, t, hd)).astype(np.float32))
+    got = ops.flash_attention(q, k, v, causal=causal)
+    want = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.ref import flash_attention_ref
+    q = jnp.asarray(RNG.normal(size=(2, 64, 32)).astype(np.float32)).astype(jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(2, 64, 32)).astype(np.float32)).astype(jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(2, 64, 32)).astype(np.float32)).astype(jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=True)
+    want = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)

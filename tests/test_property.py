@@ -1,0 +1,107 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.search import merge_sorted, visited_test_and_set
+from repro.optim.compression import compress_grads, decompress_grads
+
+settings.register_profile("ci", max_examples=50, deadline=None)
+settings.load_profile("ci")
+
+
+# no subnormals: XLA CPU flushes them to zero (FTZ), so tie semantics vs
+# numpy differ below the normal range — not an algorithm property.
+floats = st.floats(min_value=-1e6, max_value=1e6, width=32,
+                   allow_subnormal=False)
+
+
+@given(st.lists(floats, min_size=1, max_size=24),
+       st.lists(floats, min_size=1, max_size=24))
+def test_merge_sorted_is_a_sorted_merge(a, b):
+    ad = np.sort(np.array(a, np.float32))
+    bd = np.sort(np.array(b, np.float32))
+    ai = np.arange(len(ad), dtype=np.int32)
+    bi = 1000 + np.arange(len(bd), dtype=np.int32)
+    od, oi = merge_sorted(jnp.asarray(ad), jnp.asarray(ai),
+                          jnp.asarray(bd), jnp.asarray(bi))
+    od, oi = np.asarray(od), np.asarray(oi)
+    # multiset of values preserved and sorted
+    np.testing.assert_allclose(np.sort(np.concatenate([ad, bd])), od)
+    assert np.all(np.diff(od) >= 0)
+    # ids form a permutation of the inputs
+    assert sorted(oi.tolist()) == sorted(ai.tolist() + bi.tolist())
+
+
+@given(st.lists(floats, min_size=1, max_size=16),
+       st.lists(floats, min_size=1, max_size=16))
+def test_merge_sorted_tie_break_prefers_existing(a, b):
+    """Existing (a) entries must come first among equal distances —
+    matches the numpy oracle's stable concat sort."""
+    ad = np.sort(np.array(a, np.float32))
+    bd = np.sort(np.array(b, np.float32))
+    ai = np.zeros(len(ad), np.int32)          # a marked 0
+    bi = np.ones(len(bd), np.int32)           # b marked 1
+    od, oi = merge_sorted(jnp.asarray(ad), jnp.asarray(ai),
+                          jnp.asarray(bd), jnp.asarray(bi))
+    d = np.concatenate([ad, bd])
+    marks = np.concatenate([np.zeros(len(ad)), np.ones(len(bd))])
+    order = np.argsort(d, kind="stable")
+    np.testing.assert_array_equal(np.asarray(oi), marks[order].astype(np.int32))
+
+
+@given(st.lists(st.integers(min_value=0, max_value=255), min_size=1,
+                max_size=64, unique=True))
+def test_visited_bitmap_test_and_set(ids):
+    ids = np.array(ids, np.int32)
+    bitmap = jnp.zeros(8, jnp.uint32)
+    valid = jnp.ones(len(ids), bool)
+    was, bitmap = visited_test_and_set(bitmap, jnp.asarray(ids), valid)
+    assert not np.asarray(was).any()
+    # second visit: everything flagged
+    was2, bitmap2 = visited_test_and_set(bitmap, jnp.asarray(ids), valid)
+    assert np.asarray(was2).all()
+    np.testing.assert_array_equal(np.asarray(bitmap), np.asarray(bitmap2))
+
+
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=2, max_value=12))
+def test_topk_merge_associative(p, k):
+    """Stage-2 invariant: top-k of concat == top-k of per-partition top-ks
+    (what makes the distributed tree-merge correct)."""
+    rng = np.random.default_rng(p * 100 + k)
+    d = rng.uniform(size=(p, 50)).astype(np.float32)
+    gids = np.arange(p * 50).reshape(p, 50)
+    # per-partition top-k
+    part = np.sort(d, axis=1)[:, :k]
+    part_ids = np.take_along_axis(gids, np.argsort(d, axis=1, kind="stable"), 1)[:, :k]
+    merged = np.sort(part.reshape(-1))[:k]
+    direct = np.sort(d.reshape(-1))[:k]
+    np.testing.assert_allclose(merged, direct)
+
+
+@given(st.lists(floats, min_size=1, max_size=128))
+def test_compression_error_feedback_converges(gs):
+    """Error feedback: quantizing the SAME gradient repeatedly with carried
+    residual must average out — cumulative mean error -> 0."""
+    g = np.array(gs, np.float32)
+    err = None
+    total = np.zeros_like(g)
+    n = 8
+    for _ in range(n):
+        q, s, err = compress_grads({"g": jnp.asarray(g)},
+                                   {"g": err} if err is not None else None)
+        total += np.asarray(decompress_grads(q, s)["g"])
+        err = jnp.asarray(np.asarray(err["g"]))
+        err = {"g": err}
+    scale = max(np.abs(g).max(), 1e-3)
+    np.testing.assert_allclose(total / n, g, atol=scale / 100 + 1e-6)
+
+
+@given(st.integers(min_value=1, max_value=300))
+def test_vocab_padding_is_multiple_of_256(v):
+    from repro.models.transformer import LayerSpec, ModelConfig
+    cfg = ModelConfig(name="t", d_model=8, n_heads=1, n_kv_heads=1, head_dim=8,
+                      d_ff=8, vocab_size=v, pattern=(LayerSpec(),), num_periods=1)
+    assert cfg.padded_vocab % 256 == 0 and cfg.padded_vocab >= v

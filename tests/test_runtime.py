@@ -1,0 +1,71 @@
+"""Fault tolerance: kill-and-resume is bit-exact vs an uninterrupted run."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.data.pipeline import make_batch
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import TrainLoop, TrainLoopConfig
+
+CFG = reduced_config("granite_3_8b")
+OPT = AdamWConfig(lr=1e-3, total_steps=20, warmup_steps=1)
+
+
+def _batch_fn(step):
+    return jax.tree.map(jax.numpy.asarray,
+                        make_batch(CFG, "train", 16, 2, step=step))
+
+
+def _leaves(state):
+    return [np.asarray(x) for x in jax.tree.leaves(state["params"])]
+
+
+def test_restart_is_bit_exact(tmp_path):
+    steps = 8
+    # uninterrupted run
+    loop_a = TrainLoop(CFG, OPT, TrainLoopConfig(
+        ckpt_dir=str(tmp_path / "a"), ckpt_every=4, log_every=100),
+        _batch_fn, log=lambda *a: None)
+    state_a, _ = loop_a.run(steps)
+
+    # run that dies at step 4 ...
+    ckpt_b = str(tmp_path / "b")
+    loop_b = TrainLoop(CFG, OPT, TrainLoopConfig(
+        ckpt_dir=ckpt_b, ckpt_every=4, log_every=100),
+        _batch_fn, log=lambda *a: None)
+    with pytest.raises(RuntimeError, match="simulated node failure"):
+        loop_b.run(steps, die_at_step=4)
+    # ... and a fresh process resuming from its checkpoint
+    loop_c = TrainLoop(CFG, OPT, TrainLoopConfig(
+        ckpt_dir=ckpt_b, ckpt_every=4, log_every=100),
+        _batch_fn, log=lambda *a: None)
+    assert loop_c.step == 4, "did not resume from the committed step"
+    state_c, _ = loop_c.run(steps)
+
+    for a, c in zip(_leaves(state_a), _leaves(state_c)):
+        np.testing.assert_array_equal(a, c)
+
+
+def test_straggler_hook_fires(tmp_path):
+    events = []
+    import time
+
+    slow = {"step": 6}
+
+    def batch_fn(step):
+        if step == slow["step"]:
+            time.sleep(0.6)       # simulated slow host
+        return _batch_fn(step)
+
+    loop = TrainLoop(CFG, OPT, TrainLoopConfig(
+        ckpt_dir=str(tmp_path), ckpt_every=100, log_every=100,
+        straggler_factor=2.5),
+        batch_fn, on_straggler=lambda s, dt, ema: events.append(s),
+        log=lambda *a: None)
+    # warm EMA then hit the slow step; data time counts into step wall time
+    loop.run(8)
+    # the hook is best-effort (timing noise on shared CI), so just check
+    # the mechanism does not crash and events are plausible
+    assert all(isinstance(e, int) for e in events)
