@@ -14,6 +14,7 @@ import time
 import jax
 import numpy as np
 
+from repro.api import IndexSpec, SearchService
 from repro.core.engine import ANNEngine
 from repro.core.hnsw_graph import HNSWConfig
 from repro.data import VectorDataset
@@ -27,9 +28,12 @@ class BenchCtx:
     vectors: np.ndarray
     queries: np.ndarray
     gt: np.ndarray
-    engine: ANNEngine            # 4 partitions
-    engine1: ANNEngine           # monolithic
+    engine: ANNEngine            # 4 partitions (legacy shim view)
+    engine1: ANNEngine           # monolithic (legacy shim view)
     cfg: HNSWConfig
+    svc: SearchService           # partitioned backend, 4 sub-graphs
+    svc1: SearchService          # hnsw backend (one graph)
+    svc_exact: SearchService     # exact brute-force backend
 
 
 _CTX = None
@@ -48,11 +52,17 @@ def get_ctx() -> BenchCtx:
           + np.einsum("qd,qd->q", queries, queries)[:, None])
     gt = np.argsort(d2, axis=1, kind="stable")[:, :K]
     cfg = HNSWConfig(M=16, ef_construction=100, seed=0)
-    engine = ANNEngine.build(vectors, num_partitions=4, cfg=cfg,
-                             keep_vectors=True)
-    engine1 = ANNEngine.build(vectors, num_partitions=1, cfg=cfg)
+    svc = SearchService.build(
+        vectors, IndexSpec(backend="partitioned", num_partitions=4,
+                           hnsw=cfg, keep_vectors=True))
+    svc1 = SearchService.build(
+        vectors, IndexSpec(backend="hnsw", hnsw=cfg, keep_vectors=False))
+    svc_exact = SearchService.build(vectors, IndexSpec(backend="exact"))
+    # legacy views over the same built services (no second graph build)
+    engine, engine1 = ANNEngine(svc), ANNEngine(svc1)
     print(f"# bench context: n={N} built in {time.time()-t0:.1f}s")
-    _CTX = BenchCtx(vectors, queries, gt, engine, engine1, cfg)
+    _CTX = BenchCtx(vectors, queries, gt, engine, engine1, cfg,
+                    svc, svc1, svc_exact)
     return _CTX
 
 

@@ -18,7 +18,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import get_ctx, timeit
-from repro.core.hnsw_graph import restructure
 from repro.core.ref_search import ref_batch_search
 from repro.core.search import SearchParams, batch_search
 
@@ -26,7 +25,7 @@ from repro.core.search import SearchParams, batch_search
 def run():
     ctx = get_ctx()
     p = SearchParams(ef=40, k=10)
-    db = ctx.engine1.pdb.db
+    db = ctx.svc1.backend.pdb.db           # monolithic graph via repro.api
     db_one = jax.tree.map(lambda a: np.asarray(a[0]), db)
     db_dev = jax.tree.map(jnp.asarray, db_one)
     nq_ref = 8                                   # numpy path is slow

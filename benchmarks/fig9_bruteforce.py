@@ -6,11 +6,10 @@ in QPS despite the brute-force design being perfectly compute-efficient.
 
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import get_ctx, timeit
-from repro.core.search import SearchParams
+from repro.api import SearchRequest
 
 
 def run():
@@ -18,11 +17,16 @@ def run():
     n = ctx.vectors.shape[0]
     q = ctx.queries
 
-    ids_h, ds_h, stats = ctx.engine.search_with_stats(q, k=10, ef=40)
-    reads_hnsw = float(np.mean(np.asarray(stats.dist_calcs).sum(axis=0)))
-    us_hnsw = timeit(lambda: ctx.engine.search(q, k=10, ef=40)[0]) / len(q)
+    resp = ctx.svc.search(SearchRequest(queries=q, k=10, ef=40,
+                                        with_stats=True))
+    reads_hnsw = float(np.mean(np.asarray(resp.stats.dist_calcs)))
+    us_hnsw = timeit(
+        lambda: ctx.svc.search(SearchRequest(queries=q, k=10, ef=40)).ids
+    ) / len(q)
 
-    us_bf = timeit(lambda: ctx.engine.bruteforce(q, k=10)[0]) / len(q)
+    us_bf = timeit(
+        lambda: ctx.svc_exact.search(SearchRequest(queries=q, k=10)).ids
+    ) / len(q)
 
     # scale extrapolation: HNSW reads grow ~a*ln(n) (hierarchical graph),
     # brute force reads grow ~n. At the paper's n = 1e9 the measured

@@ -14,7 +14,7 @@ import time
 
 import numpy as np
 
-from repro.core.engine import ANNEngine
+from repro.api import IndexSpec, SearchService
 from repro.core.hnsw_graph import HNSWConfig
 from repro.launch.serve import serve_loop
 
@@ -37,8 +37,12 @@ def main():
 
     print("building 4-partition graph database ...")
     t0 = time.time()
-    engine = ANNEngine.build(db_vectors, num_partitions=4,
-                             cfg=HNSWConfig(M=16, ef_construction=100))
+    # descriptors are L2-normalized upstream, so cosine is the natural
+    # metric — the registry re-normalizes and the kernels minimize 1 - cos.
+    engine = SearchService.build(
+        db_vectors,
+        IndexSpec(metric="cosine", backend="partitioned", num_partitions=4,
+                  hnsw=HNSWConfig(M=16, ef_construction=100)))
     print(f"  built in {time.time()-t0:.1f}s")
 
     # query stream: noisy views of library images

@@ -1,13 +1,31 @@
-"""Quickstart: build a partitioned HNSW engine, search, verify vs exact.
+"""Quickstart for the unified `repro.api` search service.
+
+The whole public surface is three objects:
+
+  IndexSpec     — what to build: metric (l2 / ip / cosine), backend
+                  (exact / hnsw / partitioned / distributed), partition
+                  count, HNSW knobs
+  SearchRequest — one batched call: k, ef, rerank, with_stats
+  SearchService — build/load once, search many times, versioned save()
+
+This script builds the paper's two-stage partitioned engine (§4.1) at its
+SIFT1B operating point (K=10, ef=40), verifies recall against the exact
+backend, then repeats the exercise under the cosine metric to show the
+metric registry end to end.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core.engine import ANNEngine
+from repro.api import IndexSpec, SearchRequest, SearchService, exact_topk_np
 from repro.core.hnsw_graph import HNSWConfig
 from repro.data import VectorDataset
+
+
+def recall_at_k(ids: np.ndarray, gt: np.ndarray, k: int) -> float:
+    return float(np.mean(
+        [len(set(ids[b]) & set(gt[b])) / k for b in range(len(gt))]))
 
 
 def main():
@@ -18,22 +36,41 @@ def main():
 
     # 2) build the two-stage partitioned engine (paper §4.1): 4 sub-graphs,
     #    each independently searchable / independently placeable in HBM.
-    engine = ANNEngine.build(vectors, num_partitions=4,
-                             cfg=HNSWConfig(M=16, ef_construction=100))
+    spec = IndexSpec(backend="partitioned", num_partitions=4,
+                     hnsw=HNSWConfig(M=16, ef_construction=100),
+                     keep_vectors=True)
+    svc = SearchService.build(vectors, spec)
 
     # 3) search (stage 1 per-partition + stage 2 merge) at the paper's
-    #    SIFT1B operating point: K=10, ef=40.
-    ids, dists = engine.search(queries, k=10, ef=40)
-    ids = np.asarray(ids)
+    #    SIFT1B operating point: K=10, ef=40. rerank=True folds the paper's
+    #    host-side stage-2 brute force into one batched device call.
+    resp = svc.search(SearchRequest(queries=queries, k=10, ef=40,
+                                    rerank=True, with_stats=True))
+    ids = np.asarray(resp.ids)
 
-    # 4) verify against the exact brute-force baseline (paper Fig. 9).
-    gt_ids, _ = engine.bruteforce(queries, k=10)
-    gt_ids = np.asarray(gt_ids)
-    recall = np.mean([len(set(ids[b]) & set(gt_ids[b])) / 10
-                      for b in range(len(queries))])
-    print(f"recall@10 (ef=40, 4 partitions): {recall:.3f}")
-    print(f"first query -> ids {ids[0][:5]} dists {np.asarray(dists)[0][:5].round(1)}")
-    assert recall >= 0.9
+    # 4) verify against the exact backend (paper Fig. 9 baseline).
+    gt = exact_topk_np("l2", vectors, queries, 10)
+    r = recall_at_k(ids, gt, 10)
+    reads = float(np.mean(np.asarray(resp.stats.dist_calcs)))
+    print(f"l2     recall@10 (ef=40, 4 partitions): {r:.3f}  "
+          f"(~{reads:.0f} vector reads/query of {len(vectors)})")
+    assert r >= 0.9
+
+    # 5) same engine, cosine metric: the registry normalizes the data and
+    #    the queries at the edge; the graph kernels minimize 1 - cos.
+    svc_cos = SearchService.build(
+        vectors, IndexSpec(metric="cosine", backend="partitioned",
+                           num_partitions=4,
+                           hnsw=HNSWConfig(M=16, ef_construction=100)))
+    ids_cos = np.asarray(svc_cos.search(
+        SearchRequest(queries=queries, k=10, ef=40)).ids)
+    gt_cos = exact_topk_np("cosine", vectors, queries, 10)
+    r_cos = recall_at_k(ids_cos, gt_cos, 10)
+    print(f"cosine recall@10 (ef=40, 4 partitions): {r_cos:.3f}")
+    assert r_cos >= 0.9
+
+    print(f"first query -> ids {ids[0][:5]} "
+          f"dists {np.asarray(resp.dists)[0][:5].round(1)}")
     print("OK")
 
 

@@ -1,0 +1,46 @@
+"""repro.api — the unified search-service surface.
+
+One request/response API over every engine in the repo: exact brute force,
+monolithic HNSW, the paper's partitioned two-stage engine, and the
+mesh-distributed variant. See api/README.md for the backend matrix.
+"""
+
+from repro.api.backends import (
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from repro.api.metrics import (
+    Metric,
+    available_metrics,
+    exact_topk_np,
+    get_metric,
+    register_metric,
+)
+from repro.api.rerank import batched_rerank
+from repro.api.service import SearchService
+from repro.api.types import (
+    FORMAT_VERSION,
+    IndexSpec,
+    QueryStats,
+    SearchRequest,
+    SearchResponse,
+)
+
+__all__ = [
+    "FORMAT_VERSION",
+    "IndexSpec",
+    "SearchRequest",
+    "SearchResponse",
+    "QueryStats",
+    "SearchService",
+    "Metric",
+    "register_metric",
+    "get_metric",
+    "available_metrics",
+    "exact_topk_np",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "batched_rerank",
+]

@@ -1,0 +1,285 @@
+"""Backend registry: four engines, one search contract.
+
+Every backend answers the same call — `search(queries, k, ef, rerank,
+with_stats)` over metric-prepared queries — and exposes a `state_tree()` /
+`from_state()` pair the service uses for versioned save/load. Selection
+happens through `IndexSpec.backend`:
+
+  exact       : blocked brute-force scan (paper Fig. 9 baseline); ignores ef
+  hnsw        : one monolithic graph (partitioned with P=1)
+  partitioned : the paper's two-stage engine — P sub-graphs + device merge
+  distributed : partitions sharded over the mesh `model` axis with an
+                all-gather stage-2 merge (paper Fig. 10/11)
+
+`register_backend` is open: NDSEARCH-style near-data engines or quantized
+variants plug in without touching the service layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.rerank import batched_rerank
+from repro.api.types import IndexSpec, QueryStats
+from repro.core import hnsw_graph as hg
+from repro.core.bruteforce import bruteforce_topk
+from repro.core.partitioned import (
+    PartitionedDB,
+    build_partitioned_db,
+    search_partitioned,
+    search_partitioned_candidates,
+)
+from repro.core.search import SearchParams
+
+__all__ = ["register_backend", "get_backend", "available_backends",
+           "ExactBackend", "HNSWBackend", "PartitionedBackend",
+           "DistributedBackend"]
+
+_BACKENDS: dict[str, type] = {}
+
+
+def register_backend(name: str):
+    def deco(cls):
+        cls.name = name
+        _BACKENDS[name] = cls
+        return cls
+    return deco
+
+
+def get_backend(name: str) -> type:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {sorted(_BACKENDS)}"
+        ) from None
+
+
+def available_backends() -> list[str]:
+    return sorted(_BACKENDS)
+
+
+def _device_vectors(vectors: np.ndarray):
+    """Raw vectors + sqnorms as device arrays (rerank / exact scoring)."""
+    v = jnp.asarray(vectors, jnp.float32)
+    return v, jnp.einsum("nd,nd->n", v, v)
+
+
+# ---------------------------------------------------------------------------
+# exact
+# ---------------------------------------------------------------------------
+
+
+@register_backend("exact")
+class ExactBackend:
+    """Blocked exact scan; the ground-truth engine and the Fig. 9 baseline."""
+
+    uses_graph = False
+    CHUNK = 512
+
+    def __init__(self, spec: IndexSpec, raw: np.ndarray):
+        self.spec = spec
+        self.raw = np.asarray(raw, np.float32)
+        n, d = self.raw.shape
+        n_pad = ((n + self.CHUNK - 1) // self.CHUNK) * self.CHUNK
+        vp = np.zeros((n_pad, d), np.float32)
+        vp[:n] = self.raw
+        sq = np.full(n_pad, np.inf, np.float32)   # +inf == pad marker
+        sq[:n] = np.einsum("nd,nd->n", self.raw, self.raw)
+        self.vectors = jnp.asarray(vp)
+        self.sqnorms = jnp.asarray(sq)
+        self.n = n
+
+    @classmethod
+    def build(cls, vectors: np.ndarray, spec: IndexSpec, mesh=None):
+        return cls(spec, vectors)
+
+    def search(self, queries, k: int, ef: int, rerank: bool,
+               with_stats: bool):
+        ids, dists = bruteforce_topk(
+            self.vectors, self.sqnorms, jnp.asarray(queries), k=k,
+            chunk=self.CHUNK, metric=self.spec.metric)
+        stats = None
+        if with_stats:
+            b = ids.shape[0]
+            stats = QueryStats(dist_calcs=jnp.full((b,), self.n, jnp.int32))
+        return ids, dists, stats
+
+    def state_tree(self) -> dict:
+        return {"exact": {"raw": self.raw},
+                "meta": {"n": jnp.int32(self.n),
+                         "dim": jnp.int32(self.raw.shape[1])}}
+
+    @classmethod
+    def from_state(cls, spec: IndexSpec, leaves: dict, mesh=None):
+        return cls(spec, leaves["exact/raw"])
+
+
+# ---------------------------------------------------------------------------
+# partitioned (and its P=1 alias, hnsw)
+# ---------------------------------------------------------------------------
+
+
+@register_backend("partitioned")
+class PartitionedBackend:
+    """The paper's engine: P accelerator-resident sub-graphs, stage-2 merge
+    on device, optional exact rerank over the P*K intermediates."""
+
+    uses_graph = True
+    forced_partitions: int | None = None
+
+    def __init__(self, spec: IndexSpec, pdb: PartitionedDB,
+                 raw: np.ndarray | None = None):
+        self.spec = spec
+        self.pdb = pdb
+        self.raw = None if raw is None else np.asarray(raw, np.float32)
+        if self.raw is not None:
+            self.dev_vectors, self.dev_sqnorms = _device_vectors(self.raw)
+        else:
+            self.dev_vectors = self.dev_sqnorms = None
+
+    @classmethod
+    def build(cls, vectors: np.ndarray, spec: IndexSpec, mesh=None):
+        p = cls.forced_partitions or spec.num_partitions
+        pdb = build_partitioned_db(vectors, p, spec.hnsw)
+        pdb = PartitionedDB(db=jax.tree.map(jnp.asarray, pdb.db),
+                            num_partitions=pdb.num_partitions, dim=pdb.dim)
+        return cls(spec, pdb, raw=vectors if spec.keep_vectors else None)
+
+    def params(self, k: int, ef: int) -> SearchParams:
+        return SearchParams(ef=ef, k=k, metric=self.spec.metric)
+
+    def search(self, queries, k: int, ef: int, rerank: bool,
+               with_stats: bool):
+        p = self.params(k, ef)
+        q = jnp.asarray(queries)
+        if rerank:
+            if self.dev_vectors is None:
+                raise ValueError(
+                    "rerank=True needs the raw vectors: build the index "
+                    "with IndexSpec(keep_vectors=True)")
+            cand, _, st = search_partitioned_candidates(self.pdb, q, p)
+            ids, dists = batched_rerank(
+                self.dev_vectors, self.dev_sqnorms, q, cand, k,
+                self.spec.metric)
+        else:
+            ids, dists, st = search_partitioned(self.pdb, q, p)
+        stats = None
+        if with_stats:
+            stats = QueryStats(hops=st.hops.sum(axis=0),
+                               dist_calcs=st.dist_calcs.sum(axis=0))
+        return ids, dists, stats
+
+    def state_tree(self) -> dict:
+        tree = {"db": self.pdb.db._asdict(),
+                "meta": {"num_partitions": jnp.int32(self.pdb.num_partitions),
+                         "dim": jnp.int32(self.pdb.dim)}}
+        if self.raw is not None:
+            tree["vectors"] = {"raw": self.raw}
+        return tree
+
+    @classmethod
+    def from_state(cls, spec: IndexSpec, leaves: dict, mesh=None):
+        db = hg.DeviceDB(**{k.split("/", 1)[1]: jnp.asarray(v)
+                            for k, v in leaves.items()
+                            if k.startswith("db/")})
+        pdb = PartitionedDB(db=db,
+                            num_partitions=int(leaves["meta/num_partitions"]),
+                            dim=int(leaves["meta/dim"]))
+        return cls(spec, pdb, raw=leaves.get("vectors/raw"))
+
+
+@register_backend("hnsw")
+class HNSWBackend(PartitionedBackend):
+    """Single monolithic graph — partitioned with exactly one partition."""
+
+    forced_partitions = 1
+
+
+# ---------------------------------------------------------------------------
+# distributed
+# ---------------------------------------------------------------------------
+
+
+@register_backend("distributed")
+class DistributedBackend(PartitionedBackend):
+    """Graph parallelism over the mesh `model` axis (paper §6.3): each
+    device searches only its resident sub-graphs; stage 2 is an all-gather
+    + rank merge. Jitted search fns are cached per (k, ef)."""
+
+    def __init__(self, spec: IndexSpec, pdb: PartitionedDB, mesh,
+                 raw: np.ndarray | None = None):
+        super().__init__(spec, pdb, raw=raw)
+        self.mesh = mesh
+        self._fns: dict = {}
+
+    @classmethod
+    def build(cls, vectors: np.ndarray, spec: IndexSpec, mesh=None):
+        from repro.core.distributed import shard_db
+        mesh = mesh or _default_mesh()
+        n_model = mesh.shape["model"]
+        if spec.num_partitions % n_model != 0:
+            raise ValueError(
+                f"num_partitions={spec.num_partitions} must divide over "
+                f"the mesh model axis ({n_model})")
+        pdb = build_partitioned_db(vectors, spec.num_partitions, spec.hnsw)
+        pdb = shard_db(pdb, mesh)
+        return cls(spec, pdb, mesh,
+                   raw=vectors if spec.keep_vectors else None)
+
+    def _fn(self, k: int, ef: int, merge: bool = True):
+        key = (k, ef, merge)
+        if key not in self._fns:
+            from repro.core.distributed import make_distributed_search
+            from repro.launch.mesh import dp_axes
+            maxM0 = int(self.pdb.db.l0_nbrs.shape[-1])
+            self._fns[key] = make_distributed_search(
+                self.mesh, self.params(k, ef), maxM0,
+                graph_axes=("model",), query_axes=dp_axes(self.mesh),
+                merge=merge)
+        return self._fns[key]
+
+    def search(self, queries, k: int, ef: int, rerank: bool,
+               with_stats: bool):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import dp_axes
+        dp = dp_axes(self.mesh)
+        q = jax.device_put(
+            jnp.asarray(queries),
+            NamedSharding(self.mesh, P(dp if dp else None, None)))
+        if rerank:
+            if self.dev_vectors is None:
+                raise ValueError(
+                    "rerank=True needs the raw vectors: build the index "
+                    "with IndexSpec(keep_vectors=True)")
+            # unmerged P*k candidate pool, exactly re-scored (stage 2)
+            cand, _, calcs = self._fn(k, ef, merge=False)(self.pdb.db, q)
+            ids, dists = batched_rerank(
+                self.dev_vectors, self.dev_sqnorms, jnp.asarray(queries),
+                cand, k, self.spec.metric)
+        else:
+            ids, dists, calcs = self._fn(k, ef)(self.pdb.db, q)
+        stats = None
+        if with_stats:
+            stats = QueryStats(dist_calcs=calcs[:, 0])
+        return ids, dists, stats
+
+    @classmethod
+    def from_state(cls, spec: IndexSpec, leaves: dict, mesh=None):
+        from repro.core.distributed import shard_db
+        mesh = mesh or _default_mesh()
+        db = hg.DeviceDB(**{k.split("/", 1)[1]: np.asarray(v)
+                            for k, v in leaves.items()
+                            if k.startswith("db/")})
+        pdb = PartitionedDB(db=db,
+                            num_partitions=int(leaves["meta/num_partitions"]),
+                            dim=int(leaves["meta/dim"]))
+        pdb = shard_db(pdb, mesh)
+        return cls(spec, pdb, mesh, raw=leaves.get("vectors/raw"))
+
+
+def _default_mesh():
+    from repro.launch.mesh import make_mesh
+    return make_mesh((len(jax.devices()),), ("model",))

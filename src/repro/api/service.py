@@ -1,0 +1,130 @@
+"""SearchService: the single public entry point over every backend.
+
+Mirrors the platform dataflow of paper Fig. 4 — build (or load) once, then
+stream batched requests — but with the backend, metric, and persistence
+story behind one typed surface:
+
+    spec = IndexSpec(metric="cosine", backend="partitioned",
+                     num_partitions=4)
+    svc = SearchService.build(vectors, spec)
+    resp = svc.search(SearchRequest(queries, k=10, ef=40, rerank=True))
+    svc.save("/ckpt/index")                 # versioned; step auto-advances
+    svc2 = SearchService.load("/ckpt/index")  # latest committed version
+
+On-disk layout:  <path>/index_manifest.json   (format version + IndexSpec)
+                 <path>/step_<N>/             (checkpoint-store versions;
+                                               load opens the latest
+                                               committed one)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.api import metrics as _metrics
+from repro.api.backends import get_backend
+from repro.api.types import (
+    FORMAT_VERSION,
+    IndexSpec,
+    SearchRequest,
+    SearchResponse,
+)
+from repro.checkpoint import latest_step, save_checkpoint
+
+__all__ = ["SearchService", "MANIFEST_NAME", "read_step_leaves"]
+
+MANIFEST_NAME = "index_manifest.json"
+
+
+def read_step_leaves(path: str, step: int) -> dict:
+    """Flat {leaf-path: np.ndarray} view of one committed checkpoint step."""
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    return {e["path"]: np.load(os.path.join(d, e["file"] + ".npy"))
+            for e in manifest["leaves"]}
+
+
+class SearchService:
+    """Build/load once, search many times — any backend, any metric."""
+
+    def __init__(self, spec: IndexSpec, backend):
+        self.spec = spec
+        self.backend = backend
+        self.metric = _metrics.get_metric(spec.metric)
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def build(cls, vectors, spec: IndexSpec | None = None, *,
+              mesh=None) -> "SearchService":
+        """Build an index over raw vectors according to the spec. The
+        metric's data preprocessing (e.g. cosine normalization) happens
+        here — backends only ever see metric-prepared vectors."""
+        spec = spec or IndexSpec()
+        metric = _metrics.get_metric(spec.metric)     # validates the name
+        backend_cls = get_backend(spec.backend)       # validates the name
+        if getattr(backend_cls, "uses_graph", True) and not metric.graph_safe:
+            raise ValueError(
+                f"metric {spec.metric!r} is not graph-safe: the HNSW graphs "
+                f"are built with L2 geometry, so graph search under it is "
+                f"unreliable — use backend='exact', or normalize your data "
+                f"(then ip == cosine)")
+        prepared = metric.prepare_data(np.asarray(vectors))
+        return cls(spec, backend_cls.build(prepared, spec, mesh=mesh))
+
+    # -- serving ------------------------------------------------------------
+
+    def search(self, request: SearchRequest) -> SearchResponse:
+        """One batched request; accepts a raw query array as shorthand."""
+        if not isinstance(request, SearchRequest):
+            request = SearchRequest(queries=request)
+        q = request.queries
+        if self.metric.normalize_queries:
+            q = self.metric.prepare_queries(np.asarray(q))
+        # else: leave device arrays on device — the kernels cast to f32
+        # themselves, so no host round-trip on the hot path
+        ids, dists, stats = self.backend.search(
+            q, k=request.k, ef=request.ef, rerank=request.rerank,
+            with_stats=request.with_stats)
+        return SearchResponse(ids=ids, dists=dists, stats=stats)
+
+    # -- persistence --------------------------------------------------------
+
+    def save(self, path: str, step: int | None = None) -> str:
+        """Persist a new version. Steps auto-advance (0, 1, 2, ...) so
+        repeated saves never clobber a committed version; `load` opens the
+        latest committed one."""
+        if step is None:
+            prev = latest_step(path)
+            step = 0 if prev is None else prev + 1
+        out = save_checkpoint(path, step, self.backend.state_tree())
+        manifest = {"format_version": FORMAT_VERSION,
+                    "spec": self.spec.to_json(),
+                    "latest_saved_step": step}
+        with open(os.path.join(path, MANIFEST_NAME), "w") as f:
+            json.dump(manifest, f, indent=1)
+        return out
+
+    @classmethod
+    def load(cls, path: str, *, mesh=None) -> "SearchService":
+        """Re-open the latest committed version of a saved index."""
+        with open(os.path.join(path, MANIFEST_NAME)) as f:
+            manifest = json.load(f)
+        version = manifest.get("format_version")
+        if version != FORMAT_VERSION:
+            raise ValueError(
+                f"index at {path!r} has format_version={version}; "
+                f"this build reads version {FORMAT_VERSION}")
+        spec = IndexSpec.from_json(manifest["spec"])
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(
+                f"no committed checkpoint step under {path!r}")
+        leaves = read_step_leaves(path, step)
+        backend = get_backend(spec.backend).from_state(spec, leaves,
+                                                       mesh=mesh)
+        return cls(spec, backend)

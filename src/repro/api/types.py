@@ -1,0 +1,100 @@
+"""Typed request/response surface of the search service.
+
+These are the only objects a client needs: an `IndexSpec` describes *what*
+to build (metric, backend, partitioning, HNSW knobs), a `SearchRequest`
+describes *one batched call* (k, ef, rerank, stats), and a `SearchResponse`
+carries the results plus optional per-query statistics (the paper's
+"number of vector reads", Fig. 9).
+
+The spec round-trips through JSON — it is embedded verbatim in the on-disk
+index manifest (service.save/load), so a saved index knows how to
+reconstruct itself.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core.hnsw_graph import HNSWConfig
+
+__all__ = ["IndexSpec", "SearchRequest", "SearchResponse", "QueryStats",
+           "FORMAT_VERSION"]
+
+# Version of the on-disk index layout (manifest + checkpoint step dirs).
+# Bump when the backend state trees change incompatibly.
+FORMAT_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """Everything needed to build (or re-open) an index.
+
+    metric  : "l2" | "ip" | "cosine" (see api.metrics for the registry)
+    backend : "exact" | "hnsw" | "partitioned" | "distributed"
+              (see api.backends; "hnsw" == "partitioned" with one partition)
+    num_partitions : stage-1 sub-graph count (paper §4.1)
+    hnsw    : graph construction knobs (ignored by the exact backend)
+    keep_vectors : retain the raw vectors alongside the graph — required
+              for `SearchRequest.rerank` and saved with the index. Off by
+              default: it costs a second copy of the dataset in device
+              memory (and in every saved version).
+    """
+
+    metric: str = "l2"
+    backend: str = "partitioned"
+    num_partitions: int = 1
+    hnsw: HNSWConfig = dataclasses.field(default_factory=HNSWConfig)
+    keep_vectors: bool = False
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["hnsw"] = dataclasses.asdict(self.hnsw)
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "IndexSpec":
+        d = dict(d)
+        hnsw_fields = {f.name for f in dataclasses.fields(HNSWConfig)}
+        hnsw = HNSWConfig(**{k: v for k, v in d.pop("hnsw", {}).items()
+                             if k in hnsw_fields})
+        known = {f.name for f in dataclasses.fields(cls)} - {"hnsw"}
+        return cls(hnsw=hnsw, **{k: v for k, v in d.items() if k in known})
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchRequest:
+    """One batched search call.
+
+    queries : [B, D] array-like
+    k       : results per query
+    ef      : beam width (graph backends; the exact backend ignores it)
+    rerank  : recompute exact distances over the stage-1 candidate pool on
+              device (the paper's host-side stage 2, folded into the batch)
+    with_stats : return per-query hop / distance-evaluation counts
+    """
+
+    queries: Any
+    k: int = 10
+    ef: int = 40
+    rerank: bool = False
+    with_stats: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryStats:
+    """Per-query counters; `None` where a backend does not track one."""
+
+    hops: Any = None          # [B] candidate pops at layer 0
+    dist_calcs: Any = None    # [B] distance evaluations == "vector reads"
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResponse:
+    """ids/dists are [B, k]; -1 / +inf mark empty slots. Arrays are
+    whatever the backend produced (device arrays on the hot path) — call
+    `np.asarray` at the edge if host copies are needed."""
+
+    ids: Any
+    dists: Any
+    stats: QueryStats | None = None

@@ -1,5 +1,9 @@
 """The paper's contribution: two-stage partitioned HNSW search for
-accelerator-resident graph databases (SmartSSD -> TPU adaptation)."""
+accelerator-resident graph databases (SmartSSD -> TPU adaptation).
+
+These are the engine primitives. The public serving surface lives in
+`repro.api` (IndexSpec / SearchRequest / SearchService); `ANNEngine` is a
+deprecated shim kept for existing callers."""
 
 from repro.core.hnsw_graph import HNSWConfig, DeviceDB, build_hnsw, restructure
 from repro.core.search import SearchParams, batch_search

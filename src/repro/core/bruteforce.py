@@ -17,16 +17,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.search import merge_sorted
+from repro.core.search import merge_sorted, metric_distance
 
 __all__ = ["bruteforce_topk"]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "chunk"))
-def bruteforce_topk(vectors, sqnorms, queries, k: int = 10, chunk: int = 4096):
-    """Exact k smallest squared-L2 ids/distances for each query.
+@functools.partial(jax.jit, static_argnames=("k", "chunk", "metric"))
+def bruteforce_topk(vectors, sqnorms, queries, k: int = 10, chunk: int = 4096,
+                    metric: str = "l2"):
+    """Exact k smallest ids/distances for each query under `metric`.
 
-    vectors: [N, D] (N % chunk == 0 after padding; pad rows have sqnorm=+inf)
+    vectors: [N, D] (N % chunk == 0 after padding; pad rows have sqnorm=+inf —
+             the +inf sqnorm is the pad marker for every metric)
     queries: [B, D]
     returns: ids [B, k] int32, dists [B, k] float32
     """
@@ -42,8 +44,9 @@ def bruteforce_topk(vectors, sqnorms, queries, k: int = 10, chunk: int = 4096):
     def step(carry, xs):
         run_d, run_i = carry               # [B, k] sorted ascending
         v, s, off = xs
-        d2 = s[None, :] - 2.0 * (queries @ v.T.astype(jnp.float32)) + qsq[:, None]
-        d2 = jnp.maximum(d2, 0.0)
+        dot = queries @ v.T.astype(jnp.float32)
+        d2 = metric_distance(metric, dot, s[None, :], qsq[:, None])
+        d2 = jnp.where(jnp.isinf(s)[None, :], jnp.inf, d2)
         cd, ci = jax.lax.top_k(-d2, k)     # [B, k] largest of -d2 == smallest d2
         cd = -cd
         cids = off + ci.astype(jnp.int32)

@@ -47,7 +47,8 @@ def _dp_spec(mesh):
 
 
 def make_distributed_search(mesh, p: SearchParams, maxM0: int,
-                            graph_axes=("model",), query_axes=None):
+                            graph_axes=("model",), query_axes=None,
+                            merge: bool = True):
     """Builds the jitted two-stage distributed search for a mesh.
 
     graph_axes : mesh axes the partitions shard over. For the SIFT1B-scale
@@ -55,6 +56,11 @@ def make_distributed_search(mesh, p: SearchParams, maxM0: int,
         partition per chip, the paper's one-sub-graph-per-SmartSSD mapping.
     query_axes : mesh axes the query batch shards over (e.g. ("pod",) across
         pods). None -> queries replicated over the graph axes.
+    merge : True -> (ids[B, k], dists[B, k], calcs[B, 1]) after the stage-2
+        rank merge. False -> the gathered unmerged candidate pool
+        (ids[B, P*k], dists[B, P*k], calcs[B, 1]) for an external rerank.
+    calcs is the per-query distance-evaluation count summed over every
+    partition on every device (the Fig. 9 "vector reads").
     """
     p = p.resolve(maxM0)
     query_axes = tuple(query_axes or ())
@@ -75,17 +81,19 @@ def make_distributed_search(mesh, p: SearchParams, maxM0: int,
         # [P_loc, B_loc, k] -> [B_loc, P_loc * k]
         ids = jnp.swapaxes(ids, 0, 1).reshape(queries.shape[0], -1)
         ds = jnp.swapaxes(ds, 0, 1).reshape(queries.shape[0], -1)
+        calcs = jnp.sum(stats.dist_calcs, axis=0)      # [B_loc] local reads
         # stage 2: gather candidates across the graph axes, rank-merge.
         all_ids = ids
         all_ds = ds
         for ax in graph_axes:
             all_ids = jax.lax.all_gather(all_ids, ax, axis=1, tiled=True)
             all_ds = jax.lax.all_gather(all_ds, ax, axis=1, tiled=True)
-        order = jnp.argsort(all_ds, axis=1, stable=True)[:, : p.k]
-        out_i = jnp.take_along_axis(all_ids, order, axis=1)
-        out_d = jnp.take_along_axis(all_ds, order, axis=1)
-        return out_i, out_d, jnp.sum(stats.dist_calcs)[None, None].repeat(
-            queries.shape[0], 0)
+            calcs = jax.lax.psum(calcs, ax)
+        if merge:
+            order = jnp.argsort(all_ds, axis=1, stable=True)[:, : p.k]
+            all_ids = jnp.take_along_axis(all_ids, order, axis=1)
+            all_ds = jnp.take_along_axis(all_ds, order, axis=1)
+        return all_ids, all_ds, calcs[:, None]
 
     return jax.jit(_search)
 

@@ -1,44 +1,51 @@
-"""High-level ANN engine API (single-host; distributed version in
-core/distributed.py).
+"""Deprecated single-host engine shim.
 
-Mirrors the platform dataflow of paper Fig. 4: the bulk tier (host / object
-store) holds all partitions, the engine loads them into the accelerator
-memory once, and queries stream through without touching the bulk tier
-again. `rerank=True` reproduces the paper's host-side stage-2 brute force
-over raw vectors exactly.
+`ANNEngine` predates the unified `repro.api` surface and is kept so
+existing callers and tests continue to work. It is now a thin wrapper over
+`repro.api.SearchService` with the `partitioned` backend — new code should
+use `repro.api` directly:
+
+    from repro.api import IndexSpec, SearchRequest, SearchService
+    svc = SearchService.build(vectors, IndexSpec(num_partitions=4))
+    resp = svc.search(SearchRequest(queries, k=10, ef=40))
 """
 
 from __future__ import annotations
 
-import dataclasses
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hnsw_graph as hg
 from repro.core.bruteforce import bruteforce_topk
-from repro.core.partitioned import (
-    PartitionedDB,
-    build_partitioned_db,
-    search_partitioned,
-)
+from repro.core.partitioned import PartitionedDB, search_partitioned
 from repro.core.search import SearchParams
 
 __all__ = ["ANNEngine"]
 
 
-@dataclasses.dataclass
 class ANNEngine:
-    """Build once, search many times.
+    """Build once, search many times (deprecated: use repro.api).
 
     >>> eng = ANNEngine.build(vectors, num_partitions=4)
     >>> ids, dists = eng.search(queries, k=10, ef=40)
     """
 
-    pdb: PartitionedDB
-    cfg: hg.HNSWConfig
-    vectors: np.ndarray | None = None   # kept only if rerank is requested
+    def __init__(self, service):
+        self._service = service
+
+    # -- legacy attribute surface (benchmarks poke at these) ----------------
+
+    @property
+    def pdb(self) -> PartitionedDB:
+        return self._service.backend.pdb
+
+    @property
+    def cfg(self) -> hg.HNSWConfig:
+        return self._service.spec.hnsw
+
+    @property
+    def vectors(self) -> np.ndarray | None:
+        return self._service.backend.raw
 
     @classmethod
     def build(
@@ -48,70 +55,66 @@ class ANNEngine:
         cfg: hg.HNSWConfig | None = None,
         keep_vectors: bool = False,
     ) -> "ANNEngine":
-        cfg = cfg or hg.HNSWConfig()
-        pdb = build_partitioned_db(vectors, num_partitions, cfg)
-        pdb = PartitionedDB(
-            db=jax.tree.map(jnp.asarray, pdb.db),
-            num_partitions=pdb.num_partitions,
-            dim=pdb.dim,
-        )
-        return cls(pdb=pdb, cfg=cfg, vectors=vectors if keep_vectors else None)
+        from repro.api import IndexSpec, SearchService
+
+        spec = IndexSpec(backend="partitioned",
+                         num_partitions=num_partitions,
+                         hnsw=cfg or hg.HNSWConfig(),
+                         keep_vectors=keep_vectors)
+        return cls(SearchService.build(vectors, spec))
 
     def search(self, queries, k: int = 10, ef: int = 40, rerank: bool = False):
-        p = SearchParams(ef=ef, k=k)
-        ids, dists, _ = search_partitioned(self.pdb, jnp.asarray(queries), p)
-        if rerank:
-            ids, dists = self._rerank(np.asarray(queries), np.asarray(ids), k)
-        return ids, dists
+        from repro.api import SearchRequest
+
+        resp = self._service.search(
+            SearchRequest(queries=queries, k=k, ef=ef, rerank=rerank))
+        if rerank:                       # the old _rerank returned host arrays
+            return np.asarray(resp.ids), np.asarray(resp.dists)
+        return resp.ids, resp.dists
 
     def search_with_stats(self, queries, k: int = 10, ef: int = 40):
-        p = SearchParams(ef=ef, k=k)
-        return search_partitioned(self.pdb, jnp.asarray(queries), p)
-
-    def _rerank(self, queries: np.ndarray, ids: np.ndarray, k: int):
-        """Paper stage 2: exact distances over the P*K intermediate results."""
-        assert self.vectors is not None, "build with keep_vectors=True to rerank"
-        out_i = np.full((ids.shape[0], k), -1, np.int32)
-        out_d = np.full((ids.shape[0], k), np.inf, np.float32)
-        for b, (q, row) in enumerate(zip(queries, ids)):
-            cand = np.unique(row[row >= 0])
-            d = np.einsum("nd,nd->n", self.vectors[cand] - q, self.vectors[cand] - q)
-            order = np.argsort(d, kind="stable")[:k]
-            out_i[b, : len(order)] = cand[order]
-            out_d[b, : len(order)] = d[order]
-        return out_i, out_d
+        """Raw (ids, dists, SearchStats) with per-partition [P, B] counters
+        — the historical shape benchmarks reduce themselves."""
+        svc = self._service
+        q = svc.metric.prepare_queries(np.asarray(queries))
+        p = SearchParams(ef=ef, k=k, metric=svc.spec.metric)
+        return search_partitioned(self.pdb, jnp.asarray(q), p)
 
     def save(self, path: str):
-        """Persist the restructured partitioned DB (the paper's one-time SSD
-        initialization, Fig. 4 step 1) via the checkpoint store."""
-        from repro.checkpoint import save_checkpoint
-        tree = {"db": self.pdb.db._asdict(),
-                "meta": {"num_partitions": jnp.int32(self.pdb.num_partitions),
-                         "dim": jnp.int32(self.pdb.dim)}}
-        return save_checkpoint(path, 0, tree)
+        """Persist via the versioned api manifest (Fig. 4 step 1)."""
+        return self._service.save(path)
 
     @classmethod
     def load(cls, path: str, cfg: hg.HNSWConfig | None = None) -> "ANNEngine":
-        """Restore a saved engine (the SSD -> HBM fetch of Fig. 4 step 2)."""
-        import json as _json
-        import os as _os
+        """Restore the latest committed version (Fig. 4 step 2). The step
+        is discovered through the checkpoint store — no hardcoded paths.
+        `cfg` overrides the persisted HNSW knobs (the pre-manifest format
+        could not store them; honored for legacy callers). Indexes saved
+        before the manifest existed (bare step dirs) still load: the spec
+        is synthesized from `cfg` and the stored partition count."""
+        import dataclasses
+        import os
 
-        import numpy as _np
-        from repro.checkpoint import restore_checkpoint
-        d = _os.path.join(path, "step_00000000")
-        with open(_os.path.join(d, "manifest.json")) as f:
-            manifest = _json.load(f)
-        leaves = {}
-        for e in manifest["leaves"]:
-            arr = _np.load(_os.path.join(d, e["file"] + ".npy"))
-            leaves[e["path"]] = arr
-        db = hg.DeviceDB(**{k.split("/", 1)[1]: jnp.asarray(v)
-                            for k, v in leaves.items()
-                            if k.startswith("db/")})
-        pdb = PartitionedDB(db=db,
-                            num_partitions=int(leaves["meta/num_partitions"]),
-                            dim=int(leaves["meta/dim"]))
-        return cls(pdb=pdb, cfg=cfg or hg.HNSWConfig())
+        from repro.api import IndexSpec, SearchService
+        from repro.api.backends import PartitionedBackend
+        from repro.api.service import MANIFEST_NAME, read_step_leaves
+        from repro.checkpoint import latest_step
+
+        if os.path.exists(os.path.join(path, MANIFEST_NAME)):
+            svc = SearchService.load(path)
+            if cfg is not None:
+                svc.spec = dataclasses.replace(svc.spec, hnsw=cfg)
+            return cls(svc)
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(
+                f"no index manifest or committed checkpoint under {path!r}")
+        leaves = read_step_leaves(path, step)
+        spec = IndexSpec(backend="partitioned",
+                         num_partitions=int(leaves["meta/num_partitions"]),
+                         hnsw=cfg or hg.HNSWConfig())
+        return cls(SearchService(spec,
+                                 PartitionedBackend.from_state(spec, leaves)))
 
     def bruteforce(self, queries, k: int = 10):
         """Exact search over the restructured DB (Fig. 9 baseline)."""

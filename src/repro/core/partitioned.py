@@ -32,6 +32,7 @@ __all__ = [
     "PartitionedDB",
     "build_partitioned_db",
     "search_partitioned",
+    "search_partitioned_candidates",
     "merge_topk",
 ]
 
@@ -102,3 +103,17 @@ def search_partitioned(pdb: PartitionedDB, queries, p: SearchParams):
     ds = jnp.swapaxes(ds, 0, 1)
     out_i, out_d = merge_topk(ids, ds, p.k)
     return out_i, out_d, stats
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def search_partitioned_candidates(pdb: PartitionedDB, queries, p: SearchParams):
+    """Stage 1 only: the P*K intermediate candidates, unmerged.
+
+    Returns (ids[B, P*k], dists[B, P*k], stats) — the pool the paper's
+    stage-2 brute force re-scores (api.rerank.batched_rerank consumes it).
+    """
+    ids, ds, stats = jax.vmap(lambda db: batch_search(db, queries, p))(pdb.db)
+    b = queries.shape[0]
+    ids = jnp.swapaxes(ids, 0, 1).reshape(b, -1)
+    ds = jnp.swapaxes(ds, 0, 1).reshape(b, -1)
+    return ids, ds, stats

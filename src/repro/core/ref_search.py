@@ -17,10 +17,16 @@ from repro.core.search import SearchParams
 __all__ = ["ref_search_one", "ref_batch_search"]
 
 
-def _dists(db: DeviceDB, q: np.ndarray, qsq: float, ids: np.ndarray, valid: np.ndarray):
+def _metric_dist(metric: str, dot, xsq, qsq):
+    from repro.api.metrics import get_metric   # registry owns the formulas
+    d = get_metric(metric).dist_from_dot(dot, xsq, qsq)
+    return np.maximum(d, 0.0) if metric == "l2" else d
+
+
+def _dists(db: DeviceDB, q: np.ndarray, qsq: float, ids: np.ndarray,
+           valid: np.ndarray, metric: str = "l2"):
     safe = np.where(valid, ids, 0)
-    d = db.sqnorms[safe] - 2.0 * (db.vectors[safe] @ q) + qsq
-    d = np.maximum(d, 0.0)
+    d = _metric_dist(metric, db.vectors[safe] @ q, db.sqnorms[safe], qsq)
     return np.where(valid, d, np.inf), safe
 
 
@@ -44,7 +50,8 @@ def ref_search_one(db: DeviceDB, q: np.ndarray, p: SearchParams):
 
     # --- upper layers: greedy descent --------------------------------------
     cur = int(db.entry)
-    cur_d = float(db.sqnorms[cur] - 2.0 * (db.vectors[cur] @ q) + qsq)
+    cur_d = float(_metric_dist(p.metric, float(db.vectors[cur] @ q),
+                               float(db.sqnorms[cur]), qsq))
     calcs = 1
     for layer in range(n_layers, 0, -1):
         if layer > max_level:
@@ -55,7 +62,7 @@ def ref_search_one(db: DeviceDB, q: np.ndarray, p: SearchParams):
             row = int(db.up_ptr[cur])
             nbrs = db.up_nbrs[layer - 1, max(row, 0)]
             valid = (nbrs >= 0) & (row >= 0)
-            d, safe = _dists(db, q, qsq, nbrs, valid)
+            d, safe = _dists(db, q, qsq, nbrs, valid, p.metric)
             calcs += int(valid.sum())
             j = int(np.argmin(d))
             improved = bool(d[j] < cur_d)
@@ -84,7 +91,7 @@ def ref_search_one(db: DeviceDB, q: np.ndarray, p: SearchParams):
         safe0 = np.where(valid, nbrs, 0)
         active = valid & ~visited[safe0]
         visited[safe0[active]] = True
-        d, safe = _dists(db, q, qsq, nbrs, active)
+        d, safe = _dists(db, q, qsq, nbrs, active, p.metric)
         calcs += int(active.sum())
         d = np.where(d < fin_d[-1], d, np.inf)
         ids = np.where(np.isfinite(d), safe, -1)

@@ -38,6 +38,7 @@ __all__ = [
     "SearchParams",
     "SearchStats",
     "merge_sorted",
+    "metric_distance",
     "visited_test_and_set",
     "search_one",
     "batch_search",
@@ -46,13 +47,22 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class SearchParams:
-    """Search-time knobs (paper: ef=40, K=10 for all SIFT1B results)."""
+    """Search-time knobs (paper: ef=40, K=10 for all SIFT1B results).
+
+    `metric` selects the distance the traversal minimizes:
+      l2     : squared Euclidean (the paper's metric)
+      ip     : negative inner product (MIPS as a minimization)
+      cosine : 1 - q.x, assuming the DB vectors and queries are unit-norm
+               (repro.api normalizes both at the build/search edge)
+    HNSW itself is metric-agnostic — only the distance evaluations change.
+    """
 
     ef: int = 40
     k: int = 10
     cand_size: int = 0        # 0 -> resolved to ef + maxM0
     max_hops: int = 0         # 0 -> resolved to 4*ef + 16
     upper_hops: int = 32      # per-layer greedy budget in upper layers
+    metric: str = "l2"
 
     def resolve(self, maxM0: int) -> "SearchParams":
         cand = self.cand_size or (self.ef + maxM0)
@@ -106,7 +116,19 @@ def visited_test_and_set(bitmap, ids, valid):
     return was, bitmap.at[w].add(add)
 
 
-def _batch_distances(db: DeviceDB, q, qsq, ids, valid):
+def metric_distance(metric: str, dot, xsq, qsq):
+    """Distance-from-dot-product for every supported metric (ascending ==
+    better). `metric` is trace-time static, so the branch costs nothing."""
+    if metric == "l2":
+        return jnp.maximum(xsq - 2.0 * dot + qsq, 0.0)
+    if metric == "ip":
+        return -dot
+    if metric == "cosine":                       # unit-norm inputs assumed
+        return 1.0 - dot
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def _batch_distances(db: DeviceDB, q, qsq, ids, valid, metric: str = "l2"):
     """Distances from q to db.vectors[ids]; invalid lanes -> +inf.
 
     One fused gather + matvec: the whole (padded) neighbor list is evaluated
@@ -115,8 +137,7 @@ def _batch_distances(db: DeviceDB, q, qsq, ids, valid):
     """
     safe = jnp.where(valid, ids, 0)
     vecs = db.vectors[safe]                      # [M, D_pad]
-    d = db.sqnorms[safe] - 2.0 * (vecs @ q) + qsq
-    d = jnp.maximum(d, 0.0)
+    d = metric_distance(metric, vecs @ q, db.sqnorms[safe], qsq)
     return jnp.where(valid, d, jnp.inf), safe
 
 
@@ -129,7 +150,7 @@ def _greedy_upper(db: DeviceDB, q, qsq, p: SearchParams):
     """Descend from db.max_level to layer 1, returning the layer-0 entry."""
     ep = db.entry.astype(jnp.int32)
     ep_vec = db.vectors[ep]
-    ep_d = db.sqnorms[ep] - 2.0 * (ep_vec @ q) + qsq
+    ep_d = metric_distance(p.metric, ep_vec @ q, db.sqnorms[ep], qsq)
     n_layers = db.up_nbrs.shape[0]               # static cap - 1
 
     def layer_body(i, carry):
@@ -146,7 +167,7 @@ def _greedy_upper(db: DeviceDB, q, qsq, p: SearchParams):
             row = db.up_ptr[c]
             nbrs = db.up_nbrs[layer - 1, jnp.maximum(row, 0)]
             valid = (nbrs >= 0) & (row >= 0)
-            d, safe = _batch_distances(db, q, qsq, nbrs, valid)
+            d, safe = _batch_distances(db, q, qsq, nbrs, valid, p.metric)
             j = jnp.argmin(d)
             best_d, best = d[j], safe[j]
             improved = best_d < c_d
@@ -206,7 +227,7 @@ def _search_layer0(db: DeviceDB, q, qsq, ep, ep_d, p: SearchParams):
         valid = nbrs >= 0
         was, visited = visited_test_and_set(visited, jnp.where(valid, nbrs, 0), valid)
         active = valid & ~was
-        d, safe = _batch_distances(db, q, qsq, nbrs, active)
+        d, safe = _batch_distances(db, q, qsq, nbrs, active, p.metric)
         calcs = calcs + jnp.sum(active)
         # line 11 guard: only candidates that can enter the final list.
         d = jnp.where(d < fin_d[-1], d, jnp.inf)

@@ -1,0 +1,6 @@
+"""Version shims shared by the Pallas kernels."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; accept either.
+COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

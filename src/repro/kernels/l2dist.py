@@ -22,25 +22,37 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import COMPILER_PARAMS as _COMPILER_PARAMS
+
 __all__ = ["l2dist_pallas"]
 
 
-def _kernel(qsq_ref, xsq_ref, q_ref, x_ref, out_ref):
+def _kernel(qsq_ref, xsq_ref, q_ref, x_ref, out_ref, *, metric):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
-        out_ref[...] = qsq_ref[...][:, None] + xsq_ref[...][None, :]
+        # metric-specific constant term; the dot-product accumulation below
+        # is shared. l2: ||q||^2 + ||x||^2 - 2 q.x; ip: -q.x; cosine
+        # (unit-norm inputs): 1 - q.x.
+        if metric == "l2":
+            out_ref[...] = qsq_ref[...][:, None] + xsq_ref[...][None, :]
+        elif metric == "cosine":
+            out_ref[...] = jnp.ones_like(out_ref[...])
+        else:
+            out_ref[...] = jnp.zeros_like(out_ref[...])
 
     q = q_ref[...].astype(jnp.float32)
     x = x_ref[...].astype(jnp.float32)
-    out_ref[...] += -2.0 * jax.lax.dot_general(
+    scale = -2.0 if metric == "l2" else -1.0
+    out_ref[...] += scale * jax.lax.dot_general(
         q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_q", "block_x", "block_d", "interpret")
+    jax.jit,
+    static_argnames=("block_q", "block_x", "block_d", "interpret", "metric"),
 )
 def l2dist_pallas(
     queries,          # [Bq, D]
@@ -52,8 +64,10 @@ def l2dist_pallas(
     block_x: int = 512,
     block_d: int = 128,
     interpret: bool = True,
+    metric: str = "l2",
 ):
-    """Returns D2[Bq, Bx] float32. Dims must divide by the block sizes
+    """Returns D[Bq, Bx] float32 under `metric` (l2 / ip / cosine; cosine
+    assumes unit-norm inputs). Dims must divide by the block sizes
     (ops.l2dist pads arbitrary shapes before calling this)."""
     bq, d = queries.shape
     bx, _ = xs.shape
@@ -64,7 +78,7 @@ def l2dist_pallas(
         xsq = jnp.einsum("bd,bd->b", xs.astype(jnp.float32), xs.astype(jnp.float32))
     grid = (bq // block_q, bx // block_x, d // block_d)
     return pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, metric=metric),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_q,), lambda i, j, k: (i,)),
@@ -74,7 +88,7 @@ def l2dist_pallas(
         ],
         out_specs=pl.BlockSpec((block_q, block_x), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((bq, bx), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import COMPILER_PARAMS as _COMPILER_PARAMS
+
 from repro.kernels.topk import _select_k
 
 __all__ = ["l2topk_pallas"]
@@ -101,7 +103,7 @@ def l2topk_pallas(
             pltpu.VMEM((block_q, k), jnp.float32),
             pltpu.VMEM((block_q, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

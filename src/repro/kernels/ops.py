@@ -39,9 +39,14 @@ def _pad_rows(a, to_rows, fill=0.0):
     return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1), constant_values=fill)
 
 
-@functools.partial(jax.jit, static_argnames=("block_q", "block_x", "interpret"))
-def l2dist(queries, xs, *, block_q=128, block_x=512, interpret=None):
-    """Pairwise squared-L2 for arbitrary shapes; returns [Bq, Bx] f32."""
+@functools.partial(jax.jit, static_argnames=("block_q", "block_x", "interpret",
+                                             "metric"))
+def l2dist(queries, xs, *, block_q=128, block_x=512, interpret=None,
+           metric="l2"):
+    """Pairwise distance for arbitrary shapes; returns [Bq, Bx] f32.
+
+    metric: "l2" (squared Euclidean), "ip" (-q.x), or "cosine" (1 - q.x over
+    unit-norm inputs) — same registry as repro.api.metrics."""
     interpret = default_interpret() if interpret is None else interpret
     bq, d = queries.shape
     bx, _ = xs.shape
@@ -51,7 +56,7 @@ def l2dist(queries, xs, *, block_q=128, block_x=512, interpret=None):
     x = jnp.pad(xs, ((0, bx_p - bx), (0, d_p - d)))
     out = l2dist_pallas(
         q, x, block_q=block_q, block_x=block_x, block_d=min(d_p, 512),
-        interpret=interpret,
+        interpret=interpret, metric=metric,
     )
     return out[:bq, :bx]
 

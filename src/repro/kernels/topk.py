@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import COMPILER_PARAMS as _COMPILER_PARAMS
+
 __all__ = ["topk_pallas"]
 
 
@@ -101,7 +103,7 @@ def topk_pallas(
             pltpu.VMEM((block_b, k), jnp.float32),
             pltpu.VMEM((block_b, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -24,7 +24,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.distributed import make_distributed_search
 from repro.core.hnsw_graph import DeviceDB
 from repro.core.search import SearchParams
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import enter_mesh, make_production_mesh
 from repro.launch.roofline import HW, collective_bytes
 
 
@@ -67,7 +67,7 @@ def main():
     q = jax.ShapeDtypeStruct((args.batch, d_pad), jnp.float32,
                              sharding=NamedSharding(
                                  mesh, P(qaxes if qaxes else None, None)))
-    with jax.set_mesh(mesh):
+    with enter_mesh(mesh):
         lowered = search.lower(db, q)
         compiled = lowered.compile()
     ma = compiled.memory_analysis()

@@ -26,7 +26,7 @@ from jax.sharding import NamedSharding
 from repro.configs import ARCHS, get_config, input_specs, SHAPES
 from repro.configs.shapes import cache_spec, shape_runnable
 from repro.launch.costmodel import cell_costs
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import enter_mesh, make_production_mesh
 from repro.launch.roofline import (
     HW, collective_bytes, model_flops, roofline_terms)
 from repro.launch.sharding import (
@@ -107,7 +107,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, fsdp_serve=None,
     serve_fsdp = (total_p * 2 / model_ax) > 6e9 if fsdp_serve is None else fsdp_serve
 
     dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
-    with jax.set_mesh(mesh), activation_sharding(dp):
+    with enter_mesh(mesh), activation_sharding(dp):
         if shape.kind == "train":
             state_shapes = jax.eval_shape(lambda: make_train_state(key, cfg))
             sspec = state_specs(state_shapes, mesh, fsdp=True, mode=state_mode)
@@ -148,6 +148,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, fsdp_serve=None,
         rec["compile_s"] = round(time.time() - t1, 2)
 
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):     # older jax: one dict per device
+        ca = ca[0] if ca else {}
     # NOTE: XLA counts while-loop bodies once (verified experimentally), so
     # these raw numbers undercount scanned models; the roofline terms below
     # use the loop-aware analytic model (launch/costmodel.py), calibrated

@@ -13,15 +13,30 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "dp_axes", "mesh_shape"]
+__all__ = ["make_production_mesh", "make_mesh", "dp_axes", "mesh_shape",
+           "enter_mesh"]
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis_types where the jax version has them."""
+    kwargs = {}
+    if hasattr(jax.sharding, "AxisType"):    # absent on older jax
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
+def enter_mesh(mesh):
+    """Context manager activating `mesh`: jax.set_mesh on new jax, the
+    legacy `with mesh:` global-mesh context on older releases."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

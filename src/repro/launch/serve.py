@@ -1,12 +1,14 @@
-"""Batched ANN serving loop (the paper's deployment mode).
+"""Batched ANN serving loop (the paper's deployment mode) on repro.api.
 
 The request path mirrors paper Fig. 4: the database (all partitions) is
-resident on the accelerators; the host only batches queries and collects
-(gid, dist) results. QPS / latency percentiles are printed per window —
-benchmarks/fig12_platforms.py reuses this loop.
+resident on the accelerators; the host only batches `SearchRequest`s and
+collects (gid, dist) results. QPS / latency percentiles are printed per
+window — benchmarks/fig12_platforms.py reuses this loop. Backend and
+metric come from the CLI, so the same loop serves the exact scan, the
+monolithic graph, the paper's partitioned engine, or the distributed one:
 
   PYTHONPATH=src python -m repro.launch.serve --n 20000 --partitions 4 \
-      --batch 64 --num-batches 50
+      --batch 64 --num-batches 50 --backend partitioned --metric l2
 """
 
 from __future__ import annotations
@@ -14,15 +16,22 @@ from __future__ import annotations
 import argparse
 import time
 
+import jax
 import numpy as np
 
-from repro.core.engine import ANNEngine
+from repro.api import IndexSpec, SearchRequest, SearchService
 from repro.core.hnsw_graph import HNSWConfig
 from repro.data import VectorDataset
 
 
-def serve_loop(engine: ANNEngine, queries, batch: int, k: int, ef: int,
-               log=print):
+def serve_loop(service, queries, batch: int, k: int, ef: int,
+               rerank: bool = False, log=print):
+    """Stream `queries` through in fixed batches; returns (ids, stats).
+
+    `service` is a SearchService; the deprecated ANNEngine shim is accepted
+    too (it exposes the same search contract through its service).
+    """
+    svc = getattr(service, "_service", service)
     lat = []
     n = 0
     ids_all = []
@@ -30,10 +39,10 @@ def serve_loop(engine: ANNEngine, queries, batch: int, k: int, ef: int,
     for i in range(0, len(queries) - batch + 1, batch):
         q = queries[i : i + batch]
         t0 = time.perf_counter()
-        ids, _ = engine.search(q, k=k, ef=ef)
-        ids.block_until_ready()
+        resp = svc.search(SearchRequest(queries=q, k=k, ef=ef, rerank=rerank))
+        jax.block_until_ready(resp.ids)
         lat.append(time.perf_counter() - t0)
-        ids_all.append(np.asarray(ids))
+        ids_all.append(np.asarray(resp.ids))
         n += batch
     wall = time.perf_counter() - t_start
     lat_ms = np.array(lat) * 1e3
@@ -58,18 +67,27 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--ef", type=int, default=40)
     ap.add_argument("--M", type=int, default=16)
+    ap.add_argument("--metric", default="l2",
+                    choices=["l2", "ip", "cosine"])
+    ap.add_argument("--backend", default="partitioned",
+                    choices=["exact", "hnsw", "partitioned", "distributed"])
+    ap.add_argument("--rerank", action="store_true")
     args = ap.parse_args(argv)
 
     ds = VectorDataset(args.n, args.dim)
-    print(f"[serve] building {args.partitions}-partition HNSW over "
+    spec = IndexSpec(metric=args.metric, backend=args.backend,
+                     num_partitions=args.partitions,
+                     hnsw=HNSWConfig(M=args.M),
+                     keep_vectors=args.rerank)
+    print(f"[serve] building {spec.backend} index "
+          f"({args.partitions} partitions, metric={spec.metric}) over "
           f"{args.n} vectors ...")
     t0 = time.perf_counter()
-    engine = ANNEngine.build(
-        ds.vectors(), num_partitions=args.partitions,
-        cfg=HNSWConfig(M=args.M))
+    service = SearchService.build(ds.vectors(), spec)
     print(f"[serve] build {time.perf_counter()-t0:.1f}s")
     queries = ds.queries(args.batch * args.num_batches)
-    _, stats = serve_loop(engine, queries, args.batch, args.k, args.ef)
+    _, stats = serve_loop(service, queries, args.batch, args.k, args.ef,
+                          rerank=args.rerank)
     return stats
 
 

@@ -19,6 +19,14 @@ _CTX: dict | None = None
 __all__ = ["activation_sharding", "constrain", "dp", "tp"]
 
 
+def _mesh_shape():
+    """Axis-name -> size of the ambient mesh, across jax versions."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh().shape
+    from jax._src.mesh import thread_resources   # legacy global-mesh context
+    return dict(thread_resources.env.physical_mesh.shape)
+
+
 @contextlib.contextmanager
 def activation_sharding(dp_axes: tuple[str, ...], model_axis: str = "model"):
     global _CTX
@@ -41,7 +49,7 @@ def tp():
 def dp_size() -> int:
     if _CTX is None:
         return 1
-    shape = jax.sharding.get_abstract_mesh().shape
+    shape = _mesh_shape()
     n = 1
     for a in _CTX["dp"]:
         n *= shape[a]
@@ -51,7 +59,7 @@ def dp_size() -> int:
 def tp_size() -> int:
     if _CTX is None:
         return 1
-    return jax.sharding.get_abstract_mesh().shape[_CTX["tp"]]
+    return _mesh_shape()[_CTX["tp"]]
 
 
 def constrain(x, dims):
@@ -59,7 +67,7 @@ def constrain(x, dims):
     None. Axes that don't divide the dim are dropped. No-op w/o context."""
     if _CTX is None:
         return x
-    mesh_shape = jax.sharding.get_abstract_mesh().shape
+    mesh_shape = _mesh_shape()
     spec = []
     for d, size in zip(dims, x.shape):
         if d is None:

@@ -27,8 +27,8 @@ from repro.data import clustered_vectors
 
 def main():
     assert len(jax.devices()) == 8, jax.devices()
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     vecs = clustered_vectors(1600, 32, k=16, seed=0)
     rng = np.random.default_rng(1)
     queries = vecs[rng.integers(0, 1600, 8)] + rng.normal(

@@ -1,0 +1,235 @@
+"""The unified repro.api surface: spec/backends/metrics/rerank/persistence."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    FORMAT_VERSION,
+    IndexSpec,
+    SearchRequest,
+    SearchService,
+    available_backends,
+    available_metrics,
+    batched_rerank,
+    exact_topk_np,
+)
+from repro.core.hnsw_graph import HNSWConfig
+
+CFG = HNSWConfig(M=12, ef_construction=80, seed=0)
+
+
+def _recall(ids, gt, k):
+    return np.mean([len(set(ids[b]) & set(gt[b])) / k for b in range(len(gt))])
+
+
+@pytest.fixture(scope="module")
+def svc4(small_dataset):
+    spec = IndexSpec(backend="partitioned", num_partitions=4, hnsw=CFG,
+                     keep_vectors=True)
+    return SearchService.build(small_dataset["vectors"], spec)
+
+
+def test_registries_advertise_the_contract():
+    assert {"exact", "hnsw", "partitioned", "distributed"} <= set(
+        available_backends())
+    assert {"l2", "ip", "cosine"} <= set(available_metrics())
+    with pytest.raises(ValueError, match="unknown backend"):
+        SearchService.build(np.zeros((8, 4), np.float32),
+                            IndexSpec(backend="nope"))
+    with pytest.raises(ValueError, match="unknown metric"):
+        SearchService.build(np.zeros((8, 4), np.float32),
+                            IndexSpec(metric="nope"))
+
+
+def test_partitioned_backend_recall(svc4, small_dataset):
+    resp = svc4.search(SearchRequest(queries=small_dataset["queries"],
+                                     k=10, ef=40))
+    r = _recall(np.asarray(resp.ids), small_dataset["gt"], 10)
+    assert r >= 0.9, f"recall {r:.3f}"
+
+
+def test_exact_backend_is_exact(small_dataset):
+    svc = SearchService.build(small_dataset["vectors"],
+                              IndexSpec(backend="exact"))
+    resp = svc.search(SearchRequest(queries=small_dataset["queries"], k=10))
+    np.testing.assert_array_equal(np.asarray(resp.ids), small_dataset["gt"])
+
+
+def test_with_stats_returns_per_query_counters(svc4, small_dataset):
+    resp = svc4.search(SearchRequest(queries=small_dataset["queries"],
+                                     k=10, ef=40, with_stats=True))
+    b = len(small_dataset["queries"])
+    assert np.asarray(resp.stats.dist_calcs).shape == (b,)
+    assert np.asarray(resp.stats.hops).shape == (b,)
+    assert (np.asarray(resp.stats.dist_calcs) > 0).all()
+
+
+# -- persistence -------------------------------------------------------------
+
+
+def test_save_load_roundtrip_through_spec(svc4, small_dataset, tmp_path):
+    path = str(tmp_path / "idx")
+    svc4.save(path)
+    svc2 = SearchService.load(path)
+    assert svc2.spec == svc4.spec
+    req = SearchRequest(queries=small_dataset["queries"], k=10, ef=40)
+    np.testing.assert_array_equal(np.asarray(svc4.search(req).ids),
+                                  np.asarray(svc2.search(req).ids))
+    # rerank still works after reload (vectors persisted via keep_vectors)
+    req_r = SearchRequest(queries=small_dataset["queries"], k=10, ef=40,
+                          rerank=True)
+    np.testing.assert_array_equal(np.asarray(svc4.search(req_r).ids),
+                                  np.asarray(svc2.search(req_r).ids))
+
+
+def test_save_is_versioned_and_load_opens_latest(svc4, tmp_path):
+    path = str(tmp_path / "idx")
+    svc4.save(path)
+    svc4.save(path)
+    assert os.path.isdir(os.path.join(path, "step_00000000"))
+    assert os.path.isdir(os.path.join(path, "step_00000001"))
+    SearchService.load(path)                      # opens step 1, no error
+
+
+def test_load_rejects_future_format(svc4, tmp_path):
+    import json
+    path = str(tmp_path / "idx")
+    svc4.save(path)
+    mpath = os.path.join(path, "index_manifest.json")
+    with open(mpath) as f:
+        m = json.load(f)
+    m["format_version"] = FORMAT_VERSION + 1
+    with open(mpath, "w") as f:
+        json.dump(m, f)
+    with pytest.raises(ValueError, match="format_version"):
+        SearchService.load(path)
+
+
+def test_spec_json_roundtrip():
+    spec = IndexSpec(metric="cosine", backend="hnsw", num_partitions=3,
+                     hnsw=HNSWConfig(M=24, ef_construction=64, seed=9),
+                     keep_vectors=False)
+    assert IndexSpec.from_json(spec.to_json()) == spec
+
+
+# -- metric registry ---------------------------------------------------------
+
+
+def test_cosine_matches_l2_on_normalized_vectors(small_dataset):
+    """Parity: cosine over raw vectors must rank exactly like l2 over
+    pre-normalized vectors — the registry does the normalization."""
+    vecs = small_dataset["vectors"]
+    q = small_dataset["queries"]
+    vn = vecs / np.linalg.norm(vecs, axis=1, keepdims=True)
+    qn = q / np.linalg.norm(q, axis=1, keepdims=True)
+
+    svc_cos = SearchService.build(
+        vecs, IndexSpec(metric="cosine", backend="partitioned",
+                        num_partitions=2, hnsw=CFG))
+    svc_l2n = SearchService.build(
+        vn, IndexSpec(metric="l2", backend="partitioned",
+                      num_partitions=2, hnsw=CFG))
+    ids_cos = np.asarray(svc_cos.search(SearchRequest(queries=q, k=10,
+                                                      ef=40)).ids)
+    ids_l2 = np.asarray(svc_l2n.search(SearchRequest(queries=qn, k=10,
+                                                     ef=40)).ids)
+    np.testing.assert_array_equal(ids_cos, ids_l2)
+
+
+def test_ip_rejected_on_graph_backends(small_dataset):
+    """An L2-built graph does not answer MIPS correctly — the service must
+    refuse rather than silently degrade."""
+    for backend in ("hnsw", "partitioned", "distributed"):
+        with pytest.raises(ValueError, match="not graph-safe"):
+            SearchService.build(small_dataset["vectors"],
+                                IndexSpec(metric="ip", backend=backend))
+
+
+def test_legacy_index_without_manifest_still_loads(svc4, small_dataset,
+                                                   tmp_path):
+    """Pre-manifest indexes (bare step dirs) load through the shim."""
+    from repro.core.engine import ANNEngine
+    path = str(tmp_path / "idx")
+    svc4.save(path)
+    os.remove(os.path.join(path, "index_manifest.json"))
+    eng = ANNEngine.load(path)
+    ids, _ = eng.search(small_dataset["queries"], k=10, ef=40)
+    resp = svc4.search(SearchRequest(queries=small_dataset["queries"],
+                                     k=10, ef=40))
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(resp.ids))
+
+
+def test_ip_exact_matches_ground_truth(small_dataset):
+    vecs = small_dataset["vectors"]
+    q = small_dataset["queries"]
+    svc = SearchService.build(vecs, IndexSpec(metric="ip", backend="exact"))
+    ids = np.asarray(svc.search(SearchRequest(queries=q, k=10)).ids)
+    np.testing.assert_array_equal(ids, exact_topk_np("ip", vecs, q, 10))
+
+
+def test_cosine_exact_matches_ground_truth(small_dataset):
+    vecs = small_dataset["vectors"]
+    q = small_dataset["queries"]
+    svc = SearchService.build(vecs, IndexSpec(metric="cosine",
+                                              backend="exact"))
+    ids = np.asarray(svc.search(SearchRequest(queries=q, k=10)).ids)
+    np.testing.assert_array_equal(ids, exact_topk_np("cosine", vecs, q, 10))
+
+
+# -- rerank ------------------------------------------------------------------
+
+
+def test_rerank_flag_matches_old_numpy_rerank(svc4, small_dataset):
+    """The batched device rerank must reproduce the retired per-query
+    NumPy loop (unique candidates, exact distances, smallest-id ties)."""
+    q = small_dataset["queries"]
+    resp = svc4.search(SearchRequest(queries=q, k=10, ef=40, rerank=True))
+    ids_new = np.asarray(resp.ids)
+    ds_new = np.asarray(resp.dists)
+
+    # the retired implementation, verbatim (over the same candidate pool)
+    from repro.core.partitioned import search_partitioned_candidates
+    import jax.numpy as jnp
+    p = svc4.backend.params(10, 40)
+    cand, _, _ = search_partitioned_candidates(
+        svc4.backend.pdb, jnp.asarray(q), p)
+    cand = np.asarray(cand)
+    vectors = svc4.backend.raw
+    out_i = np.full((cand.shape[0], 10), -1, np.int32)
+    out_d = np.full((cand.shape[0], 10), np.inf, np.float32)
+    for b, (qq, row) in enumerate(zip(q, cand)):
+        cu = np.unique(row[row >= 0])
+        d = np.einsum("nd,nd->n", vectors[cu] - qq, vectors[cu] - qq)
+        order = np.argsort(d, kind="stable")[:10]
+        out_i[b, : len(order)] = cu[order]
+        out_d[b, : len(order)] = d[order]
+    np.testing.assert_array_equal(ids_new, out_i)
+    # ||x||^2 - 2 x.q + ||q||^2 vs (x-q)^2: cancellation costs ~1 ulp*|x|^2
+    # at SIFT magnitudes (same tolerance as test_search.py)
+    np.testing.assert_allclose(ds_new, out_d, rtol=1e-3, atol=2.0)
+
+
+def test_rerank_requires_kept_vectors(small_dataset):
+    svc = SearchService.build(
+        small_dataset["vectors"],
+        IndexSpec(backend="partitioned", num_partitions=2, hnsw=CFG,
+                  keep_vectors=False))
+    with pytest.raises(ValueError, match="keep_vectors"):
+        svc.search(SearchRequest(queries=small_dataset["queries"], k=10,
+                                 ef=40, rerank=True))
+
+
+def test_batched_rerank_dedups_and_pads():
+    import jax.numpy as jnp
+    vecs = np.eye(4, dtype=np.float32)
+    sq = np.ones(4, np.float32)
+    q = np.zeros((1, 4), np.float32)
+    cand = np.array([[2, 2, 0, -1, -1, 1]], np.int32)
+    ids, ds = batched_rerank(jnp.asarray(vecs), jnp.asarray(sq),
+                             jnp.asarray(q), jnp.asarray(cand), k=5)
+    ids, ds = np.asarray(ids), np.asarray(ds)
+    # unique survivors 0,1,2 (equidistant -> smallest id first), then pads
+    np.testing.assert_array_equal(ids[0], [0, 1, 2, -1, -1])
+    assert np.isinf(ds[0, 3:]).all()

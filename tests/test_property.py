@@ -2,6 +2,10 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.search import merge_sorted, visited_test_and_set
