@@ -15,7 +15,6 @@ import jax
 import numpy as np
 
 from repro.api import IndexSpec, SearchService
-from repro.core.engine import ANNEngine
 from repro.core.hnsw_graph import HNSWConfig
 from repro.data import VectorDataset
 
@@ -28,8 +27,6 @@ class BenchCtx:
     vectors: np.ndarray
     queries: np.ndarray
     gt: np.ndarray
-    engine: ANNEngine            # 4 partitions (legacy shim view)
-    engine1: ANNEngine           # monolithic (legacy shim view)
     cfg: HNSWConfig
     svc: SearchService           # partitioned backend, 4 sub-graphs
     svc1: SearchService          # hnsw backend (one graph)
@@ -58,11 +55,8 @@ def get_ctx() -> BenchCtx:
     svc1 = SearchService.build(
         vectors, IndexSpec(backend="hnsw", hnsw=cfg, keep_vectors=False))
     svc_exact = SearchService.build(vectors, IndexSpec(backend="exact"))
-    # legacy views over the same built services (no second graph build)
-    engine, engine1 = ANNEngine(svc), ANNEngine(svc1)
     print(f"# bench context: n={N} built in {time.time()-t0:.1f}s")
-    _CTX = BenchCtx(vectors, queries, gt, engine, engine1, cfg,
-                    svc, svc1, svc_exact)
+    _CTX = BenchCtx(vectors, queries, gt, cfg, svc, svc1, svc_exact)
     return _CTX
 
 

@@ -14,21 +14,27 @@ fake devices.
 
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import get_ctx
+from repro.core.partitioned import search_partitioned
 from repro.launch.roofline import HW
 
 
 def run():
     ctx = get_ctx()
     q = ctx.queries
-    _, _, stats = ctx.engine.search_with_stats(q, k=10, ef=40)
+    # per-partition [P, B] counters: drive the api backend's engine directly
+    # (the service-level QueryStats are already reduced over partitions)
+    backend = ctx.svc.backend
+    _, _, stats = search_partitioned(backend.pdb, jnp.asarray(q),
+                                     backend.params(10, 40))
     calcs = np.asarray(stats.dist_calcs)           # [P, B]
     per_part = calcs.sum(axis=1)                   # work per partition
     total_work = float(per_part.sum())
-    db_bytes = sum(
-        a.nbytes for a in __import__("jax").tree.leaves(ctx.engine.pdb.db))
+    db_bytes = sum(a.nbytes for a in jax.tree.leaves(backend.pdb.db))
     hw = HW()
     dim = ctx.vectors.shape[1]
     nq = len(q)

@@ -17,10 +17,10 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import get_ctx, timeit
+from repro.api import SearchRequest
 from repro.core.ref_search import ref_batch_search
 from repro.core.search import SearchParams
 from repro.launch.roofline import HW
@@ -32,20 +32,22 @@ TPU_W = 200.0          # modeled v5e chip+share board power
 def run():
     ctx = get_ctx()
     p = SearchParams(ef=40, k=10)
-    db_one = jax.tree.map(lambda a: np.asarray(a[0]), ctx.engine1.pdb.db)
+    db_one = jax.tree.map(lambda a: np.asarray(a[0]), ctx.svc1.backend.pdb.db)
 
     nq_ref = 8
     t0 = time.perf_counter()
     ref_batch_search(db_one, ctx.queries[:nq_ref], p)
     qps_numpy = nq_ref / (time.perf_counter() - t0)
 
-    us = timeit(lambda: ctx.engine.search(ctx.queries, k=10, ef=40)[0])
+    us = timeit(lambda: ctx.svc.search(
+        SearchRequest(queries=ctx.queries, k=10, ef=40)).ids)
     qps_jax = len(ctx.queries) / (us / 1e6)
 
     # modeled TPU QPS: per-query HBM traffic from measured vector reads.
-    _, _, stats = ctx.engine.search_with_stats(ctx.queries, k=10, ef=40)
-    reads = float(np.mean(np.asarray(stats.dist_calcs).sum(axis=0)))
-    dim_pad = ctx.engine.pdb.db.vectors.shape[-1]
+    resp = ctx.svc.search(SearchRequest(queries=ctx.queries, k=10, ef=40,
+                                        with_stats=True))
+    reads = float(np.mean(np.asarray(resp.stats.dist_calcs)))
+    dim_pad = ctx.svc.backend.pdb.db.vectors.shape[-1]
     bytes_per_q = reads * (dim_pad * 4 + 64)       # vector + index/list rows
     hw = HW()
     qps_tpu = 1.0 / (bytes_per_q / hw.hbm_bw)      # one chip, memory-bound

@@ -1,23 +1,23 @@
 """Paper Fig. 1 analogue: recall/QPS trade-off of the multi-layer graph
 search, swept over ef (the paper's quality knob; SIFT1B point: ef=40 ->
-recall 0.94)."""
+recall 0.94). Runs through the repro.api service layer."""
 
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import get_ctx, recall_of, timeit
+from repro.api import SearchRequest
 
 
 def run():
     ctx = get_ctx()
     rows = []
-    q = jnp.asarray(ctx.queries)
     for ef in (10, 20, 40, 80, 160):
-        ids, _ = ctx.engine.search(ctx.queries, k=10, ef=ef)
-        rec = recall_of(np.asarray(ids), ctx.gt)
-        us = timeit(lambda ef=ef: ctx.engine.search(ctx.queries, k=10, ef=ef)[0])
+        resp = ctx.svc.search(SearchRequest(queries=ctx.queries, k=10, ef=ef))
+        rec = recall_of(np.asarray(resp.ids), ctx.gt)
+        us = timeit(lambda ef=ef: ctx.svc.search(
+            SearchRequest(queries=ctx.queries, k=10, ef=ef)).ids)
         qps = len(ctx.queries) / (us / 1e6)
         rows.append((f"fig1_ef{ef}", us, f"recall={rec:.3f};qps_cpu={qps:.1f}"))
     return rows

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV (CPU wall for relative numbers,
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -27,6 +28,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module prefixes")
+    ap.add_argument("--backend", default=None,
+                    help="extra backend rows for modules that support it "
+                         "(fig9: 'csd' adds out-of-core block-read rows)")
     args = ap.parse_args()
     mods = MODULES
     if args.only:
@@ -37,7 +41,11 @@ def main() -> None:
     for name in mods:
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            for row in mod.run():
+            kwargs = {}
+            if (args.backend and
+                    "backend" in inspect.signature(mod.run).parameters):
+                kwargs["backend"] = args.backend
+            for row in mod.run(**kwargs):
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
             sys.stdout.flush()
         except Exception:

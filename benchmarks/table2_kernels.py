@@ -45,8 +45,8 @@ def run():
                  f"traffic_saved={bytes_unfused/bytes_fused:.1f}x"))
     # HNSW hop: gather maxM0 vectors + matvec per query.
     ctx = get_ctx()
-    m0 = ctx.engine.pdb.db.l0_nbrs.shape[-1]
-    d_pad = ctx.engine.pdb.db.vectors.shape[-1]
+    m0 = ctx.svc.backend.pdb.db.l0_nbrs.shape[-1]
+    d_pad = ctx.svc.backend.pdb.db.vectors.shape[-1]
     hop_bytes = m0 * (d_pad * 4 + 4) + 64
     hop_flops = 2 * m0 * d_pad
     rows.append(("table2_hnsw_hop", 0.0,

@@ -1,4 +1,4 @@
-"""Backend registry: four engines, one search contract.
+"""Backend registry: five engines, one search contract.
 
 Every backend answers the same call — `search(queries, k, ef, rerank,
 with_stats)` over metric-prepared queries — and exposes a `state_tree()` /
@@ -10,6 +10,9 @@ happens through `IndexSpec.backend`:
   partitioned : the paper's two-stage engine — P sub-graphs + device merge
   distributed : partitions sharded over the mesh `model` axis with an
                 all-gather stage-2 merge (paper Fig. 10/11)
+  csd         : out-of-core over the block store (repro.store) — the
+                database stays on "flash", host memory is bounded by the
+                PageCache, stats count block reads (the paper's platform)
 
 `register_backend` is open: NDSEARCH-style near-data engines or quantized
 variants plug in without touching the service layer.
@@ -35,7 +38,7 @@ from repro.core.search import SearchParams
 
 __all__ = ["register_backend", "get_backend", "available_backends",
            "ExactBackend", "HNSWBackend", "PartitionedBackend",
-           "DistributedBackend"]
+           "DistributedBackend", "CSDBackend"]
 
 _BACKENDS: dict[str, type] = {}
 
@@ -283,3 +286,14 @@ class DistributedBackend(PartitionedBackend):
 def _default_mesh():
     from repro.launch.mesh import make_mesh
     return make_mesh((len(jax.devices()),), ("model",))
+
+
+# ---------------------------------------------------------------------------
+# csd — out-of-core over the block store (defined in repro.store.csd, which
+# imports repro.api only lazily inside methods, so this registration import
+# is acyclic whichever package loads first)
+# ---------------------------------------------------------------------------
+
+from repro.store.csd import CSDBackend  # noqa: E402
+
+register_backend("csd")(CSDBackend)

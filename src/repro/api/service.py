@@ -32,7 +32,7 @@ from repro.api.types import (
     SearchRequest,
     SearchResponse,
 )
-from repro.checkpoint import latest_step, save_checkpoint
+from repro.checkpoint import latest_step, save_checkpoint, step_dir
 
 __all__ = ["SearchService", "MANIFEST_NAME", "read_step_leaves"]
 
@@ -41,7 +41,7 @@ MANIFEST_NAME = "index_manifest.json"
 
 def read_step_leaves(path: str, step: int) -> dict:
     """Flat {leaf-path: np.ndarray} view of one committed checkpoint step."""
-    d = os.path.join(path, f"step_{step:08d}")
+    d = step_dir(path, step)
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
     return {e["path"]: np.load(os.path.join(d, e["file"] + ".npy"))

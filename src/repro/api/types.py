@@ -31,14 +31,25 @@ class IndexSpec:
     """Everything needed to build (or re-open) an index.
 
     metric  : "l2" | "ip" | "cosine" (see api.metrics for the registry)
-    backend : "exact" | "hnsw" | "partitioned" | "distributed"
+    backend : "exact" | "hnsw" | "partitioned" | "distributed" | "csd"
               (see api.backends; "hnsw" == "partitioned" with one partition)
     num_partitions : stage-1 sub-graph count (paper §4.1)
     hnsw    : graph construction knobs (ignored by the exact backend)
     keep_vectors : retain the raw vectors alongside the graph — required
-              for `SearchRequest.rerank` and saved with the index. Off by
-              default: it costs a second copy of the dataset in device
-              memory (and in every saved version).
+              for `SearchRequest.rerank` on the in-memory graph backends and
+              saved with the index. Off by default: it costs a second copy
+              of the dataset in device memory (and in every saved version).
+              The `csd` backend ignores it — stage-2 rerank reads vectors
+              back from the block store.
+    storage_path : `csd` only — directory of the block-aligned store
+              (paper Fig. 5 tables on "flash"). Required at build; embedded
+              in the manifest so `load` can re-open the store.
+    block_size : `csd` only — bytes per storage block; one block read
+              stands in for one flash read / P2P-DMA transfer.
+    cache_bytes : `csd` only — PageCache capacity (the SmartSSD DRAM tier
+              in front of NAND). Peak resident store memory is bounded by
+              this, not by the dataset size.
+    prefetch : `csd` only — run the async next-hop prefetcher thread.
     """
 
     metric: str = "l2"
@@ -46,6 +57,10 @@ class IndexSpec:
     num_partitions: int = 1
     hnsw: HNSWConfig = dataclasses.field(default_factory=HNSWConfig)
     keep_vectors: bool = False
+    storage_path: str | None = None
+    block_size: int = 4096
+    cache_bytes: int = 64 << 20
+    prefetch: bool = True
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
@@ -83,10 +98,21 @@ class SearchRequest:
 
 @dataclasses.dataclass(frozen=True)
 class QueryStats:
-    """Per-query counters; `None` where a backend does not track one."""
+    """Per-query counters; `None` where a backend does not track one.
 
-    hops: Any = None          # [B] candidate pops at layer 0
-    dist_calcs: Any = None    # [B] distance evaluations == "vector reads"
+    The storage counters (csd backend) are per-*request* scalars — the
+    PageCache is shared across the batch, so per-query attribution is not
+    well defined. `block_reads` is the paper's P2P-DMA traffic unit: the
+    number of flash blocks actually transferred (demand misses + prefetches);
+    `cache_hit_rate` is hits / demand accesses.
+    """
+
+    hops: Any = None            # [B] candidate pops at layer 0
+    dist_calcs: Any = None      # [B] distance evaluations == "vector reads"
+    block_reads: Any = None     # scalar: flash blocks transferred (Fig. 9)
+    cache_hits: Any = None      # scalar: demand accesses served from cache
+    cache_hit_rate: Any = None  # scalar in [0, 1]
+    bytes_read: Any = None      # scalar: block_reads * block_size
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,6 +1,7 @@
 from repro.checkpoint.store import (
-    save_checkpoint, restore_checkpoint, latest_step, AsyncCheckpointer,
+    save_checkpoint, restore_checkpoint, latest_step, step_dir, list_steps,
+    AsyncCheckpointer,
 )
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "AsyncCheckpointer"]
+           "step_dir", "list_steps", "AsyncCheckpointer"]

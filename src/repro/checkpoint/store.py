@@ -29,7 +29,32 @@ import jax
 import numpy as np
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "AsyncCheckpointer"]
+           "step_dir", "list_steps", "AsyncCheckpointer"]
+
+
+def step_dir(ckpt_dir: str, step: int) -> str:
+    """The canonical on-disk directory of one checkpoint step."""
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
+def list_steps(ckpt_dir: str, committed_only: bool = True) -> list[int]:
+    """Ascending step numbers found under `ckpt_dir`.
+
+    This is the single implementation of step discovery — the checkpoint
+    store, its GC, and the api index loader all go through it, so the
+    commit-marker contract cannot drift between them.
+    """
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if not name.startswith("step_") or name.endswith(".tmp"):
+            continue
+        if committed_only and not os.path.exists(
+                os.path.join(ckpt_dir, name, "_COMMITTED")):
+            continue
+        steps.append(int(name.split("_")[1]))
+    return sorted(steps)
 
 
 def _leaf_name(path: str) -> str:
@@ -45,7 +70,7 @@ def _paths(tree):
 
 def save_checkpoint(ckpt_dir: str, step: int, tree, save_sharded: bool = False):
     """Blocking save. Returns the checkpoint path."""
-    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    d = step_dir(ckpt_dir, step)
     tmp = d + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
@@ -72,20 +97,14 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, save_sharded: bool = False):
 
 
 def latest_step(ckpt_dir: str) -> int | None:
-    if not os.path.isdir(ckpt_dir):
-        return None
-    steps = []
-    for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            if os.path.exists(os.path.join(ckpt_dir, name, "_COMMITTED")):
-                steps.append(int(name.split("_")[1]))
-    return max(steps) if steps else None
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
 
 
 def restore_checkpoint(ckpt_dir: str, step: int, like_tree, shardings=None):
     """Restore into the structure of `like_tree`; optionally reshard onto a
     (possibly different) mesh via a matching tree of NamedShardings."""
-    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    d = step_dir(ckpt_dir, step)
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
     by_path = {e["path"]: e for e in manifest["leaves"]}
@@ -138,9 +157,6 @@ class AsyncCheckpointer:
             raise err
 
     def _gc(self):
-        steps = sorted(
-            int(n.split("_")[1]) for n in os.listdir(self.ckpt_dir)
-            if n.startswith("step_") and not n.endswith(".tmp"))
+        steps = list_steps(self.ckpt_dir, committed_only=False)
         for s in steps[: -self.keep]:
-            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
-                          ignore_errors=True)
+            shutil.rmtree(step_dir(self.ckpt_dir, s), ignore_errors=True)

@@ -37,6 +37,8 @@ __all__ = [
     "build_hnsw",
     "restructure",
     "db_size_bytes",
+    "db_to_tables",
+    "db_from_tables",
 ]
 
 
@@ -335,6 +337,86 @@ def restructure(
         entry=np.asarray(g.entry, dtype=np.int32),
         max_level=np.asarray(g.max_level, dtype=np.int32),
         n_valid=np.asarray(n, dtype=np.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Block-layout serialization (repro.store) — DeviceDB <-> row-major tables
+# ---------------------------------------------------------------------------
+
+# The paper's Fig. 5 tables, in on-flash order: raw-data table, layer-0
+# table, upper-list table, index table (up_ptr/levels/gids/sqnorms are the
+# per-point index records; sqnorms ride along so one row read yields the
+# ||x||^2 term of the distance).
+TABLE_ORDER = ("vectors", "sqnorms", "l0_nbrs", "up_nbrs", "up_ptr",
+               "levels", "gids")
+
+
+def db_to_tables(db: DeviceDB) -> tuple[dict[str, np.ndarray], dict]:
+    """Flatten a (possibly partition-stacked) DeviceDB into 2-D row-major
+    tables addressable as fixed-stride rows — the unit the block store
+    persists. Returns (tables, meta); `db_from_tables` inverts exactly.
+
+    Row addressing for a stacked DB with P partitions:
+      vectors/sqnorms/l0_nbrs/up_ptr/levels/gids : row = p * n_pad + i
+      up_nbrs                                    : row = (p * L + layer) * u_pad + r
+    """
+    v = np.asarray(db.vectors)
+    stacked = v.ndim == 3
+    P = v.shape[0] if stacked else 1
+
+    def flat(name, width):
+        a = np.asarray(getattr(db, name))
+        return np.ascontiguousarray(a.reshape(-1, width))
+
+    n_pad, d_pad = v.shape[-2], v.shape[-1]
+    up = np.asarray(db.up_nbrs)
+    n_layers, u_pad, mp = up.shape[-3], up.shape[-2], up.shape[-1]
+    tables = {
+        "vectors": flat("vectors", d_pad),
+        "sqnorms": flat("sqnorms", 1),
+        "l0_nbrs": flat("l0_nbrs", np.asarray(db.l0_nbrs).shape[-1]),
+        "up_nbrs": flat("up_nbrs", mp),
+        "up_ptr": flat("up_ptr", 1),
+        "levels": flat("levels", 1),
+        "gids": flat("gids", 1),
+    }
+    as_list = lambda x: np.atleast_1d(np.asarray(x)).astype(int).tolist()
+    meta = {
+        "stacked": stacked,
+        "num_partitions": P,
+        "n_pad": n_pad,
+        "d_pad": d_pad,
+        "m0_pad": int(tables["l0_nbrs"].shape[1]),
+        "n_layers": n_layers,
+        "up_pad": u_pad,
+        "m_pad": mp,
+        "entry": as_list(db.entry),
+        "max_level": as_list(db.max_level),
+        "n_valid": as_list(db.n_valid),
+    }
+    return tables, meta
+
+
+def db_from_tables(tables: dict[str, np.ndarray], meta: dict) -> DeviceDB:
+    """Rebuild the DeviceDB from row-major tables (inverse of db_to_tables)."""
+    P, n_pad = meta["num_partitions"], meta["n_pad"]
+    lead = (P,) if meta["stacked"] else ()
+    scalar = lambda xs: (np.asarray(xs, np.int32) if meta["stacked"]
+                         else np.asarray(xs[0], np.int32))
+    shp = lambda *tail: lead + tail
+    return DeviceDB(
+        vectors=np.asarray(tables["vectors"]).reshape(shp(n_pad, meta["d_pad"])),
+        sqnorms=np.asarray(tables["sqnorms"]).reshape(shp(n_pad)),
+        l0_nbrs=np.asarray(tables["l0_nbrs"]).reshape(shp(n_pad, meta["m0_pad"])),
+        up_nbrs=np.asarray(tables["up_nbrs"]).reshape(
+            shp(meta["n_layers"], meta["up_pad"], meta["m_pad"])),
+        up_ptr=np.asarray(tables["up_ptr"]).reshape(shp(n_pad)),
+        levels=np.asarray(tables["levels"]).reshape(shp(n_pad)),
+        gids=np.asarray(tables["gids"]).reshape(shp(n_pad)),
+        entry=scalar(meta["entry"]),
+        max_level=scalar(meta["max_level"]),
+        n_valid=scalar(meta["n_valid"]),
     )
 
 

@@ -27,7 +27,7 @@ import dataclasses
 
 from repro.models.transformer import LayerSpec, ModelConfig
 
-__all__ = ["cell_costs"]
+__all__ = ["cell_costs", "StorageCost", "storage_cost"]
 
 
 def _attn_flops_tok(cfg, t_kv):
@@ -208,6 +208,58 @@ def cell_costs(cfg: ModelConfig, kind: str, seq: int, batch: int,
     detail = {"fwd_flops_tok": f_tok, "n_params": n_params, "tokens": tokens}
     return CellCost(flops_per_dev, bytes_per_dev, coll_per_dev,
                     flops_total, detail)
+
+
+# ---------------------------------------------------------------------------
+# Storage tier (repro.store / the paper's SmartSSD flash, §6.5)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StorageCost:
+    """The storage-bandwidth roofline term for an out-of-core (csd) search.
+
+    block_accesses : demand block accesses issued by the engine
+    blocks_from_flash : accesses that miss the cache and touch flash
+    bytes_from_flash  : blocks_from_flash * block_size (P2P-DMA traffic)
+    storage_s         : seconds on the SSD link — compare against the
+                        compute/memory/collective terms of roofline_terms;
+                        at SIFT1B scale this term dominates (paper Fig. 12:
+                        the platform is SSD-bound, 75.59 QPS)
+    """
+
+    block_accesses: float
+    blocks_from_flash: float
+    bytes_from_flash: float
+    storage_s: float
+    hit_rate: float
+
+
+def storage_cost(block_accesses: float, block_size: int,
+                 cache_hit_rate: float = 0.0,
+                 ssd_bw: float | None = None) -> StorageCost:
+    """Cache-hit-adjusted storage term: only misses cross the flash link.
+
+    `block_accesses` is what the engine asks for (e.g. measured
+    `QueryStats.block_reads` at hit rate 0, or the analytic
+    hops * maxM0 * blocks-per-vector); the PageCache absorbs
+    `cache_hit_rate` of it.
+    """
+    if not 0.0 <= cache_hit_rate <= 1.0:
+        raise ValueError(f"cache_hit_rate must be in [0, 1], "
+                         f"got {cache_hit_rate}")
+    if ssd_bw is None:
+        from repro.launch.roofline import HW
+        ssd_bw = HW().ssd_bw
+    misses = block_accesses * (1.0 - cache_hit_rate)
+    nbytes = misses * block_size
+    return StorageCost(
+        block_accesses=float(block_accesses),
+        blocks_from_flash=float(misses),
+        bytes_from_flash=float(nbytes),
+        storage_s=float(nbytes / ssd_bw),
+        hit_rate=float(cache_hit_rate),
+    )
 
 
 def _count_params(cfg: ModelConfig) -> float:

@@ -21,12 +21,16 @@ __all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops"]
 
 @dataclasses.dataclass(frozen=True)
 class HW:
-    """TPU v5e chip constants (per assignment)."""
+    """TPU v5e chip constants (per assignment) + the storage tier."""
 
     peak_flops: float = 197e12      # bf16 FLOP/s
     hbm_bw: float = 819e9           # B/s
     ici_bw: float = 50e9            # B/s per link
     hbm_bytes: float = 16e9
+    # Storage tier (the paper's SmartSSD): sequential-read / P2P-DMA
+    # bandwidth from flash to the accelerator — §6.5 measures ~3 GB/s and
+    # shows the whole platform is bound by this term at SIFT1B scale.
+    ssd_bw: float = 3.0e9           # B/s per device
 
 
 _DTYPE_BYTES = {

@@ -1,0 +1,37 @@
+"""repro.store — block-aligned storage-resident vector/graph store.
+
+The paper's database lives on SmartSSD flash and reaches the accelerator
+as block-granular P2P-DMA reads; this package models that tier so datasets
+larger than host memory are a supported scenario:
+
+  blockfile : block-aligned data file + manifest + commit marker
+  cache     : LRU PageCache with hit/miss/bytes-read counters (Fig. 9's
+              "number of vector reads" for the storage tier)
+  prefetch  : async next-hop prefetcher overlapping flash reads with compute
+  layout    : paper Fig. 5 table layout + the row-granular StoreReader
+  csd       : the out-of-core two-stage engine, registered as the `csd`
+              backend of repro.api
+"""
+
+from repro.store.blockfile import (
+    BlockFile,
+    BlockFileWriter,
+    StoreFormatError,
+)
+from repro.store.cache import PageCache
+from repro.store.csd import CSDBackend, store_search
+from repro.store.layout import StoreReader, open_store, write_store
+from repro.store.prefetch import Prefetcher
+
+__all__ = [
+    "BlockFile",
+    "BlockFileWriter",
+    "StoreFormatError",
+    "PageCache",
+    "Prefetcher",
+    "StoreReader",
+    "open_store",
+    "write_store",
+    "CSDBackend",
+    "store_search",
+]

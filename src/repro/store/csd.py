@@ -1,0 +1,405 @@
+"""Out-of-core two-stage search over the block store (the `csd` backend).
+
+This is the repo's model of the paper's computational-storage dataflow: the
+restructured DB lives on "flash" (the block store), a small PageCache
+stands in for the SmartSSD DRAM, and only block-granular reads flow to the
+compute side — host memory stays bounded by `cache_bytes` no matter how
+large the dataset is.
+
+The traversal is the *same algorithm* as the accelerator-resident kernel
+(core/search.py), re-driven from the host so every data access becomes a
+batched block read:
+
+  per hop : pop the best candidates for the whole query batch in lockstep,
+            read their neighbor-list rows (layer-0 table), test the visited
+            bitmap, read only the unvisited neighbors' vector + sqnorm rows
+            (raw-data + index tables), and feed the gathered tile to a
+            jitted hop kernel built from the SAME primitives the device
+            kernel uses (`metric_distance`, `merge_sorted`) — so the csd
+            backend returns bit-identical top-k to the `partitioned`
+            backend at equal ef/K/metric.
+
+Stage 2 (`rerank=True`) gathers the candidate vectors back from the store
+and re-scores them with `api.rerank.batched_rerank` over a compact,
+monotonically-remapped id space — again exactly matching the in-memory
+backends. The async Prefetcher overlaps hop t+1's neighbor-block fetches
+with hop t's device compute (paper §5.2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import typing
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partitioned import build_partitioned_db, merge_topk
+from repro.core.search import SearchParams, merge_sorted, metric_distance
+from repro.store.layout import StoreReader, open_store, write_store
+
+if typing.TYPE_CHECKING:  # repro.api imports this module to register the
+    from repro.api.types import IndexSpec  # backend — keep runtime acyclic
+                                           # by importing api lazily
+
+__all__ = ["CSDBackend", "store_search"]
+
+
+# ---------------------------------------------------------------------------
+# Jitted hop kernels — the device-side compute fed by store gathers.
+# The arithmetic mirrors core/search.py line for line; gathers that the
+# resident kernel does from HBM arrive here as host-assembled tiles.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _query_prep(q, ep_vec, ep_sq, metric):
+    """qsq per query + distance to the partition entry point."""
+    def one(qq):
+        qsq = qq @ qq
+        ep_d = metric_distance(metric, ep_vec @ qq, ep_sq, qsq)
+        return qsq, ep_d
+    return jax.vmap(one)(q)
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _upper_step(improved, c, c_d, calcs, nbrs, valid, vecs, sqs, q, qsq,
+                metric):
+    """One lockstep greedy hop in an upper layer (cf. _greedy_upper)."""
+    def one(improved, c, c_d, calcs, nbrs, valid, vecs, sqs, qq, qsq):
+        d = metric_distance(metric, vecs @ qq, sqs, qsq)
+        d = jnp.where(valid, d, jnp.inf)
+        safe = jnp.where(valid, nbrs, 0)
+        j = jnp.argmin(d)
+        best_d, best = d[j], safe[j]
+        imp = best_d < c_d
+        sel = lambda n, o: jnp.where(improved, n, o)
+        return (sel(jnp.where(imp, best, c), c),
+                sel(jnp.where(imp, best_d, c_d), c_d),
+                improved & imp,
+                sel(calcs + jnp.sum(valid), calcs))
+    return jax.vmap(one)(improved, c, c_d, calcs, nbrs, valid, vecs, sqs,
+                         q, qsq)
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _layer0_step(active, cand_d, cand_i, fin_d, fin_i, hops, calcs,
+                 nbrs, act, vecs, sqs, q, qsq, metric):
+    """One lockstep beam hop at layer 0 (cf. _search_layer0's body).
+
+    `act` = neighbor lanes that are valid AND unvisited — the visited
+    bitmap is tested/updated on the host so only unvisited neighbors'
+    vectors were read from the store (the paper's single-bit visited list
+    as a flash-read filter)."""
+    EF = fin_d.shape[-1]
+    C = cand_d.shape[-1]
+
+    def one(active, cand_d, cand_i, fin_d, fin_i, hops, calcs,
+            nbrs, act, vecs, sqs, qq, qsq):
+        ncand_d = jnp.roll(cand_d, -1).at[-1].set(jnp.inf)
+        ncand_i = jnp.roll(cand_i, -1).at[-1].set(-1)
+        d = metric_distance(metric, vecs @ qq, sqs, qsq)
+        d = jnp.where(act, d, jnp.inf)
+        ncalcs = calcs + jnp.sum(act)
+        d = jnp.where(d < fin_d[-1], d, jnp.inf)
+        safe = jnp.where(act, nbrs, 0)
+        ids = jnp.where(jnp.isfinite(d), safe, -1)
+        order = jnp.argsort(d, stable=True)
+        bd, bi = d[order], ids[order]
+        fd, fi = merge_sorted(fin_d, fin_i, bd, bi)
+        cd, ci = merge_sorted(ncand_d, ncand_i, bd, bi)
+        sel = lambda n, o: jnp.where(active, n, o)
+        return (sel(cd[:C], cand_d), sel(ci[:C], cand_i),
+                sel(fd[:EF], fin_d), sel(fi[:EF], fin_i),
+                hops + active.astype(hops.dtype),
+                sel(ncalcs, calcs))
+    return jax.vmap(one)(active, cand_d, cand_i, fin_d, fin_i, hops, calcs,
+                         nbrs, act, vecs, sqs, q, qsq)
+
+
+# ---------------------------------------------------------------------------
+# Host-driven traversal over store reads
+# ---------------------------------------------------------------------------
+
+
+def _gather_vec_sq(reader: StoreReader, p: int, ids: np.ndarray,
+                   mask: np.ndarray):
+    """Vector + sqnorm tiles for masked neighbor lanes; zeros elsewhere
+    (masked lanes are forced to +inf downstream, so zeros are inert)."""
+    vecs = np.zeros(ids.shape + (reader.d_pad,), np.float32)
+    sqs = np.zeros(ids.shape, np.float32)
+    if mask.any():
+        rows = reader.row("vectors", p, ids[mask])
+        vecs[mask] = reader.read_rows("vectors", rows)
+        sqs[mask] = reader.read_rows("sqnorms", rows)[..., 0]
+    return vecs, sqs
+
+
+def _visited_test_and_set(bitmap: np.ndarray, ids: np.ndarray,
+                          valid: np.ndarray) -> np.ndarray:
+    """Host mirror of core.search.visited_test_and_set over [B, M] lanes.
+    Returns `was` (visited-before OR invalid); sets bits for valid lanes."""
+    B = bitmap.shape[0]
+    safe = np.where(valid, ids, 0).astype(np.int64)
+    w = safe >> 5
+    b5 = (safe & 31).astype(np.uint32)
+    rows = np.arange(B)[:, None]
+    was = ((bitmap[rows, w] >> b5) & np.uint32(1)) > 0
+    was |= ~valid
+    bits = np.where(~was, np.left_shift(np.uint32(1), b5), np.uint32(0))
+    np.bitwise_or.at(bitmap, (rows, w), bits)
+    return was
+
+
+def _search_one_partition(reader: StoreReader, p: int, q_pad: jnp.ndarray,
+                          params: SearchParams):
+    """Lockstep batched search of one sub-graph, all data via the store.
+
+    Returns (gids [B,k], dists [B,k], hops [B], calcs [B]) — numerically
+    identical to `batch_search` on the resident partition."""
+    B = int(q_pad.shape[0])
+    sp = params.resolve(reader.m0_pad)
+    C, EF, K = sp.cand_size, sp.ef, sp.k
+    metric = sp.metric
+
+    ep = int(reader.entry[p] if reader.entry.ndim else reader.entry)
+    max_level = int(reader.max_level[p] if reader.max_level.ndim
+                    else reader.max_level)
+    ep_row = reader.row("vectors", p, [ep])
+    ep_vec = jnp.asarray(reader.read_rows("vectors", ep_row)[0])
+    ep_sq = jnp.asarray(reader.read_rows("sqnorms", ep_row)[0, 0])
+    qsq, ep_d = _query_prep(q_pad, ep_vec, ep_sq, metric)
+
+    # -- upper layers: lockstep greedy descent (paper §5.2.2) ---------------
+    cur = jnp.full((B,), ep, jnp.int32)
+    cur_d = ep_d
+    calcs = jnp.ones((B,), jnp.int32)
+    n_layers = reader.n_layers
+    for layer in range(min(n_layers, max_level), 0, -1):
+        improved = jnp.ones((B,), bool)
+        hop = 0
+        while bool(np.asarray(improved).any()) and hop < sp.upper_hops:
+            imp_h = np.asarray(improved)
+            cur_h = np.asarray(cur)
+            nbrs = np.full((B, reader.m_pad), -1, np.int32)
+            if imp_h.any():
+                ptr = reader.read_rows(
+                    "up_ptr", reader.row("up_ptr", p, cur_h[imp_h]))[:, 0]
+                has = ptr >= 0
+                if has.any():
+                    urows = reader.up_row(p, layer - 1, ptr[has])
+                    lanes = np.flatnonzero(imp_h)[has]
+                    nbrs[lanes] = reader.read_rows("up_nbrs", urows)
+            valid = (nbrs >= 0) & imp_h[:, None]
+            vecs, sqs = _gather_vec_sq(reader, p, nbrs, valid)
+            cur, cur_d, improved, calcs = _upper_step(
+                improved, cur, cur_d, calcs,
+                jnp.asarray(nbrs), jnp.asarray(valid),
+                jnp.asarray(vecs), jnp.asarray(sqs), q_pad, qsq, metric)
+            hop += 1
+
+    # -- layer 0: lockstep beam search (paper §5.2.3) -----------------------
+    n_words = reader.n_pad // 32
+    bitmap = np.zeros((B, n_words), np.uint32)
+    ep_ids = np.asarray(cur)[:, None]
+    _visited_test_and_set(bitmap, ep_ids, np.ones((B, 1), bool))
+    cand_d = jnp.full((B, C), jnp.inf).at[:, 0].set(cur_d)
+    cand_i = jnp.full((B, C), -1, jnp.int32).at[:, 0].set(cur)
+    fin_d = jnp.full((B, EF), jnp.inf).at[:, 0].set(cur_d)
+    fin_i = jnp.full((B, EF), -1, jnp.int32).at[:, 0].set(cur)
+    hops = jnp.zeros((B,), jnp.int32)
+
+    while True:
+        cd_h, fd_h = np.asarray(cand_d), np.asarray(fin_d)
+        hops_h = np.asarray(hops)
+        active = (cd_h[:, 0] < fd_h[:, -1]) & (hops_h < sp.max_hops)
+        if not active.any():
+            break
+        pops = np.asarray(cand_i)[:, 0]
+        nbrs = np.full((B, reader.m0_pad), -1, np.int32)
+        if active.any():
+            lanes = np.flatnonzero(active)
+            nbrs[lanes] = reader.read_rows(
+                "l0_nbrs", reader.row("l0_nbrs", p, pops[lanes]))
+        valid = (nbrs >= 0) & active[:, None]
+        was = _visited_test_and_set(bitmap, nbrs, valid)
+        act = valid & ~was
+        vecs, sqs = _gather_vec_sq(reader, p, nbrs, act)
+        cand_d, cand_i, fin_d, fin_i, hops, calcs = _layer0_step(
+            jnp.asarray(active), cand_d, cand_i, fin_d, fin_i, hops, calcs,
+            jnp.asarray(nbrs), jnp.asarray(act),
+            jnp.asarray(vecs), jnp.asarray(sqs), q_pad, qsq, metric)
+        # overlap the next hop's fetches with this round-trip
+        reader.prefetch_next_hop(p, np.asarray(cand_i)[:, :2])
+
+    k_i = np.asarray(fin_i)[:, :K]
+    k_d = np.asarray(fin_d)[:, :K]
+    k_g = np.full_like(k_i, -1)
+    vmask = k_i >= 0
+    if vmask.any():
+        k_g[vmask] = reader.read_rows(
+            "gids", reader.row("gids", p, k_i[vmask]))[:, 0]
+    return k_g, k_d, np.asarray(hops), np.asarray(calcs)
+
+
+def store_search(reader: StoreReader, queries, params: SearchParams,
+                 merge: bool = True):
+    """Two-stage search over every partition of the store.
+
+    merge=True  -> (ids [B,k], dists [B,k], hops [B], calcs [B])
+    merge=False -> the unmerged [B, P*k] stage-1 pool (rerank consumes it).
+    """
+    q = np.asarray(queries, np.float32)
+    if q.shape[-1] < reader.d_pad:
+        q = np.pad(q, ((0, 0), (0, reader.d_pad - q.shape[-1])))
+    q_pad = jnp.asarray(q)
+    per_ids, per_ds = [], []
+    hops = np.zeros(q.shape[0], np.int64)
+    calcs = np.zeros(q.shape[0], np.int64)
+    for p in range(reader.num_partitions):
+        gi, gd, h, c = _search_one_partition(reader, p, q_pad, params)
+        per_ids.append(gi)
+        per_ds.append(gd)
+        hops += h
+        calcs += c
+    ids = np.stack(per_ids, axis=1)          # [B, P, k]
+    ds = np.stack(per_ds, axis=1)
+    if not merge:
+        b = ids.shape[0]
+        return ids.reshape(b, -1), ds.reshape(b, -1), hops, calcs
+    out_i, out_d = merge_topk(jnp.asarray(ids), jnp.asarray(ds), params.k)
+    return out_i, out_d, hops, calcs
+
+
+# ---------------------------------------------------------------------------
+# Backend
+# ---------------------------------------------------------------------------
+
+
+class CSDBackend:
+    """Storage-resident two-stage engine (registered as `csd`).
+
+    Build restructures the dataset into the block store at
+    `spec.storage_path`; serving holds only the PageCache (`cache_bytes`)
+    in memory. `rerank` needs no `keep_vectors` — stage 2 reads the raw
+    vectors back from the store.
+    """
+
+    uses_graph = True
+
+    def __init__(self, spec: IndexSpec, reader: StoreReader):
+        self.spec = spec
+        self.reader = reader
+
+    @staticmethod
+    def _storage_path(spec: IndexSpec) -> str:
+        if not spec.storage_path:
+            raise ValueError(
+                "backend='csd' persists the database to a block store: set "
+                "IndexSpec(storage_path=...) to its directory")
+        return spec.storage_path
+
+    @classmethod
+    def build(cls, vectors: np.ndarray, spec: IndexSpec, mesh=None):
+        path = cls._storage_path(spec)
+        pdb = build_partitioned_db(vectors, spec.num_partitions, spec.hnsw)
+        write_store(path, pdb, block_size=spec.block_size)
+        del pdb                     # from here on, the store is the database
+        return cls(spec, open_store(path, spec.cache_bytes,
+                                    prefetch=spec.prefetch))
+
+    @classmethod
+    def from_partitioned(cls, pdb, spec: IndexSpec):
+        """Convert an already-built resident PartitionedDB into an
+        out-of-core service (benchmarks reuse one graph build)."""
+        path = cls._storage_path(spec)
+        write_store(path, pdb, block_size=spec.block_size)
+        return cls(spec, open_store(path, spec.cache_bytes,
+                                    prefetch=spec.prefetch))
+
+    def params(self, k: int, ef: int) -> SearchParams:
+        return SearchParams(ef=ef, k=k, metric=self.spec.metric)
+
+    def search(self, queries, k: int, ef: int, rerank: bool,
+               with_stats: bool):
+        r = self.reader
+        before = None
+        if with_stats:
+            if r.prefetcher is not None:
+                r.prefetcher.drain()     # don't attribute a previous
+            before = r.cache.snapshot()  # request's in-flight reads to us
+        p = self.params(k, ef)
+        if rerank:
+            cand, _, hops, calcs = store_search(r, queries, p, merge=False)
+            ids, dists = self._rerank_from_store(queries, cand, k)
+        else:
+            ids, dists, hops, calcs = store_search(r, queries, p)
+        stats = None
+        if with_stats:
+            from repro.api.types import QueryStats
+            if r.prefetcher is not None:
+                r.prefetcher.drain()     # settle in-flight reads (counters)
+            after = r.cache.snapshot()
+            demand = ((after["hits"] - before["hits"])
+                      + (after["misses"] - before["misses"]))
+            hit_rate = ((after["hits"] - before["hits"]) / demand
+                        if demand else 0.0)
+            stats = QueryStats(
+                hops=jnp.asarray(hops, jnp.int32),
+                dist_calcs=jnp.asarray(calcs, jnp.int32),
+                block_reads=after["block_reads"] - before["block_reads"],
+                cache_hits=after["hits"] - before["hits"],
+                cache_hit_rate=hit_rate,
+                bytes_read=after["bytes_read"] - before["bytes_read"],
+            )
+        return jnp.asarray(ids), jnp.asarray(dists), stats
+
+    def _rerank_from_store(self, queries, cand: np.ndarray, k: int):
+        """Stage-2 exact re-score from store reads (paper Fig. 4 stage 2).
+
+        Candidates are remapped onto a compact, monotonically-ordered id
+        space so `batched_rerank` behaves exactly as it does over the full
+        resident vector table."""
+        from repro.api.rerank import batched_rerank
+        r = self.reader
+        if r.partition_starts is None:
+            raise ValueError(
+                "rerank over this store is unsupported: partition global "
+                "ids are not contiguous ranges")
+        valid = cand >= 0
+        uniq = np.unique(cand[valid])
+        if uniq.size == 0:
+            b = cand.shape[0]
+            return (np.full((b, k), -1, np.int32),
+                    np.full((b, k), np.inf, np.float32))
+        part = np.searchsorted(r.partition_starts, uniq, side="right") - 1
+        local = uniq - r.partition_starts[part]
+        rows = part * r.n_pad + local
+        vecs = jnp.asarray(r.read_rows("vectors", rows)[:, :r.dim])
+        sqs = jnp.einsum("nd,nd->n", vecs, vecs)
+        compact = np.where(valid,
+                           np.searchsorted(uniq, np.where(valid, cand, 0)),
+                           -1).astype(np.int32)
+        q = jnp.asarray(np.asarray(queries, np.float32))
+        ids_c, dists = batched_rerank(vecs, sqs, q, jnp.asarray(compact), k,
+                                      self.spec.metric)
+        ids_c = np.asarray(ids_c)
+        ids = np.where(ids_c >= 0, uniq[np.maximum(ids_c, 0)], -1)
+        return ids.astype(np.int32), dists
+
+    # -- persistence ---------------------------------------------------------
+    # The block store IS the database: state_tree carries only a format tag,
+    # and the index manifest's spec points at the block files (storage_path)
+    # instead of pickled arrays.
+
+    def state_tree(self) -> dict:
+        return {"meta": {"csd_store": np.int32(1),
+                         "block_size": np.int32(self.spec.block_size)}}
+
+    @classmethod
+    def from_state(cls, spec: IndexSpec, leaves: dict, mesh=None):
+        path = cls._storage_path(spec)
+        return cls(spec, open_store(path, spec.cache_bytes,
+                                    prefetch=spec.prefetch))

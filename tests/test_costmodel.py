@@ -14,7 +14,7 @@ import numpy as np
 import pytest
 
 from repro.configs import reduced_config
-from repro.launch.costmodel import _count_params, cell_costs
+from repro.launch.costmodel import _count_params, cell_costs, storage_cost
 from repro.models.model import prefill_step
 from repro.models.transformer import init_cache, init_params
 
@@ -57,6 +57,25 @@ def test_prefill_flops_match_xla(arch, tol):
     assert (1 - tol) < ratio < (1 + 2 * tol), (
         f"{arch}: XLA {got/1e6:.1f}MF vs analytic {want/1e6:.1f}MF "
         f"(ratio {ratio:.2f})")
+
+
+def test_storage_cost_term():
+    """The csd storage-bandwidth term: blocks * block_size / SSD-BW,
+    cache-hit-adjusted; hits scale the flash traffic linearly."""
+    from repro.launch.roofline import HW
+    hw = HW()
+    cold = storage_cost(1000, 4096, cache_hit_rate=0.0, ssd_bw=hw.ssd_bw)
+    assert cold.blocks_from_flash == 1000
+    assert cold.bytes_from_flash == 1000 * 4096
+    assert cold.storage_s == pytest.approx(1000 * 4096 / hw.ssd_bw)
+    warm = storage_cost(1000, 4096, cache_hit_rate=0.9, ssd_bw=hw.ssd_bw)
+    assert warm.bytes_from_flash == pytest.approx(0.1 * cold.bytes_from_flash)
+    assert warm.storage_s == pytest.approx(0.1 * cold.storage_s)
+    # the paper's regime: the storage term dwarfs the HBM term for the
+    # same traffic (SmartSSD ~3 GB/s vs HBM ~819 GB/s)
+    assert cold.storage_s > (1000 * 4096 / hw.hbm_bw) * 100
+    with pytest.raises(ValueError, match="cache_hit_rate"):
+        storage_cost(1, 4096, cache_hit_rate=1.5)
 
 
 @pytest.mark.parametrize("arch", ["granite_3_8b", "qwen3_14b",
