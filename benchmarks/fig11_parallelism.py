@@ -10,9 +10,21 @@ derives the modeled speedup on v5e constants (819 GB/s HBM; the paper's
 per-query compute measured from the single-device run). Correctness of the
 distributed execution itself is covered by tests/test_distributed.py on 8
 fake devices.
+
+`--serve` adds the deployment-pipeline rows: the repro.serve dynamic
+batcher + replica pool swept over replicas x max_batch. Wall QPS on one
+core is contention-bound, so the scaling column is `modeled_qps` =
+(uncontended 1-replica QPS) x (dispatch balance = nq / max per-replica
+queries) — measured from the dispatcher's actual per-replica assignment,
+so a load-balancing regression shows up as a flattened curve.
+
+  PYTHONPATH=src python -m benchmarks.fig11_parallelism --serve
+  PYTHONPATH=src python -m benchmarks.run --only fig11 --serve
 """
 
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +35,7 @@ from repro.core.partitioned import search_partitioned
 from repro.launch.roofline import HW
 
 
-def run():
+def run(serve: bool = False):
     ctx = get_ctx()
     q = ctx.queries
     # per-partition [P, B] counters: drive the api backend's engine directly
@@ -58,4 +70,77 @@ def run():
                      f"modeled_speedup={t1/t_q:.2f}x"))
     rows.append(("fig11_paper_reference", 0.0,
                  "paper: graph 3.67x@4dev, query 1.56x@4dev"))
+    if serve:
+        rows.extend(serve_rows())
     return rows
+
+
+# ---------------------------------------------------------------------------
+# --serve: replicas x max_batch sweep through the async serving subsystem
+# ---------------------------------------------------------------------------
+
+
+def _serve_window(svc, queries, n_replicas: int, max_batch: int):
+    """One measured serving window; returns (wall_s, ServeStats)."""
+    from repro.serve import SearchServer
+
+    srv = SearchServer(svc, replicas=n_replicas, max_batch=max_batch,
+                       max_wait_ms=1.0)
+    try:
+        t0 = time.perf_counter()
+        for f in srv.submit_many(queries, k=10, ef=40):
+            f.result()
+        wall = time.perf_counter() - t0
+        return wall, srv.stats()
+    finally:
+        srv.shutdown()
+
+
+def serve_rows():
+    ctx = get_ctx()
+    q = ctx.queries
+    nq = len(q)
+    # warm the jit cache for every batch bucket the sweep will produce
+    # (powers of two up to the largest max_batch), so measured windows
+    # time serving, not compilation
+    from repro.api import SearchRequest
+    b = 1
+    while b <= 64:
+        ctx.svc.search(SearchRequest(queries=q[:b], k=10, ef=40))
+        b *= 2
+    rows = []
+    for max_batch in (16, 64):
+        base_qps = None
+        for nrep in (1, 2, 4):
+            wall, st = _serve_window(ctx.svc, q, nrep, max_batch)
+            qps = nq / wall
+            per_rep = [r["queries"] for r in st.replicas]
+            balance = nq / max(per_rep)          # == nrep when balanced
+            if base_qps is None:
+                base_qps = qps                   # uncontended single replica
+            modeled = base_qps * balance
+            rows.append((
+                f"fig11_serve_{nrep}rep_batch{max_batch}",
+                wall / nq * 1e6,
+                f"qps={qps:.1f};modeled_qps={modeled:.1f};"
+                f"modeled_speedup={modeled / base_qps:.2f}x;"
+                f"mean_batch={st.mean_batch:.1f};"
+                f"queue_p50_ms={st.queue_ms['p50']:.2f};"
+                f"e2e_p99_ms={st.e2e_ms['p99']:.1f};"
+                f"per_replica_q={'/'.join(map(str, per_rep))}"))
+    rows.append(("fig11_serve_paper_reference", 0.0,
+                 "paper graph parallelism 3.67x@4dev; modeled_speedup = "
+                 "dispatch balance x 1-replica QPS (1 CPU core: wall QPS "
+                 "is contention-bound, balance is the measured mechanism)"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--serve", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(serve=args.serve):
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")

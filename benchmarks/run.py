@@ -31,6 +31,9 @@ def main() -> None:
     ap.add_argument("--backend", default=None,
                     help="extra backend rows for modules that support it "
                          "(fig9: 'csd' adds out-of-core block-read rows)")
+    ap.add_argument("--serve", action="store_true",
+                    help="extra serving rows for modules that support it "
+                         "(fig11: repro.serve replicas x max_batch sweep)")
     args = ap.parse_args()
     mods = MODULES
     if args.only:
@@ -45,6 +48,9 @@ def main() -> None:
             if (args.backend and
                     "backend" in inspect.signature(mod.run).parameters):
                 kwargs["backend"] = args.backend
+            if (args.serve and
+                    "serve" in inspect.signature(mod.run).parameters):
+                kwargs["serve"] = True
             for row in mod.run(**kwargs):
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
             sys.stdout.flush()

@@ -1,19 +1,26 @@
-"""Batched ANN serving loop (the paper's deployment mode) on repro.api.
+"""ANN serving CLI (the paper's deployment mode) over repro.api/repro.serve.
 
-The request path mirrors paper Fig. 4: the database (all partitions) is
-resident on the accelerators; the host only batches `SearchRequest`s and
-collects (gid, dist) results. QPS / latency percentiles are printed per
-window — benchmarks/fig12_platforms.py reuses this loop. Backend and
-metric come from the CLI, so the same loop serves the exact scan, the
-monolithic graph, the paper's partitioned engine, or the distributed one:
+Two request paths, one flag apart:
+
+  sync (default)      : `serve_loop` — fixed-stride batches straight into
+                        `SearchService.search`; kept as the compatibility
+                        shim that benchmarks/fig12 and the examples use.
+  async (--serve-async): the repro.serve subsystem — per-query submission
+                        through the dynamic batcher and the replica pool,
+                        modeling the paper's host that feeds 4 SmartSSDs
+                        (Fig. 10); prints the full ServeStats rollup
+                        (QPS, queueing vs execution latency, batch-size
+                        histogram, per-replica counters).
 
   PYTHONPATH=src python -m repro.launch.serve --n 20000 --partitions 4 \
-      --batch 64 --num-batches 50 --backend partitioned --metric l2
+      --batch 64 --num-batches 50 --backend partitioned --metric l2 \
+      --serve-async --replicas 4 --max-batch 64 --max-wait-ms 2
 """
 
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 
 import jax
@@ -28,8 +35,9 @@ def serve_loop(service, queries, batch: int, k: int, ef: int,
                rerank: bool = False, log=print):
     """Stream `queries` through in fixed batches; returns (ids, stats).
 
-    `service` is a SearchService; the deprecated ANNEngine shim is accepted
-    too (it exposes the same search contract through its service).
+    Synchronous compatibility shim (fig12 / examples): no queue, no
+    dynamic batching — one blocking `search` per stride. `service` is a
+    SearchService; the deprecated ANNEngine shim is accepted too.
     """
     svc = getattr(service, "_service", service)
     lat = []
@@ -57,12 +65,70 @@ def serve_loop(service, queries, batch: int, k: int, ef: int,
     return np.concatenate(ids_all) if ids_all else np.zeros((0, k)), stats
 
 
+def serve_async(service, queries, *, k: int, ef: int, rerank: bool = False,
+                replicas: int = 2, max_batch: int = 64,
+                max_wait_ms: float = 2.0, log=print):
+    """Per-query submission through repro.serve; returns (ids, stats dict).
+
+    Queries are submitted one by one — the dynamic batcher, not the caller,
+    decides the accelerator batch shapes.
+    """
+    from repro.serve import SearchServer
+
+    svc = getattr(service, "_service", service)
+    with SearchServer(svc, replicas=replicas, max_batch=max_batch,
+                      max_wait_ms=max_wait_ms) as srv:
+        futs = srv.submit_many(queries, k=k, ef=ef, rerank=rerank)
+        results = [f.result() for f in futs]
+        srv.drain()
+        roll = srv.stats()
+    log(f"[serve-async] {roll.summary()}")
+    for r in roll.replicas:
+        extra = ("" if "block_reads" not in r else
+                 f"  block_reads={r['block_reads']} "
+                 f"hit_rate={r['cache_hit_rate']:.2f}")
+        log(f"[serve-async]   replica {r['replica']}: {r['queries']} queries "
+            f"in {r['batches']} batches, busy {r['busy_s']:.2f}s{extra}")
+    ids = np.stack([r.ids for r in results])
+    stats = {
+        "qps": roll.qps,
+        "p50_ms": roll.e2e_ms["p50"],
+        "p99_ms": roll.e2e_ms["p99"],
+        "queue_p50_ms": roll.queue_ms["p50"],
+        "exec_p50_ms": roll.exec_ms["p50"],
+        "batches": int(sum(roll.batch_sizes.values())),
+        "mean_batch": roll.mean_batch,
+        "replicas": roll.replicas,
+    }
+    return ids, stats
+
+
+def build_service(args, ds: VectorDataset) -> SearchService:
+    storage = args.storage
+    if args.backend == "csd" and not storage:
+        storage = tempfile.mkdtemp(prefix="repro-serve-csd-")
+        print(f"[serve] --storage not given; csd block store at {storage}")
+    spec = IndexSpec(metric=args.metric, backend=args.backend,
+                     num_partitions=args.partitions,
+                     hnsw=HNSWConfig(M=args.M),
+                     keep_vectors=args.rerank and args.backend != "csd",
+                     storage_path=storage)
+    print(f"[serve] building {spec.backend} index "
+          f"({args.partitions} partitions, metric={spec.metric}) over "
+          f"{args.n} vectors ...")
+    t0 = time.perf_counter()
+    service = SearchService.build(ds.vectors(), spec)
+    print(f"[serve] build {time.perf_counter()-t0:.1f}s")
+    return service
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=20000)
     ap.add_argument("--dim", type=int, default=128)
     ap.add_argument("--partitions", type=int, default=4)
-    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=64,
+                    help="sync stride / async submission window size")
     ap.add_argument("--num-batches", type=int, default=20)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--ef", type=int, default=40)
@@ -70,24 +136,31 @@ def main(argv=None):
     ap.add_argument("--metric", default="l2",
                     choices=["l2", "ip", "cosine"])
     ap.add_argument("--backend", default="partitioned",
-                    choices=["exact", "hnsw", "partitioned", "distributed"])
+                    choices=["exact", "hnsw", "partitioned", "distributed",
+                             "csd"])
     ap.add_argument("--rerank", action="store_true")
+    ap.add_argument("--serve-async", action="store_true",
+                    help="serve through repro.serve (queue + dynamic "
+                         "batcher + replica pool) instead of the sync loop")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="dynamic batcher flush size (default: --batch)")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--storage", default=None,
+                    help="csd block-store directory (default: a tempdir)")
     args = ap.parse_args(argv)
 
     ds = VectorDataset(args.n, args.dim)
-    spec = IndexSpec(metric=args.metric, backend=args.backend,
-                     num_partitions=args.partitions,
-                     hnsw=HNSWConfig(M=args.M),
-                     keep_vectors=args.rerank)
-    print(f"[serve] building {spec.backend} index "
-          f"({args.partitions} partitions, metric={spec.metric}) over "
-          f"{args.n} vectors ...")
-    t0 = time.perf_counter()
-    service = SearchService.build(ds.vectors(), spec)
-    print(f"[serve] build {time.perf_counter()-t0:.1f}s")
+    service = build_service(args, ds)
     queries = ds.queries(args.batch * args.num_batches)
-    _, stats = serve_loop(service, queries, args.batch, args.k, args.ef,
-                          rerank=args.rerank)
+    if args.serve_async:
+        _, stats = serve_async(
+            service, queries, k=args.k, ef=args.ef, rerank=args.rerank,
+            replicas=args.replicas, max_batch=args.max_batch or args.batch,
+            max_wait_ms=args.max_wait_ms)
+    else:
+        _, stats = serve_loop(service, queries, args.batch, args.k, args.ef,
+                              rerank=args.rerank)
     return stats
 
 

@@ -1,0 +1,32 @@
+"""repro.serve — async dynamic-batching query scheduler + replica dispatch.
+
+The deployment layer of the reproduction (paper Fig. 10-11): clients submit
+single queries and get futures; a dynamic batcher packs them into
+accelerator-sized `SearchRequest`s; a replica pool spreads batches over N
+`SearchService` replicas (independent PageCaches over one block store for
+the `csd` backend — the paper's 4-SmartSSD scale-up). See serve/README.md.
+"""
+
+from repro.serve.batcher import DynamicBatcher, bucket_size, slice_stats
+from repro.serve.dispatch import Replica, ReplicaPool
+from repro.serve.queue import (
+    PendingQuery,
+    QueryResult,
+    RequestQueue,
+    ServeClosed,
+)
+from repro.serve.server import SearchServer, ServeStats
+
+__all__ = [
+    "DynamicBatcher",
+    "bucket_size",
+    "slice_stats",
+    "Replica",
+    "ReplicaPool",
+    "PendingQuery",
+    "QueryResult",
+    "RequestQueue",
+    "ServeClosed",
+    "SearchServer",
+    "ServeStats",
+]

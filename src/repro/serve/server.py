@@ -1,0 +1,206 @@
+"""Serving front end: queue + dynamic batcher + replica pool, one object.
+
+    svc = SearchService.build(vectors, spec)
+    with SearchServer(svc, replicas=4, max_batch=64, max_wait_ms=2.0) as srv:
+        fut = srv.submit(query, k=10, ef=40)        # returns immediately
+        res = fut.result()                          # QueryResult
+        srv.drain()                                 # wait for in-flight work
+        print(srv.stats().summary())
+
+Latency semantics (see serve/README.md for the full table):
+
+    queue_ms : enqueue -> the batcher flushed the batch containing this
+               request (time spent waiting for co-riders / a flush slot)
+    exec_ms  : flush -> this request's results materialized on the host
+               (replica queueing + device compute + transfer)
+    e2e_ms   : enqueue -> materialized == queue_ms + exec_ms
+
+`ServeStats` is the rollup the paper's §6.4 deployment table needs: QPS
+over the measurement window, p50/p99 of each latency, the batch-size
+histogram (how well dynamic batching packs), and per-replica counters
+(including each csd replica's own block_reads / cache_hit_rate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import Counter
+from concurrent.futures import Future
+
+import numpy as np
+
+from repro.serve.batcher import DynamicBatcher
+from repro.serve.dispatch import ReplicaPool
+from repro.serve.queue import QueryResult, RequestQueue, ServeClosed
+
+__all__ = ["SearchServer", "ServeStats"]
+
+
+def _pct(xs: list[float]) -> dict:
+    if not xs:
+        return {"p50": 0.0, "p99": 0.0, "mean": 0.0}
+    a = np.asarray(xs)
+    return {"p50": float(np.percentile(a, 50)),
+            "p99": float(np.percentile(a, 99)),
+            "mean": float(a.mean())}
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStats:
+    """One rollup of a serving window."""
+
+    completed: int                  # requests resolved
+    wall_s: float                   # first enqueue -> last completion
+    qps: float
+    queue_ms: dict                  # {"p50", "p99", "mean"}
+    exec_ms: dict
+    e2e_ms: dict
+    batch_sizes: dict               # {real batch size: count} (pre-padding)
+    mean_batch: float
+    replicas: list                  # per-replica dicts (dispatch.Replica.stats)
+
+    def summary(self) -> str:
+        per_rep = " ".join(
+            f"r{r['replica']}:{r['queries']}q" for r in self.replicas)
+        return (f"{self.completed} queries  {self.qps:.1f} QPS  "
+                f"queue p50 {self.queue_ms['p50']:.2f}ms  "
+                f"exec p50 {self.exec_ms['p50']:.2f}ms  "
+                f"e2e p99 {self.e2e_ms['p99']:.2f}ms  "
+                f"mean batch {self.mean_batch:.1f}  [{per_rep}]")
+
+
+class _Collector:
+    """Thread-safe sink the batcher reports into."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.queue_ms: list[float] = []
+        self.exec_ms: list[float] = []
+        self.e2e_ms: list[float] = []
+        self.batch_sizes: Counter = Counter()
+        self.t_first: float | None = None   # first enqueue (set by server)
+        self.t_last: float | None = None    # last completion
+
+    def mark_enqueue(self, t: float) -> None:
+        with self._lock:
+            if self.t_first is None:
+                self.t_first = t
+
+    def record_batch(self, size: int) -> None:
+        with self._lock:
+            self.batch_sizes[size] += 1
+
+    def record_done(self, res: QueryResult, t_done: float) -> None:
+        with self._lock:
+            self.queue_ms.append(res.queue_ms)
+            self.exec_ms.append(res.exec_ms)
+            self.e2e_ms.append(res.e2e_ms)
+            self.t_last = (t_done if self.t_last is None
+                           else max(self.t_last, t_done))
+
+    def rollup(self, replica_stats: list[dict]) -> ServeStats:
+        with self._lock:
+            completed = len(self.e2e_ms)
+            wall = ((self.t_last - self.t_first)
+                    if self.t_first is not None and self.t_last is not None
+                    else 0.0)
+            sizes = dict(sorted(self.batch_sizes.items()))
+            n_batches = sum(sizes.values())
+            return ServeStats(
+                completed=completed,
+                wall_s=wall,
+                qps=completed / wall if wall > 0 else 0.0,
+                queue_ms=_pct(self.queue_ms),
+                exec_ms=_pct(self.exec_ms),
+                e2e_ms=_pct(self.e2e_ms),
+                batch_sizes=sizes,
+                mean_batch=(completed / n_batches) if n_batches else 0.0,
+                replicas=replica_stats,
+            )
+
+
+class SearchServer:
+    """Async serving over one SearchService (or a prebuilt ReplicaPool)."""
+
+    def __init__(self, service, *, replicas: int = 1, max_batch: int = 32,
+                 max_wait_ms: float = 2.0, pad_to_bucket: bool = True):
+        self.pool = (service if isinstance(service, ReplicaPool)
+                     else ReplicaPool.replicate(service, replicas))
+        self.queue = RequestQueue()
+        self._collector = _Collector()
+        self.batcher = DynamicBatcher(
+            self.queue, self.pool.submit, max_batch=max_batch,
+            max_wait_ms=max_wait_ms, pad_to_bucket=pad_to_bucket,
+            collector=self._collector)
+        self._outstanding = 0
+        self._drain_cond = threading.Condition()
+        self._shutdown = False
+        self.batcher.start()
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, query, *, k: int = 10, ef: int = 40,
+               rerank: bool = False, with_stats: bool = False) -> Future:
+        """Enqueue one query vector [D]; the future resolves to QueryResult."""
+        p = self.queue.put(query, k=k, ef=ef, rerank=rerank,
+                           with_stats=with_stats)
+        self._collector.mark_enqueue(p.t_enqueue)
+        with self._drain_cond:
+            self._outstanding += 1
+        p.future.add_done_callback(self._one_done)
+        return p.future
+
+    def submit_many(self, queries, **kw) -> list[Future]:
+        """One future per row of `queries` [B, D] (arrival order = row order)."""
+        return [self.submit(q, **kw) for q in np.asarray(queries)]
+
+    def _one_done(self, _fut: Future) -> None:
+        with self._drain_cond:
+            self._outstanding -= 1
+            if self._outstanding == 0:
+                self._drain_cond.notify_all()
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def drain(self, timeout: float | None = None) -> bool:
+        """Block until every submitted request has resolved (or timeout);
+        returns True when fully drained."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._drain_cond:
+            while self._outstanding > 0:
+                left = (None if deadline is None
+                        else deadline - time.perf_counter())
+                if left is not None and left <= 0:
+                    return False
+                self._drain_cond.wait(timeout=left)
+            return True
+
+    def shutdown(self, drain: bool = True,
+                 timeout: float | None = None) -> None:
+        """Graceful stop: optionally drain, then close the queue (new
+        submits raise ServeClosed), stop the batcher, close the pool.
+        Without drain, already-queued requests are still flushed — a
+        request is never dropped, only refused at the door."""
+        if self._shutdown:
+            return
+        if drain:
+            self.drain(timeout)
+        self._shutdown = True
+        self.queue.close()
+        self.batcher.join(timeout=30)
+        self.drain(timeout=30)             # flushed-at-close stragglers
+        self.pool.close()
+
+    def stats(self) -> ServeStats:
+        return self._collector.rollup(self.pool.stats())
+
+    def __enter__(self) -> "SearchServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown(drain=True)
+
+    # convenience re-export so callers can `except srv.Closed`
+    Closed = ServeClosed

@@ -7,6 +7,81 @@ import pytest
 from repro.core import hnsw_graph as hg
 from repro.data import clustered_vectors
 
+ZOO_CFG = hg.HNSWConfig(M=12, ef_construction=80, seed=0)
+
+
+class BackendZoo:
+    """Session-cached SearchService per (backend, metric, normalized).
+
+    One graph build is shared wherever bit-identical results are required:
+    the csd store is written from the partitioned backend's own DB
+    (`CSDBackend.from_partitioned`), and the distributed build is
+    deterministic from the same seed — so partitioned / distributed / csd
+    answer from the SAME graph. `normalized=True` builds over unit-norm
+    vectors (the cosine <-> l2 parity golden); `ids()` then queries with
+    unit-norm queries.
+    """
+
+    def __init__(self, dataset, tmp_path_factory):
+        self.data = dataset
+        self._tmp = tmp_path_factory
+        self._svcs = {}
+        vecs = dataset["vectors"]
+        q = dataset["queries"]
+        self._vectors = {False: vecs,
+                         True: vecs / np.linalg.norm(vecs, axis=1,
+                                                     keepdims=True)}
+        self._queries = {False: q,
+                         True: q / np.linalg.norm(q, axis=1, keepdims=True)}
+
+    def service(self, backend: str, metric: str = "l2", *,
+                normalized: bool = False):
+        key = (backend, metric, normalized)
+        if key not in self._svcs:
+            self._svcs[key] = self._build(backend, metric, normalized)
+        return self._svcs[key]
+
+    def queries(self, *, normalized: bool = False) -> np.ndarray:
+        return self._queries[normalized]
+
+    def ids(self, backend: str, metric: str = "l2", *, k: int = 10,
+            ef: int = 40, rerank: bool = False,
+            normalized: bool = False) -> np.ndarray:
+        from repro.api import SearchRequest
+        svc = self.service(backend, metric, normalized=normalized)
+        resp = svc.search(SearchRequest(queries=self.queries(
+            normalized=normalized), k=k, ef=ef, rerank=rerank))
+        return np.asarray(resp.ids)
+
+    def _build(self, backend: str, metric: str, normalized: bool):
+        from repro.api import IndexSpec, SearchService
+        from repro.store.csd import CSDBackend
+
+        vecs = self._vectors[normalized]
+        if backend == "csd":
+            # same graph as the partitioned service, restructured on "flash"
+            part = self.service("partitioned", metric, normalized=normalized)
+            store = str(self._tmp.mktemp("zoo-csd") / "store")
+            spec = IndexSpec(metric=metric, backend="csd", num_partitions=2,
+                             hnsw=ZOO_CFG, storage_path=store,
+                             prefetch=False)
+            return SearchService(
+                spec, CSDBackend.from_partitioned(part.backend.pdb, spec))
+        partitions = {"exact": 1, "hnsw": 1, "partitioned1": 1}.get(backend, 2)
+        spec = IndexSpec(
+            metric=metric,
+            backend="partitioned" if backend == "partitioned1" else backend,
+            num_partitions=partitions, hnsw=ZOO_CFG,
+            keep_vectors=backend in ("hnsw", "partitioned", "partitioned1"))
+        return SearchService.build(vecs, spec)
+
+
+@pytest.fixture(scope="session")
+def backend_zoo(small_dataset, tmp_path_factory):
+    """Shared golden services for the parity matrix, recall-regression, and
+    serve tests — built lazily, cached for the whole session."""
+    return BackendZoo(small_dataset, tmp_path_factory)
+
 
 @pytest.fixture(scope="session")
 def small_dataset():

@@ -115,27 +115,8 @@ def test_spec_json_roundtrip():
 
 
 # -- metric registry ---------------------------------------------------------
-
-
-def test_cosine_matches_l2_on_normalized_vectors(small_dataset):
-    """Parity: cosine over raw vectors must rank exactly like l2 over
-    pre-normalized vectors — the registry does the normalization."""
-    vecs = small_dataset["vectors"]
-    q = small_dataset["queries"]
-    vn = vecs / np.linalg.norm(vecs, axis=1, keepdims=True)
-    qn = q / np.linalg.norm(q, axis=1, keepdims=True)
-
-    svc_cos = SearchService.build(
-        vecs, IndexSpec(metric="cosine", backend="partitioned",
-                        num_partitions=2, hnsw=CFG))
-    svc_l2n = SearchService.build(
-        vn, IndexSpec(metric="l2", backend="partitioned",
-                      num_partitions=2, hnsw=CFG))
-    ids_cos = np.asarray(svc_cos.search(SearchRequest(queries=q, k=10,
-                                                      ef=40)).ids)
-    ids_l2 = np.asarray(svc_l2n.search(SearchRequest(queries=qn, k=10,
-                                                     ef=40)).ids)
-    np.testing.assert_array_equal(ids_cos, ids_l2)
+# (cross-backend metric parity — cosine == l2-over-normalized, per backend —
+# lives in the shared matrix: tests/test_parity_matrix.py)
 
 
 def test_ip_rejected_on_graph_backends(small_dataset):

@@ -1,0 +1,95 @@
+"""Cross-backend x cross-metric parity matrix over shared golden fixtures.
+
+One parametrized suite replaces the ad-hoc parity checks that were
+duplicated across test_api.py (cosine vs l2-on-normalized), test_store.py
+(csd cosine vs partitioned), and test_partitioned.py (rerank vs stage 2):
+
+  * every backend sharing the canonical 2-partition graph (partitioned,
+    distributed, csd) must return IDENTICAL top-k ids — the BackendZoo
+    builds them from one graph (csd restructures the partitioned DB,
+    distributed rebuilds deterministically from the same seed);
+  * `exact` must match the numpy ground truth under every metric;
+  * cosine over raw data must rank exactly like l2 over pre-normalized
+    data, for every backend family — the metric registry's contract;
+  * graph-unsafe combos (ip on an L2-built graph) are skipped via
+    `Metric.graph_safe`, mirroring the build-time rejection;
+  * rerank (stage 2) re-scores exactly, so it must preserve the top-k set.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import IndexSpec, SearchService, exact_topk_np, get_metric
+
+BACKENDS = ["exact", "hnsw", "partitioned", "distributed", "csd"]
+METRICS = ["l2", "ip", "cosine"]
+GRAPH_BACKENDS = [b for b in BACKENDS if b != "exact"]
+K, EF = 10, 40
+
+
+def _skip_graph_unsafe(backend: str, metric: str) -> None:
+    if backend != "exact" and not get_metric(metric).graph_safe:
+        pytest.skip(f"metric {metric!r} is not graph-safe "
+                    f"(Metric.graph_safe=False); backend {backend!r} "
+                    f"rejects it at build time")
+
+
+# ---------------------------------------------------------------------------
+# the matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("backend", ["partitioned", "distributed", "csd"])
+def test_shared_graph_backends_answer_identically(backend, metric,
+                                                  backend_zoo):
+    """partitioned / distributed / csd serve ONE graph -> one answer."""
+    _skip_graph_unsafe(backend, metric)
+    golden = backend_zoo.ids("partitioned", metric, k=K, ef=EF)
+    got = backend_zoo.ids(backend, metric, k=K, ef=EF)
+    np.testing.assert_array_equal(got, golden)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_exact_matches_numpy_golden(metric, backend_zoo):
+    golden = exact_topk_np(metric, backend_zoo.data["vectors"],
+                           backend_zoo.queries(), K)
+    np.testing.assert_array_equal(backend_zoo.ids("exact", metric, k=K),
+                                  golden)
+
+
+@pytest.mark.parametrize("backend", ["exact", "hnsw", "partitioned", "csd"])
+def test_cosine_equals_l2_over_normalized(backend, backend_zoo):
+    """The registry's normalization contract, per backend family: cosine
+    over raw vectors ranks exactly like l2 over pre-normalized vectors.
+    (distributed is covered transitively via the shared-graph test.)"""
+    ids_cos = backend_zoo.ids(backend, "cosine", k=K, ef=EF)
+    ids_l2n = backend_zoo.ids(backend, "l2", k=K, ef=EF, normalized=True)
+    np.testing.assert_array_equal(ids_cos, ids_l2n)
+
+
+def test_hnsw_is_partitioned_with_one_partition(backend_zoo):
+    np.testing.assert_array_equal(
+        backend_zoo.ids("hnsw", "l2", k=K, ef=EF),
+        backend_zoo.ids("partitioned1", "l2", k=K, ef=EF))
+
+
+@pytest.mark.parametrize("backend", ["hnsw", "partitioned"])
+def test_rerank_preserves_topk_set(backend, backend_zoo):
+    """Paper stage 2: distances are already exact, so the exact re-score
+    must not change the top-k membership (replaces the ad-hoc check that
+    lived in test_partitioned.py)."""
+    ids = backend_zoo.ids(backend, "l2", k=K, ef=EF)
+    ids_r = backend_zoo.ids(backend, "l2", k=K, ef=EF, rerank=True)
+    for a, b in zip(ids, ids_r):
+        assert set(a[a >= 0]) == set(b[b >= 0])
+
+
+def test_graph_unsafe_metric_rejected_at_build(backend_zoo, tmp_path):
+    """The skip condition above mirrors a real build-time rejection."""
+    for backend in GRAPH_BACKENDS:
+        with pytest.raises(ValueError, match="not graph-safe"):
+            SearchService.build(
+                backend_zoo.data["vectors"],
+                IndexSpec(metric="ip", backend=backend,
+                          storage_path=str(tmp_path / "ip-store")))

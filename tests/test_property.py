@@ -109,3 +109,75 @@ def test_vocab_padding_is_multiple_of_256(v):
     cfg = ModelConfig(name="t", d_model=8, n_heads=1, n_kv_heads=1, head_dim=8,
                       d_ff=8, vocab_size=v, pattern=(LayerSpec(),), num_periods=1)
     assert cfg.padded_vocab % 256 == 0 and cfg.padded_vocab >= v
+
+
+# ---------------------------------------------------------------------------
+# repro.serve: the dynamic batcher is lossless and transparent
+# ---------------------------------------------------------------------------
+
+_SERVE_CTX: dict = {}
+
+
+def _serve_ctx():
+    """One tiny exact-backend service shared across examples (module-level
+    cache, not a fixture: @given and function fixtures don't mix)."""
+    if not _SERVE_CTX:
+        from repro.api import IndexSpec, SearchService
+        rng = np.random.default_rng(7)
+        vecs = rng.normal(size=(256, 16)).astype(np.float32)
+        _SERVE_CTX["vecs"] = vecs
+        _SERVE_CTX["svc"] = SearchService.build(
+            vecs, IndexSpec(backend="exact"))
+    return _SERVE_CTX["svc"], _SERVE_CTX["vecs"]
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    plan=st.lists(
+        st.tuples(st.integers(min_value=0, max_value=255),   # query anchor
+                  st.integers(min_value=1, max_value=10),    # k
+                  st.sampled_from([0.0, 0.0005, 0.002])),    # arrival gap s
+        min_size=1, max_size=16),
+    max_batch=st.integers(min_value=1, max_value=8),
+    max_wait_ms=st.sampled_from([0.5, 2.0, 10.0]),
+)
+def test_dynamic_batcher_is_lossless_and_matches_direct(
+        plan, max_batch, max_wait_ms):
+    """Under random arrival schedules, k values, and batch/wait limits, the
+    batcher (a) loses no request, (b) duplicates no request, and (c) every
+    response is bit-identical to a direct SearchService.search."""
+    import time as _time
+
+    from repro.api import SearchRequest
+    from repro.serve import SearchServer
+
+    svc, vecs = _serve_ctx()
+    with SearchServer(svc, replicas=1, max_batch=max_batch,
+                      max_wait_ms=max_wait_ms) as srv:
+        submitted = []
+        for anchor, k, gap in plan:
+            if gap:
+                _time.sleep(gap)
+            q = vecs[anchor] + np.float32(0.01)
+            submitted.append((srv.submit(q, k=k, ef=16), q, k))
+        results = [(f.result(timeout=120), q, k) for f, q, k in submitted]
+        roll = srv.stats()
+
+    # (a) no request lost: every future resolved
+    assert len(results) == len(plan)
+    assert roll.completed == len(plan)
+    # (b) no request duplicated: the real (pre-padding) batch sizes sum to
+    # exactly the number of submissions
+    assert sum(s * c for s, c in roll.batch_sizes.items()) == len(plan)
+    assert all(s <= max_batch for s in roll.batch_sizes)
+    # (c) every response == direct search of that query at its own k:
+    # ids bit-identical; distances to a few ulps of ||x||^2 — XLA CPU
+    # matmul rounding is batch-shape-dependent, and the cancellation in
+    # ||x||^2 - 2 x.q + ||q||^2 scales the absolute error with the squared
+    # norms (~16 here), not with the distance itself
+    for res, q, k in results:
+        direct = svc.search(SearchRequest(queries=q[None], k=k))
+        assert res.ids.shape == (k,)
+        np.testing.assert_array_equal(res.ids, np.asarray(direct.ids)[0])
+        np.testing.assert_allclose(res.dists, np.asarray(direct.dists)[0],
+                                   rtol=1e-3, atol=1e-4)

@@ -247,18 +247,6 @@ def test_prefetcher_overlaps_and_preserves_results(svc_csd, small_dataset):
         reader.close()
 
 
-def test_csd_cosine_metric(small_dataset, tmp_path):
-    """Metric preparation runs at the service edge for csd like any other
-    graph backend; cosine over raw == l2-graph over normalized data."""
-    vecs = small_dataset["vectors"]
-    q = small_dataset["queries"]
-    svc_cos = SearchService.build(
-        vecs, IndexSpec(metric="cosine", backend="csd", num_partitions=2,
-                        hnsw=CFG, storage_path=str(tmp_path / "cos"),
-                        cache_bytes=CACHE_BYTES, prefetch=False))
-    svc_ref = SearchService.build(
-        vecs, IndexSpec(metric="cosine", backend="partitioned",
-                        num_partitions=2, hnsw=CFG))
-    req = SearchRequest(queries=q, k=10, ef=40)
-    np.testing.assert_array_equal(np.asarray(svc_cos.search(req).ids),
-                                  np.asarray(svc_ref.search(req).ids))
+# csd cosine/l2 parity vs the shared partitioned graph now lives in the
+# cross-backend matrix (tests/test_parity_matrix.py); this file keeps the
+# storage-specific guarantees (bounded memory, block traffic, crash safety).
