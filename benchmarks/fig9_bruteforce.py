@@ -7,6 +7,14 @@ With `--backend csd` (benchmarks/run.py) the same comparison is extended to
 the out-of-core engine: the graph is served from the block store and the
 derived column reports *block reads* (flash / P2P-DMA transfers, the
 paper's storage-side unit) next to the in-memory vector-read counts.
+
+With `--dtype uint8` the sweep adds the paper's actual SIFT1B operating
+point — uint8 vectors (IndexSpec.dtype): the quantized graph is built,
+served both in-memory and out-of-core, and the derived columns report the
+recall cost of quantization next to the storage-bandwidth win (uint8
+vector rows are 4x smaller, so `bytes_read` drops; neighbor-table traffic
+is unchanged, which is why the measured end-to-end ratio sits between
+2.5x and 4x at this scale).
 """
 
 from __future__ import annotations
@@ -21,9 +29,10 @@ from benchmarks.common import get_ctx, timeit
 from repro.api import SearchRequest
 
 
-def _csd_rows(ctx, reads_hnsw: float):
-    """Serve the already-built partitioned graph out-of-core and count the
-    storage traffic the same search costs."""
+def _csd_service(svc_src, tag: str, tmp: str, cache_bytes: int = 8 << 20):
+    """One shared recipe for serving an already-built (possibly quantized)
+    partitioned service out-of-core — the --backend csd and --dtype uint8
+    rows must measure identically-configured stores."""
     import dataclasses
 
     import jax
@@ -31,17 +40,23 @@ def _csd_rows(ctx, reads_hnsw: float):
     from repro.api import SearchService
     from repro.api.backends import CSDBackend
 
+    spec = dataclasses.replace(
+        svc_src.spec, backend="csd", keep_vectors=False,
+        storage_path=os.path.join(tmp, f"store_{tag}"),
+        cache_bytes=cache_bytes)
+    pdb_host = svc_src.backend.pdb._replace(
+        db=jax.tree.map(np.asarray, svc_src.backend.pdb.db))
+    return SearchService(spec, CSDBackend.from_partitioned(pdb_host, spec))
+
+
+def _csd_rows(ctx, reads_hnsw: float):
+    """Serve the already-built partitioned graph out-of-core and count the
+    storage traffic the same search costs."""
     q = ctx.queries[:32]      # host-driven block reads; keep the run short
     tmp = tempfile.mkdtemp(prefix="fig9_csd_")
     svc = None
     try:
-        spec = dataclasses.replace(
-            ctx.svc.spec, backend="csd", keep_vectors=False,
-            storage_path=os.path.join(tmp, "store"),
-            cache_bytes=8 << 20)
-        pdb_host = ctx.svc.backend.pdb._replace(
-            db=jax.tree.map(np.asarray, ctx.svc.backend.pdb.db))
-        svc = SearchService(spec, CSDBackend.from_partitioned(pdb_host, spec))
+        svc = _csd_service(ctx.svc, "f32", tmp)
         resp = svc.search(SearchRequest(queries=q, k=10, ef=40,
                                         with_stats=True))
         blocks = int(resp.stats.block_reads)
@@ -61,7 +76,55 @@ def _csd_rows(ctx, reads_hnsw: float):
         shutil.rmtree(tmp, ignore_errors=True)
 
 
-def run(backend: str | None = None):
+def _csd_bytes(svc_src, tag: str, q, tmp: str):
+    """Measure the per-request storage traffic of one out-of-core serve."""
+    svc = _csd_service(svc_src, tag, tmp)
+    try:
+        resp = svc.search(SearchRequest(queries=q, k=10, ef=40,
+                                        with_stats=True))
+        return int(resp.stats.bytes_read), int(resp.stats.block_reads)
+    finally:
+        svc.backend.reader.close()
+
+
+def _uint8_rows(ctx):
+    """The quantized operating point: recall delta + storage-byte ratio."""
+    import dataclasses
+
+    from repro.api import SearchService
+    from benchmarks.common import recall_of
+
+    q = ctx.queries[:32]
+    spec_u8 = dataclasses.replace(ctx.svc.spec, dtype="uint8",
+                                  qscale=None, qzero=None)
+    svc_u8 = SearchService.build(ctx.vectors, spec_u8)
+    r_f32 = recall_of(np.asarray(ctx.svc.search(
+        SearchRequest(queries=ctx.queries, k=10, ef=40)).ids), ctx.gt)
+    r_u8 = recall_of(np.asarray(svc_u8.search(
+        SearchRequest(queries=ctx.queries, k=10, ef=40)).ids), ctx.gt)
+    us_u8 = timeit(
+        lambda: svc_u8.search(SearchRequest(queries=ctx.queries, k=10,
+                                            ef=40)).ids,
+        warmup=1, iters=2) / len(ctx.queries)
+    tmp = tempfile.mkdtemp(prefix="fig9_u8_")
+    try:
+        by_u8, bl_u8 = _csd_bytes(svc_u8, "u8", q, tmp)
+        by_f32, bl_f32 = _csd_bytes(ctx.svc, "f32", q, tmp)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return [
+        ("fig9_uint8_graph", us_u8,
+         f"recall_u8={r_u8:.3f};recall_f32={r_f32:.3f};"
+         f"delta={r_f32 - r_u8:+.3f};qscale={svc_u8.spec.qscale:.4g}"),
+        ("fig9_uint8_csd_bytes", 0.0,
+         f"bytes_read_u8={by_u8};bytes_read_f32={by_f32};"
+         f"ratio={by_f32 / max(by_u8, 1):.2f}x;"
+         f"block_reads_u8={bl_u8};block_reads_f32={bl_f32};"
+         f"vector_row_shrink=4.00x"),
+    ]
+
+
+def run(backend: str | None = None, dtype: str | None = None):
     ctx = get_ctx()
     n = ctx.vectors.shape[0]
     q = ctx.queries
@@ -97,4 +160,6 @@ def run(backend: str | None = None):
     ]
     if backend == "csd":
         rows += _csd_rows(ctx, reads_hnsw)
+    if dtype == "uint8":
+        rows += _uint8_rows(ctx)
     return rows

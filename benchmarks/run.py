@@ -34,6 +34,11 @@ def main() -> None:
     ap.add_argument("--serve", action="store_true",
                     help="extra serving rows for modules that support it "
                          "(fig11: repro.serve replicas x max_batch sweep)")
+    ap.add_argument("--dtype", default=None,
+                    help="extra quantized-path rows for modules that "
+                         "support it (fig9: 'uint8' adds the paper's "
+                         "SIFT1B operating point — recall delta + "
+                         "storage-byte ratio vs float32)")
     args = ap.parse_args()
     mods = MODULES
     if args.only:
@@ -51,6 +56,9 @@ def main() -> None:
             if (args.serve and
                     "serve" in inspect.signature(mod.run).parameters):
                 kwargs["serve"] = True
+            if (args.dtype and
+                    "dtype" in inspect.signature(mod.run).parameters):
+                kwargs["dtype"] = args.dtype
             for row in mod.run(**kwargs):
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
             sys.stdout.flush()

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import get_ctx, timeit
-from repro.kernels.ref import l2dist_ref, l2topk_ref
+from repro.kernels.ref import l2dist_ref, l2topk_q_ref, l2topk_ref
 from repro.launch.roofline import HW
 
 
@@ -43,13 +43,24 @@ def run():
                  f"modeled_v5e_us={max(t_c,t_m_f)*1e6:.0f};"
                  f"ai={fl/bytes_fused:.1f}flop/B;"
                  f"traffic_saved={bytes_unfused/bytes_fused:.1f}x"))
-    # HNSW hop: gather maxM0 vectors + matvec per query.
+    # integer fused l2topk (paper's uint8 regime): X streams at 1 byte/dim.
+    qc = jnp.asarray(rng.integers(0, 256, size=(BQ, D)).astype(np.uint8))
+    xc = jnp.asarray(rng.integers(0, 256, size=(BX, D)).astype(np.uint8))
+    bytes_fused_q = (BQ * D + BX * D) * 1 + BQ * K * 2 * 4
+    t_m_q = bytes_fused_q / hw.hbm_bw
+    us_q = timeit(lambda: l2topk_q_ref(qc[:256], xc[:8192], k=K), iters=2)
+    rows.append(("table2_l2topk_q_uint8", us_q,
+                 f"modeled_v5e_us={max(t_c,t_m_q)*1e6:.0f};"
+                 f"ai={fl/bytes_fused_q:.1f}flop/B;"
+                 f"traffic_vs_f32_fused={bytes_fused/bytes_fused_q:.1f}x"))
+    # HNSW hop: gather maxM0 vectors + matvec per query (f32 and uint8 rows).
     ctx = get_ctx()
     m0 = ctx.svc.backend.pdb.db.l0_nbrs.shape[-1]
     d_pad = ctx.svc.backend.pdb.db.vectors.shape[-1]
-    hop_bytes = m0 * (d_pad * 4 + 4) + 64
     hop_flops = 2 * m0 * d_pad
-    rows.append(("table2_hnsw_hop", 0.0,
-                 f"modeled_v5e_us={max(hop_flops/hw.peak_flops, hop_bytes/hw.hbm_bw)*1e6:.2f};"
-                 f"ai={hop_flops/hop_bytes:.2f}flop/B;bound=mem"))
+    for tag, vb in (("", 4), ("_uint8", 1)):
+        hop_bytes = m0 * (d_pad * vb + 4) + 64
+        rows.append((f"table2_hnsw_hop{tag}", 0.0,
+                     f"modeled_v5e_us={max(hop_flops/hw.peak_flops, hop_bytes/hw.hbm_bw)*1e6:.2f};"
+                     f"ai={hop_flops/hop_bytes:.2f}flop/B;bound=mem"))
     return rows

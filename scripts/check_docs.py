@@ -1,0 +1,139 @@
+#!/usr/bin/env python
+"""Docs CI: keep the documentation from rotting.
+
+Two checks (stdlib only — no extra dependencies):
+
+  links       validate every markdown link in README.md, docs/, and the
+              package READMEs: relative links must point at files/dirs
+              that exist (with #anchors checked against the target's
+              headings); absolute URLs are only syntax-checked (CI has no
+              network).
+
+  quickstart  extract the bash block(s) between the
+              `<!-- ci-quickstart:start -->` / `<!-- ci-quickstart:end -->`
+              markers in README.md and EXECUTE every command. The README
+              quickstart is therefore the executable spec — editing the
+              docs without keeping the commands green fails CI.
+
+  python scripts/check_docs.py links
+  python scripts/check_docs.py quickstart
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_GLOBS = [
+    "README.md",
+    "docs/*.md",
+    "src/repro/*/README.md",
+]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _anchor(text: str) -> str:
+    """GitHub-style heading -> anchor slug."""
+    text = re.sub(r"[`*_]", "", text.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _anchors_of(path: str) -> set[str]:
+    with open(path, encoding="utf-8") as f:
+        return {_anchor(h) for h in HEADING_RE.findall(f.read())}
+
+
+def doc_files() -> list[str]:
+    out = []
+    for pat in DOC_GLOBS:
+        out.extend(sorted(glob.glob(os.path.join(ROOT, pat))))
+    return out
+
+
+def check_links() -> int:
+    errors = []
+    for doc in doc_files():
+        rel_doc = os.path.relpath(doc, ROOT)
+        with open(doc, encoding="utf-8") as f:
+            body = f.read()
+        for target in LINK_RE.findall(body):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue                      # offline CI: syntax-only
+            target, _, frag = target.partition("#")
+            if not target:                    # pure in-page anchor
+                if frag and _anchor(frag) not in _anchors_of(doc):
+                    errors.append(f"{rel_doc}: missing anchor #{frag}")
+                continue
+            dest = os.path.normpath(os.path.join(os.path.dirname(doc),
+                                                 target))
+            if not os.path.exists(dest):
+                errors.append(f"{rel_doc}: broken link -> {target}")
+                continue
+            if frag and dest.endswith(".md") and \
+                    _anchor(frag) not in _anchors_of(dest):
+                errors.append(f"{rel_doc}: {target}#{frag} — no such "
+                              f"heading in target")
+    for e in errors:
+        print(f"LINK ERROR  {e}")
+    print(f"checked {len(doc_files())} docs: "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+def _quickstart_commands() -> list[str]:
+    readme = os.path.join(ROOT, "README.md")
+    with open(readme, encoding="utf-8") as f:
+        body = f.read()
+    blocks = re.findall(
+        r"<!-- ci-quickstart:start -->\s*```bash\n(.*?)```\s*"
+        r"<!-- ci-quickstart:end -->",
+        body, re.DOTALL)
+    if not blocks:
+        print("README.md has no ci-quickstart block — the quickstart is "
+              "no longer executable-by-CI")
+        sys.exit(1)
+    commands, cont = [], ""
+    for block in blocks:
+        for line in block.splitlines():
+            line = line.rstrip()
+            if not line or (line.lstrip().startswith("#") and not cont):
+                continue
+            if line.endswith("\\"):
+                cont += line[:-1] + " "
+                continue
+            commands.append((cont + line).strip())
+            cont = ""
+    return commands
+
+
+def run_quickstart() -> int:
+    cmds = _quickstart_commands()
+    env = dict(os.environ)
+    for cmd in cmds:
+        print(f"$ {cmd}", flush=True)
+        proc = subprocess.run(cmd, shell=True, cwd=ROOT, env=env)
+        if proc.returncode != 0:
+            print(f"QUICKSTART FAIL ({proc.returncode}): {cmd}")
+            return proc.returncode
+    print(f"quickstart ok ({len(cmds)} commands)")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("check", choices=["links", "quickstart"])
+    args = ap.parse_args()
+    return check_links() if args.check == "links" else run_quickstart()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

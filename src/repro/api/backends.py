@@ -31,6 +31,7 @@ from repro.core.bruteforce import bruteforce_topk
 from repro.core.partitioned import (
     PartitionedDB,
     build_partitioned_db,
+    quantize_db_vectors,
     search_partitioned,
     search_partitioned_candidates,
 )
@@ -84,13 +85,17 @@ class ExactBackend:
 
     def __init__(self, spec: IndexSpec, raw: np.ndarray):
         self.spec = spec
-        self.raw = np.asarray(raw, np.float32)
+        self.quant = spec.quantizer()
+        # quantized: raw IS the code table (uint8/int8); scan it as-is
+        self.raw = (np.asarray(raw) if self.quant is not None
+                    else np.asarray(raw, np.float32))
         n, d = self.raw.shape
         n_pad = ((n + self.CHUNK - 1) // self.CHUNK) * self.CHUNK
-        vp = np.zeros((n_pad, d), np.float32)
+        vp = np.zeros((n_pad, d), self.raw.dtype)
         vp[:n] = self.raw
+        rf = self.raw.astype(np.float32)
         sq = np.full(n_pad, np.inf, np.float32)   # +inf == pad marker
-        sq[:n] = np.einsum("nd,nd->n", self.raw, self.raw)
+        sq[:n] = np.einsum("nd,nd->n", rf, rf)
         self.vectors = jnp.asarray(vp)
         self.sqnorms = jnp.asarray(sq)
         self.n = n
@@ -104,6 +109,8 @@ class ExactBackend:
         ids, dists = bruteforce_topk(
             self.vectors, self.sqnorms, jnp.asarray(queries), k=k,
             chunk=self.CHUNK, metric=self.spec.metric)
+        if self.quant is not None:   # code-space -> real-space distances
+            dists = dists * jnp.float32(self.quant.dist_scale)
         stats = None
         if with_stats:
             b = ids.shape[0]
@@ -137,9 +144,16 @@ class PartitionedBackend:
                  raw: np.ndarray | None = None):
         self.spec = spec
         self.pdb = pdb
-        self.raw = None if raw is None else np.asarray(raw, np.float32)
+        self.quant = spec.quantizer()
+        # quantized: `raw` holds the codes; rerank re-scores over the
+        # DEQUANTIZED rows (stage 2 stays float32, paper Fig. 4)
+        self.raw = (None if raw is None else
+                    np.asarray(raw) if self.quant is not None else
+                    np.asarray(raw, np.float32))
         if self.raw is not None:
-            self.dev_vectors, self.dev_sqnorms = _device_vectors(self.raw)
+            flt = (self.raw if self.quant is None
+                   else self.quant.decode(self.raw))
+            self.dev_vectors, self.dev_sqnorms = _device_vectors(flt)
         else:
             self.dev_vectors = self.dev_sqnorms = None
 
@@ -147,6 +161,7 @@ class PartitionedBackend:
     def build(cls, vectors: np.ndarray, spec: IndexSpec, mesh=None):
         p = cls.forced_partitions or spec.num_partitions
         pdb = build_partitioned_db(vectors, p, spec.hnsw)
+        pdb = quantize_db_vectors(pdb, spec.dtype)
         pdb = PartitionedDB(db=jax.tree.map(jnp.asarray, pdb.db),
                             num_partitions=pdb.num_partitions, dim=pdb.dim)
         return cls(spec, pdb, raw=vectors if spec.keep_vectors else None)
@@ -164,11 +179,14 @@ class PartitionedBackend:
                     "rerank=True needs the raw vectors: build the index "
                     "with IndexSpec(keep_vectors=True)")
             cand, _, st = search_partitioned_candidates(self.pdb, q, p)
+            rq = q if self.quant is None else self.quant.decode(q)
             ids, dists = batched_rerank(
-                self.dev_vectors, self.dev_sqnorms, q, cand, k,
+                self.dev_vectors, self.dev_sqnorms, rq, cand, k,
                 self.spec.metric)
         else:
             ids, dists, st = search_partitioned(self.pdb, q, p)
+            if self.quant is not None:   # code-space -> real-space
+                dists = dists * jnp.float32(self.quant.dist_scale)
         stats = None
         if with_stats:
             stats = QueryStats(hops=st.hops.sum(axis=0),
@@ -228,6 +246,7 @@ class DistributedBackend(PartitionedBackend):
                 f"num_partitions={spec.num_partitions} must divide over "
                 f"the mesh model axis ({n_model})")
         pdb = build_partitioned_db(vectors, spec.num_partitions, spec.hnsw)
+        pdb = quantize_db_vectors(pdb, spec.dtype)
         pdb = shard_db(pdb, mesh)
         return cls(spec, pdb, mesh,
                    raw=vectors if spec.keep_vectors else None)
@@ -259,11 +278,16 @@ class DistributedBackend(PartitionedBackend):
                     "with IndexSpec(keep_vectors=True)")
             # unmerged P*k candidate pool, exactly re-scored (stage 2)
             cand, _, calcs = self._fn(k, ef, merge=False)(self.pdb.db, q)
+            rq = jnp.asarray(queries)
+            if self.quant is not None:
+                rq = self.quant.decode(rq)
             ids, dists = batched_rerank(
-                self.dev_vectors, self.dev_sqnorms, jnp.asarray(queries),
+                self.dev_vectors, self.dev_sqnorms, rq,
                 cand, k, self.spec.metric)
         else:
             ids, dists, calcs = self._fn(k, ef)(self.pdb.db, q)
+            if self.quant is not None:   # code-space -> real-space
+                dists = dists * jnp.float32(self.quant.dist_scale)
         stats = None
         if with_stats:
             stats = QueryStats(dist_calcs=calcs[:, 0])

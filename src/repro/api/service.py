@@ -19,6 +19,7 @@ On-disk layout:  <path>/index_manifest.json   (format version + IndexSpec)
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 
@@ -55,6 +56,7 @@ class SearchService:
         self.spec = spec
         self.backend = backend
         self.metric = _metrics.get_metric(spec.metric)
+        self.quantizer = spec.quantizer()
 
     # -- construction -------------------------------------------------------
 
@@ -63,7 +65,10 @@ class SearchService:
               mesh=None) -> "SearchService":
         """Build an index over raw vectors according to the spec. The
         metric's data preprocessing (e.g. cosine normalization) happens
-        here — backends only ever see metric-prepared vectors."""
+        here — backends only ever see metric-prepared vectors. For a
+        quantized spec (dtype uint8/int8) the quantizer is fitted here and
+        its scale/zero-point are written back onto the spec (and thus into
+        the index manifest); backends then receive *codes*, not floats."""
         spec = spec or IndexSpec()
         metric = _metrics.get_metric(spec.metric)     # validates the name
         backend_cls = get_backend(spec.backend)       # validates the name
@@ -74,6 +79,18 @@ class SearchService:
                 f"unreliable — use backend='exact', or normalize your data "
                 f"(then ip == cosine)")
         prepared = metric.prepare_data(np.asarray(vectors))
+        if spec.dtype != "float32":
+            if spec.metric != "l2":
+                raise ValueError(
+                    f"dtype={spec.dtype!r} supports metric='l2' only (the "
+                    f"paper's metric): code-space squared-L2 is a pure "
+                    f"rescaling of real-space squared-L2, which does not "
+                    f"hold for {spec.metric!r}")
+            from repro.optim.compression import VectorQuantizer
+            quant = VectorQuantizer.fit(prepared, spec.dtype)
+            spec = dataclasses.replace(spec, qscale=quant.scale,
+                                       qzero=quant.zero_point)
+            prepared = quant.encode(prepared)
         return cls(spec, backend_cls.build(prepared, spec, mesh=mesh))
 
     # -- serving ------------------------------------------------------------
@@ -87,6 +104,10 @@ class SearchService:
             q = self.metric.prepare_queries(np.asarray(q))
         # else: leave device arrays on device — the kernels cast to f32
         # themselves, so no host round-trip on the hot path
+        if self.quantizer is not None:
+            # one edge quantization feeds every backend the same codes —
+            # this is what keeps quantized partitioned/csd bit-identical
+            q = self.quantizer.encode_f32(np.asarray(q))
         ids, dists, stats = self.backend.search(
             q, k=request.k, ef=request.ef, rerank=request.rerank,
             with_stats=request.with_stats)

@@ -34,6 +34,19 @@ class IndexSpec:
     backend : "exact" | "hnsw" | "partitioned" | "distributed" | "csd"
               (see api.backends; "hnsw" == "partitioned" with one partition)
     num_partitions : stage-1 sub-graph count (paper §4.1)
+    dtype   : stored vector precision — "float32" (default) or a quantized
+              code type "uint8" / "int8" (the paper's SIFT1B operating
+              point is uint8: 1 byte/dim is what fits a billion points on
+              the SmartSSD). Quantized indexes store codes everywhere
+              (HBM tables, block store, checkpoints), traverse in integer
+              code space with f32 accumulation, and rescale stage-1
+              distances by qscale**2; stage-2 rerank stays float32 over
+              dequantized rows. l2 metric only.
+    qscale / qzero : the symmetric scalar quantizer's scale / zero-point
+              (optim.compression.VectorQuantizer). Fitted from the data by
+              SearchService.build — never set them by hand; they ride the
+              spec into the index manifest so a saved quantized index is
+              self-describing.
     hnsw    : graph construction knobs (ignored by the exact backend)
     keep_vectors : retain the raw vectors alongside the graph — required
               for `SearchRequest.rerank` on the in-memory graph backends and
@@ -61,6 +74,21 @@ class IndexSpec:
     block_size: int = 4096
     cache_bytes: int = 64 << 20
     prefetch: bool = True
+    dtype: str = "float32"
+    qscale: float | None = None
+    qzero: int | None = None
+
+    def quantizer(self):
+        """The fitted VectorQuantizer, or None for the float32 path."""
+        if self.dtype == "float32":
+            return None
+        from repro.optim.compression import VectorQuantizer
+        if self.qscale is None or self.qzero is None:
+            raise ValueError(
+                f"dtype={self.dtype!r} spec has no fitted qscale/qzero — "
+                f"build quantized indexes through SearchService.build")
+        return VectorQuantizer(dtype=self.dtype, scale=float(self.qscale),
+                               zero_point=int(self.qzero))
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)

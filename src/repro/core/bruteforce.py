@@ -28,7 +28,9 @@ def bruteforce_topk(vectors, sqnorms, queries, k: int = 10, chunk: int = 4096,
     """Exact k smallest ids/distances for each query under `metric`.
 
     vectors: [N, D] (N % chunk == 0 after padding; pad rows have sqnorm=+inf —
-             the +inf sqnorm is the pad marker for every metric)
+             the +inf sqnorm is the pad marker for every metric). May hold
+             uint8/int8 codes (quantized path): each chunk is cast to f32
+             at the matmul, so distances are exact code-space values.
     queries: [B, D]
     returns: ids [B, k] int32, dists [B, k] float32
     """

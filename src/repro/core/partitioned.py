@@ -31,6 +31,7 @@ from repro.core.search import SearchParams, batch_search, merge_sorted
 __all__ = [
     "PartitionedDB",
     "build_partitioned_db",
+    "quantize_db_vectors",
     "search_partitioned",
     "search_partitioned_candidates",
     "merge_topk",
@@ -71,6 +72,22 @@ def build_partitioned_db(
     ]
     stacked = hg.DeviceDB(*(np.stack([getattr(d, f) for d in dbs]) for f in hg.DeviceDB._fields))
     return PartitionedDB(db=stacked, num_partitions=num_partitions, dim=vectors.shape[1])
+
+
+def quantize_db_vectors(pdb: PartitionedDB, dtype: str) -> PartitionedDB:
+    """Swap the stacked DB's raw-data leaf to stored codes (uint8/int8).
+
+    The single source of the codes-swap invariant for BOTH the in-memory
+    backends and the block store (csd): the graphs were built over
+    code-valued float32, so the integer cast is exact; only the storage
+    representation shrinks (4x for uint8). No-op for dtype="float32" or a
+    leaf that already holds codes."""
+    if dtype == "float32":
+        return pdb
+    from repro.optim.compression import code_dtype
+    db = pdb.db._replace(
+        vectors=np.asarray(pdb.db.vectors).astype(code_dtype(dtype)))
+    return pdb._replace(db=db)
 
 
 def merge_topk(ids, dists, k: int):

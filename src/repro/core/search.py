@@ -21,6 +21,14 @@ Shapes are fully static: candidate/final lists are sorted arrays padded with
 hnsw_graph.py), and the data-dependent traversal runs under
 ``jax.lax.while_loop`` with an explicit hop budget (returned in the stats so
 benchmarks can report the paper's "number of vector reads", Fig. 9).
+
+Quantized databases (IndexSpec.dtype uint8/int8 — the paper's SIFT1B
+operating point): ``db.vectors`` may hold integer codes and ``queries``
+code-valued float32; every distance evaluation casts the gathered rows to
+f32 and accumulates in f32 (exact for 8-bit codes up to ~256 dims, since
+all partial dot products are integers < 2^24), so the traversal is the
+same kernel in code space. ``db.sqnorms`` stays float32 (code norms; +inf
+pad markers). The caller rescales distances by ``scale**2`` at the edge.
 """
 
 from __future__ import annotations
@@ -136,7 +144,7 @@ def _batch_distances(db: DeviceDB, q, qsq, ids, valid, metric: str = "l2"):
     full 128-dim vector per cycle.
     """
     safe = jnp.where(valid, ids, 0)
-    vecs = db.vectors[safe]                      # [M, D_pad]
+    vecs = db.vectors[safe].astype(jnp.float32)  # [M, D_pad] (codes -> f32)
     d = metric_distance(metric, vecs @ q, db.sqnorms[safe], qsq)
     return jnp.where(valid, d, jnp.inf), safe
 
@@ -149,7 +157,7 @@ def _batch_distances(db: DeviceDB, q, qsq, ids, valid, metric: str = "l2"):
 def _greedy_upper(db: DeviceDB, q, qsq, p: SearchParams):
     """Descend from db.max_level to layer 1, returning the layer-0 entry."""
     ep = db.entry.astype(jnp.int32)
-    ep_vec = db.vectors[ep]
+    ep_vec = db.vectors[ep].astype(jnp.float32)
     ep_d = metric_distance(p.metric, ep_vec @ q, db.sqnorms[ep], qsq)
     n_layers = db.up_nbrs.shape[0]               # static cap - 1
 

@@ -19,9 +19,11 @@ import jax.numpy as jnp
 from repro.kernels.l2dist import l2dist_pallas
 from repro.kernels.l2topk import l2topk_pallas
 from repro.kernels.attention import flash_attention_pallas
+from repro.kernels.qdist import l2dist_q_pallas, l2topk_q_pallas
 from repro.kernels.topk import topk_pallas
 
-__all__ = ["l2dist", "topk", "l2topk", "flash_attention", "default_interpret"]
+__all__ = ["l2dist", "topk", "l2topk", "l2dist_q", "l2topk_q",
+           "flash_attention", "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -37,6 +39,15 @@ def _pad_rows(a, to_rows, fill=0.0):
     if pad == 0:
         return a
     return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1), constant_values=fill)
+
+
+def _block_d(d_p: int) -> int:
+    """Largest K-block <= 512 that divides the 128-padded feature dim
+    (d_p = 640 must not pick 512 — the kernels assert divisibility)."""
+    b = min(d_p, 512)
+    while d_p % b:
+        b -= 128
+    return b
 
 
 @functools.partial(jax.jit, static_argnames=("block_q", "block_x", "interpret",
@@ -55,7 +66,7 @@ def l2dist(queries, xs, *, block_q=128, block_x=512, interpret=None,
     q = jnp.pad(queries, ((0, bq_p - bq), (0, d_p - d)))
     x = jnp.pad(xs, ((0, bx_p - bx), (0, d_p - d)))
     out = l2dist_pallas(
-        q, x, block_q=block_q, block_x=block_x, block_d=min(d_p, 512),
+        q, x, block_q=block_q, block_x=block_x, block_d=_block_d(d_p),
         interpret=interpret, metric=metric,
     )
     return out[:bq, :bx]
@@ -88,6 +99,55 @@ def l2topk(queries, xs, xsq=None, *, k=10, block_q=128, block_x=1024, interpret=
     xsq = jnp.pad(xsq, (0, bx_p - bx), constant_values=jnp.inf)
     v, i = l2topk_pallas(
         q, x, xsq=xsq, k=k, block_q=block_q, block_x=block_x, interpret=interpret
+    )
+    return v[:bq], i[:bq]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_x", "interpret",
+                                             "out_scale"))
+def l2dist_q(queries, xs, *, block_q=128, block_x=512, interpret=None,
+             out_scale=1.0):
+    """Integer-code pairwise squared L2 for arbitrary shapes -> [Bq, Bx] f32.
+
+    queries/xs are uint8/int8 codes (IndexSpec.dtype path); out_scale is
+    the quantizer's dist_scale (scale**2) for real-space output. Codes are
+    zero-padded — pad lanes contribute 0 to every distance."""
+    interpret = default_interpret() if interpret is None else interpret
+    bq, d = queries.shape
+    bx, _ = xs.shape
+    bq_p, bx_p = _round_up(bq, block_q), _round_up(bx, block_x)
+    d_p = _round_up(d, 128)
+    q = jnp.pad(queries, ((0, bq_p - bq), (0, d_p - d)))
+    x = jnp.pad(xs, ((0, bx_p - bx), (0, d_p - d)))
+    out = l2dist_q_pallas(
+        q, x, block_q=block_q, block_x=block_x, block_d=_block_d(d_p),
+        interpret=interpret, out_scale=out_scale,
+    )
+    return out[:bq, :bx]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_x",
+                                             "interpret", "out_scale"))
+def l2topk_q(queries, xs, xsq=None, *, k=10, block_q=128, block_x=1024,
+             interpret=None, out_scale=1.0):
+    """Fused integer k-NN over codes: (dists [Bq, k], ids [Bq, k]).
+
+    The streamed database stays uint8/int8 end to end (4x less traffic
+    than the f32 `l2topk`); xs row padding gets +inf via xsq."""
+    interpret = default_interpret() if interpret is None else interpret
+    bq, d = queries.shape
+    bx, _ = xs.shape
+    bq_p, bx_p = _round_up(bq, block_q), _round_up(bx, block_x)
+    d_p = _round_up(d, 128)
+    q = jnp.pad(queries, ((0, bq_p - bq), (0, d_p - d)))
+    x = jnp.pad(xs, ((0, bx_p - bx), (0, d_p - d)))
+    if xsq is None:
+        xf = xs.astype(jnp.float32)
+        xsq = jnp.einsum("bd,bd->b", xf, xf)
+    xsq = jnp.pad(xsq, (0, bx_p - bx), constant_values=jnp.inf)
+    v, i = l2topk_q_pallas(
+        q, x, xsq=xsq, k=k, block_q=block_q, block_x=block_x,
+        interpret=interpret, out_scale=out_scale,
     )
     return v[:bq], i[:bq]
 

@@ -5,7 +5,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import jax
 
-__all__ = ["l2dist_ref", "topk_ref", "l2topk_ref"]
+__all__ = ["l2dist_ref", "topk_ref", "l2topk_ref",
+           "l2dist_q_ref", "l2topk_q_ref"]
 
 
 def l2dist_ref(queries, xs, qsq=None, xsq=None):
@@ -28,6 +29,19 @@ def topk_ref(x, k: int):
 def l2topk_ref(queries, xs, qsq=None, xsq=None, *, k: int = 10):
     d2 = jnp.maximum(l2dist_ref(queries, xs, qsq, xsq), 0.0)
     return topk_ref(d2, k)
+
+
+def l2dist_q_ref(queries, xs, qsq=None, xsq=None, *, out_scale: float = 1.0):
+    """Integer-code oracle: out_scale * max(||q - x||^2, 0) over uint8/int8
+    codes, f32 accumulation (exact for 8-bit codes up to ~256 dims)."""
+    d2 = jnp.maximum(l2dist_ref(queries, xs, qsq, xsq), 0.0)
+    return d2 * jnp.float32(out_scale)
+
+
+def l2topk_q_ref(queries, xs, qsq=None, xsq=None, *, k: int = 10,
+                 out_scale: float = 1.0):
+    v, i = topk_ref(jnp.maximum(l2dist_ref(queries, xs, qsq, xsq), 0.0), k)
+    return v * jnp.float32(out_scale), i
 
 
 def flash_attention_ref(q, k, v, *, causal=True):

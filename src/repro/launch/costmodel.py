@@ -27,7 +27,8 @@ import dataclasses
 
 from repro.models.transformer import LayerSpec, ModelConfig
 
-__all__ = ["cell_costs", "StorageCost", "storage_cost"]
+__all__ = ["cell_costs", "StorageCost", "storage_cost",
+           "VECTOR_DTYPE_BYTES", "vector_row_bytes"]
 
 
 def _attn_flops_tok(cfg, t_kv):
@@ -233,6 +234,31 @@ class StorageCost:
     bytes_from_flash: float
     storage_s: float
     hit_rate: float
+
+
+# Bytes per stored vector component, per IndexSpec.dtype. The paper's
+# SIFT1B tables are uint8 — 1 byte/dim is the operating point that fits a
+# billion rows on the SmartSSD and feeds the integer distance units.
+VECTOR_DTYPE_BYTES = {"float32": 4, "uint8": 1, "int8": 1}
+
+
+def vector_row_bytes(dim: int, dtype: str = "float32",
+                     lane: int = 128) -> int:
+    """Bytes of one raw-data-table row (lane-padded, paper Fig. 5).
+
+    This is the per-vector-read unit of the storage term: a quantized
+    store (dtype uint8/int8) moves 4x fewer bytes per hop than float32 at
+    identical traversal behavior — the `csd` backend's measured
+    `QueryStats.bytes_read` reflects the same shrink (modulo unchanged
+    neighbor-table traffic and block-granularity rounding)."""
+    try:
+        itemsize = VECTOR_DTYPE_BYTES[dtype]
+    except KeyError:
+        raise ValueError(
+            f"unknown vector dtype {dtype!r}; "
+            f"available: {sorted(VECTOR_DTYPE_BYTES)}") from None
+    d_pad = ((dim + lane - 1) // lane) * lane
+    return d_pad * itemsize
 
 
 def storage_cost(block_accesses: float, block_size: int,

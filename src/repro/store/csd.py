@@ -24,6 +24,14 @@ and re-scores them with `api.rerank.batched_rerank` over a compact,
 monotonically-remapped id space — again exactly matching the in-memory
 backends. The async Prefetcher overlaps hop t+1's neighbor-block fetches
 with hop t's device compute (paper §5.2).
+
+Quantized stores (IndexSpec.dtype uint8/int8 — the paper's SIFT1B regime):
+the raw-data table holds 1-byte codes, so every vector row is 4x smaller
+and `QueryStats.bytes_read` drops accordingly — this is exactly why the
+paper's billion-point database fits the SmartSSD. The traversal runs in
+code space (gathered tiles cast to f32, same as the resident kernel),
+stage-1 distances are rescaled by `scale**2` at the edge, and stage-2
+rerank dequantizes the gathered rows back to float32.
 """
 
 from __future__ import annotations
@@ -36,7 +44,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.partitioned import build_partitioned_db, merge_topk
+from repro.core.partitioned import (build_partitioned_db, merge_topk,
+                                    quantize_db_vectors)
 from repro.core.search import SearchParams, merge_sorted, metric_distance
 from repro.store.layout import StoreReader, open_store, write_store
 
@@ -168,7 +177,8 @@ def _search_one_partition(reader: StoreReader, p: int, q_pad: jnp.ndarray,
     max_level = int(reader.max_level[p] if reader.max_level.ndim
                     else reader.max_level)
     ep_row = reader.row("vectors", p, [ep])
-    ep_vec = jnp.asarray(reader.read_rows("vectors", ep_row)[0])
+    ep_vec = jnp.asarray(
+        reader.read_rows("vectors", ep_row)[0].astype(np.float32))
     ep_sq = jnp.asarray(reader.read_rows("sqnorms", ep_row)[0, 0])
     qsq, ep_d = _query_prep(q_pad, ep_vec, ep_sq, metric)
 
@@ -292,6 +302,7 @@ class CSDBackend:
     def __init__(self, spec: IndexSpec, reader: StoreReader):
         self.spec = spec
         self.reader = reader
+        self.quant = spec.quantizer()
 
     @staticmethod
     def _storage_path(spec: IndexSpec) -> str:
@@ -305,6 +316,8 @@ class CSDBackend:
     def build(cls, vectors: np.ndarray, spec: IndexSpec, mesh=None):
         path = cls._storage_path(spec)
         pdb = build_partitioned_db(vectors, spec.num_partitions, spec.hnsw)
+        # quantized spec: the on-flash vector rows shrink to 1 byte/dim
+        pdb = quantize_db_vectors(pdb, spec.dtype)
         write_store(path, pdb, block_size=spec.block_size)
         del pdb                     # from here on, the store is the database
         return cls(spec, open_store(path, spec.cache_bytes,
@@ -315,7 +328,8 @@ class CSDBackend:
         """Convert an already-built resident PartitionedDB into an
         out-of-core service (benchmarks reuse one graph build)."""
         path = cls._storage_path(spec)
-        write_store(path, pdb, block_size=spec.block_size)
+        write_store(path, quantize_db_vectors(pdb, spec.dtype),
+                    block_size=spec.block_size)
         return cls(spec, open_store(path, spec.cache_bytes,
                                     prefetch=spec.prefetch))
 
@@ -336,6 +350,8 @@ class CSDBackend:
             ids, dists = self._rerank_from_store(queries, cand, k)
         else:
             ids, dists, hops, calcs = store_search(r, queries, p)
+            if self.quant is not None:   # code-space -> real-space
+                dists = dists * jnp.float32(self.quant.dist_scale)
         stats = None
         if with_stats:
             from repro.api.types import QueryStats
@@ -377,12 +393,18 @@ class CSDBackend:
         part = np.searchsorted(r.partition_starts, uniq, side="right") - 1
         local = uniq - r.partition_starts[part]
         rows = part * r.n_pad + local
-        vecs = jnp.asarray(r.read_rows("vectors", rows)[:, :r.dim])
+        rows_f = r.read_rows("vectors", rows)[:, :r.dim].astype(np.float32)
+        if self.quant is not None:
+            # stage 2 stays float32: dequantize the gathered code rows
+            rows_f = self.quant.decode(rows_f)
+        vecs = jnp.asarray(rows_f)
         sqs = jnp.einsum("nd,nd->n", vecs, vecs)
         compact = np.where(valid,
                            np.searchsorted(uniq, np.where(valid, cand, 0)),
                            -1).astype(np.int32)
         q = jnp.asarray(np.asarray(queries, np.float32))
+        if self.quant is not None:
+            q = self.quant.decode(q)     # code-valued queries -> f32 values
         ids_c, dists = batched_rerank(vecs, sqs, q, jnp.asarray(compact), k,
                                       self.spec.metric)
         ids_c = np.asarray(ids_c)

@@ -54,10 +54,27 @@ class BackendZoo:
         return np.asarray(resp.ids)
 
     def _build(self, backend: str, metric: str, normalized: bool):
+        import dataclasses
+
         from repro.api import IndexSpec, SearchService
         from repro.store.csd import CSDBackend
 
         vecs = self._vectors[normalized]
+        if backend == "uint8":
+            # the paper's SIFT1B precision: quantized partitioned engine
+            spec = IndexSpec(metric=metric, backend="partitioned",
+                             dtype="uint8", num_partitions=2, hnsw=ZOO_CFG,
+                             keep_vectors=True)
+            return SearchService.build(vecs, spec)
+        if backend == "uint8_csd":
+            # same quantized graph, served out-of-core (1-byte vector rows)
+            part = self.service("uint8", metric, normalized=normalized)
+            store = str(self._tmp.mktemp("zoo-csd-u8") / "store")
+            spec = dataclasses.replace(part.spec, backend="csd",
+                                       keep_vectors=False,
+                                       storage_path=store, prefetch=False)
+            return SearchService(
+                spec, CSDBackend.from_partitioned(part.backend.pdb, spec))
         if backend == "csd":
             # same graph as the partitioned service, restructured on "flash"
             part = self.service("partitioned", metric, normalized=normalized)

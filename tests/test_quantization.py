@@ -1,0 +1,266 @@
+"""The quantized uint8/int8 vector path (IndexSpec.dtype).
+
+Four contracts, mirroring the paper's SIFT1B operating point (uint8 rows,
+integer distance units, float32 stage-2):
+
+  * quantizer: round-trip error bounded by scale/2; SIFT-style integer
+    byte data round-trips exactly.
+  * kernels: the Pallas integer distance / fused top-k kernels equal the
+    numpy/jnp references EXACTLY (f32 accumulation over 8-bit codes is
+    exact below 2^24).
+  * engines: quantized `csd` == quantized `partitioned` bit-identically
+    (ids and dists), stage-1 distances are `scale**2 *` code-space, and
+    stage-2 rerank re-scores in dequantized float32.
+  * storage: the quantized store's raw-data table is exactly 4x smaller
+    and measured `QueryStats.bytes_read` drops accordingly (neighbor-table
+    traffic is unchanged, so the end-to-end ratio sits between 2x and 4x
+    at test scale).
+"""
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import SearchRequest
+from repro.optim.compression import CODE_DTYPES, VectorQuantizer
+
+K, EF = 10, 40
+
+
+# ---------------------------------------------------------------------------
+# quantizer
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", sorted(CODE_DTYPES))
+@pytest.mark.parametrize("signed_data", [False, True])
+def test_roundtrip_error_bounded_by_half_scale(dtype, signed_data):
+    rng = np.random.default_rng(0)
+    x = rng.normal(scale=20.0, size=(512, 32)).astype(np.float32)
+    if not signed_data:
+        x = np.abs(x)
+    q = VectorQuantizer.fit(x, dtype)
+    err = np.abs(x - q.decode(q.encode(x)))
+    assert float(err.max()) <= q.scale / 2 + 1e-5, (
+        f"round-trip error {err.max():.4g} exceeds scale/2 = "
+        f"{q.scale / 2:.4g} ({dtype}, signed={signed_data})")
+
+
+def test_sift_style_bytes_roundtrip_exactly():
+    """Integer-valued data in [0, 255] (SIFT's native format) quantizes to
+    uint8 with scale 1 / zero-point 0 and is reconstructed bit-exactly."""
+    rng = np.random.default_rng(1)
+    x = rng.integers(0, 256, size=(256, 128)).astype(np.float32)
+    x[0, 0] = 255.0                          # pin the range
+    q = VectorQuantizer.fit(x, "uint8")
+    assert q.scale == 1.0 and q.zero_point == 0
+    np.testing.assert_array_equal(q.decode(q.encode(x)), x)
+
+
+def test_code_space_l2_is_scaled_real_l2():
+    """The quantizer's core geometric property: squared L2 over codes *
+    scale**2 == squared L2 over dequantized values (zero-point cancels)."""
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(64, 16)).astype(np.float32)   # signed -> zp=128
+    q = VectorQuantizer.fit(x, "uint8")
+    assert q.zero_point == 128
+    a, b = q.encode(x[:32]).astype(np.float64), q.encode(x[32:]).astype(np.float64)
+    code_d2 = ((a - b) ** 2).sum(1) * q.dist_scale
+    da, db = q.decode(q.encode(x[:32])), q.decode(q.encode(x[32:]))
+    real_d2 = ((da.astype(np.float64) - db.astype(np.float64)) ** 2).sum(1)
+    np.testing.assert_allclose(code_d2, real_d2, rtol=1e-6)
+
+
+def test_fit_rejects_unknown_dtype():
+    with pytest.raises((KeyError, ValueError)):
+        VectorQuantizer.fit(np.zeros((4, 4), np.float32), "int4")
+
+
+# ---------------------------------------------------------------------------
+# Pallas integer kernels vs numpy references
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("np_dtype,lo,hi", [(np.uint8, 0, 256),
+                                            (np.int8, -127, 128)])
+@pytest.mark.parametrize("bq,bx,d", [(7, 100, 17), (33, 600, 128),
+                                     (1, 1024, 96)])
+def test_l2dist_q_matches_ref_exactly(np_dtype, lo, hi, bq, bx, d):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.kernels.ref import l2dist_q_ref
+
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.integers(lo, hi, size=(bq, d)).astype(np_dtype))
+    x = jnp.asarray(rng.integers(lo, hi, size=(bx, d)).astype(np_dtype))
+    got = ops.l2dist_q(q, x, out_scale=0.25)
+    want = l2dist_q_ref(q, x, out_scale=0.25)
+    # f32 accumulation over 8-bit codes is exact -> bitwise equality
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("np_dtype,lo,hi", [(np.uint8, 0, 256),
+                                            (np.int8, -127, 128)])
+def test_l2topk_q_fused_matches_ref(np_dtype, lo, hi):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.kernels.ref import l2topk_q_ref
+
+    rng = np.random.default_rng(8)
+    q = jnp.asarray(rng.integers(lo, hi, size=(5, 64)).astype(np_dtype))
+    x = jnp.asarray(rng.integers(lo, hi, size=(1500, 64)).astype(np_dtype))
+    gv, gi = ops.l2topk_q(q, x, k=K, out_scale=0.5)
+    wv, wi = l2topk_q_ref(q, x, k=K, out_scale=0.5)
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    # integer distances tie often; values must agree, ids mostly
+    assert (np.asarray(gi) == np.asarray(wi)).mean() > 0.9
+
+
+def test_l2topk_q_padding_rows_excluded():
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.integers(0, 256, size=(4, 32)).astype(np.uint8))
+    x = jnp.asarray(rng.integers(0, 256, size=(700, 32)).astype(np.uint8))
+    xf = x.astype(jnp.float32)
+    xsq = jnp.einsum("bd,bd->b", xf, xf).at[100:].set(jnp.inf)
+    _, gi = ops.l2topk_q(q, x, xsq=xsq, k=K)
+    assert np.asarray(gi).max() < 100
+
+
+# ---------------------------------------------------------------------------
+# engines: quantized csd == quantized partitioned; distance semantics
+# ---------------------------------------------------------------------------
+
+
+def _resp(zoo, backend, **kw):
+    svc = zoo.service(backend, "l2")
+    return svc.search(SearchRequest(queries=zoo.queries(), k=K, ef=EF, **kw))
+
+
+def test_quantized_csd_bit_identical_to_partitioned(backend_zoo):
+    """Acceptance: backend in {partitioned, csd} with dtype=uint8 returns
+    bit-identical ids (and dists) — one edge quantization, one kernel."""
+    rp = _resp(backend_zoo, "uint8")
+    rc = _resp(backend_zoo, "uint8_csd")
+    np.testing.assert_array_equal(np.asarray(rc.ids), np.asarray(rp.ids))
+    np.testing.assert_array_equal(np.asarray(rc.dists), np.asarray(rp.dists))
+
+
+def test_quantized_rerank_parity_and_float32_semantics(backend_zoo):
+    """Stage 2 stays float32: both engines re-score the candidate pool over
+    DEQUANTIZED rows, so (a) they agree bit-for-bit and (b) the distances
+    equal a numpy recompute in dequantized space."""
+    rp = _resp(backend_zoo, "uint8", rerank=True)
+    rc = _resp(backend_zoo, "uint8_csd", rerank=True)
+    np.testing.assert_array_equal(np.asarray(rc.ids), np.asarray(rp.ids))
+
+    svc = backend_zoo.service("uint8", "l2")
+    quant = svc.quantizer
+    deq_x = quant.decode(quant.encode(backend_zoo.data["vectors"]))
+    deq_q = quant.decode(quant.encode(backend_zoo.queries()))
+    ids = np.asarray(rp.ids)
+    want = np.einsum("bkd,bkd->bk", deq_x[ids] - deq_q[:, None],
+                     deq_x[ids] - deq_q[:, None])
+    # the engine evaluates the dot-product form (xsq - 2 x.q + qsq) in f32;
+    # the direct-difference recompute differs by f32 cancellation noise
+    np.testing.assert_allclose(np.asarray(rp.dists), want, rtol=1e-3,
+                               atol=0.1)
+
+
+def test_quantized_stage1_dists_are_scaled_code_space(backend_zoo):
+    """Non-rerank distances == dist_scale * code-space squared L2."""
+    svc = backend_zoo.service("uint8", "l2")
+    quant = svc.quantizer
+    resp = _resp(backend_zoo, "uint8")
+    codes_x = quant.encode(backend_zoo.data["vectors"]).astype(np.float32)
+    codes_q = quant.encode(backend_zoo.queries()).astype(np.float32)
+    ids = np.asarray(resp.ids)
+    code_d2 = np.einsum("bkd,bkd->bk", codes_x[ids] - codes_q[:, None],
+                        codes_x[ids] - codes_q[:, None])
+    np.testing.assert_allclose(np.asarray(resp.dists),
+                               code_d2 * quant.dist_scale, rtol=1e-5)
+
+
+def test_quantized_spec_in_manifest_and_load_roundtrip(backend_zoo,
+                                                       tmp_path):
+    """scale/zero-point land in index_manifest.json; load reproduces the
+    exact same answers."""
+    from repro.api import SearchService
+    from repro.api.service import MANIFEST_NAME
+
+    svc = backend_zoo.service("uint8", "l2")
+    path = str(tmp_path / "u8-index")
+    svc.save(path)
+    with open(os.path.join(path, MANIFEST_NAME)) as f:
+        spec_json = json.load(f)["spec"]
+    assert spec_json["dtype"] == "uint8"
+    assert spec_json["qscale"] == svc.spec.qscale
+    assert spec_json["qzero"] == svc.spec.qzero
+
+    svc2 = SearchService.load(path)
+    assert np.asarray(svc2.backend.pdb.db.vectors).dtype == np.uint8
+    r1 = svc.search(SearchRequest(queries=backend_zoo.queries(), k=K, ef=EF))
+    r2 = svc2.search(SearchRequest(queries=backend_zoo.queries(), k=K, ef=EF))
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+
+
+def test_quantized_rejects_non_l2_metrics(backend_zoo):
+    from repro.api import IndexSpec, SearchService
+
+    with pytest.raises(ValueError, match="metric='l2' only"):
+        SearchService.build(backend_zoo.data["vectors"],
+                            IndexSpec(metric="cosine", dtype="uint8",
+                                      backend="partitioned"))
+
+
+# ---------------------------------------------------------------------------
+# storage: 4x smaller rows, fewer bytes over the "flash" link
+# ---------------------------------------------------------------------------
+
+
+def test_uint8_store_reads_fewer_bytes(backend_zoo):
+    """The raw-data table shrinks exactly 4x; measured bytes_read drops.
+
+    The end-to-end ratio is < 4x because neighbor-table traffic (int32
+    ids) is precision-independent — at this scale vectors are ~80% of the
+    traffic, so anything >= 2x means the vector rows really shrank (see
+    launch/ann_dryrun.py for the SIFT1B-scale 4x projection)."""
+    svc_u8 = backend_zoo.service("uint8_csd", "l2")
+    svc_f32 = backend_zoo.service("csd", "l2")
+
+    t_u8 = svc_u8.backend.reader.blockfile.tables["vectors"]
+    t_f32 = svc_f32.backend.reader.blockfile.tables["vectors"]
+    assert t_u8["dtype"] == "uint8" and t_f32["dtype"] == "float32"
+    assert t_f32["nbytes"] == 4 * t_u8["nbytes"]
+    assert t_f32["row_bytes"] == 4 * t_u8["row_bytes"]
+
+    # cold-cache measurement: fresh readers over the same stores (the
+    # zoo services' shared PageCaches are warm from earlier tests)
+    from repro.api import SearchService
+    from repro.store.csd import CSDBackend
+    from repro.store.layout import open_store
+
+    def cold_bytes(svc):
+        reader = open_store(svc.backend.reader.path,
+                            svc.spec.cache_bytes, prefetch=False)
+        try:
+            cold = SearchService(svc.spec, CSDBackend(svc.spec, reader))
+            resp = cold.search(SearchRequest(queries=backend_zoo.queries(),
+                                             k=K, ef=EF, with_stats=True))
+            return float(resp.stats.bytes_read)
+        finally:
+            reader.close()
+
+    ratio = cold_bytes(svc_f32) / cold_bytes(svc_u8)
+    assert ratio >= 2.0, (
+        f"uint8 store should cut storage bytes ~4x (vectors) — measured "
+        f"total ratio {ratio:.2f}x "
+        f"({int(r_f32.stats.bytes_read)} vs {int(r_u8.stats.bytes_read)})")

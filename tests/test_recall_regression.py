@@ -14,9 +14,16 @@ import numpy as np
 import pytest
 
 # floor per backend: observed ~0.95+ on the pinned seed; a real graph
-# regression drops recall far below 0.90 (a broken merge halves it)
-RECALL_FLOORS = {"hnsw": 0.90, "partitioned": 0.90, "csd": 0.90}
+# regression drops recall far below 0.90 (a broken merge halves it).
+# "uint8" is the quantized partitioned engine (IndexSpec.dtype="uint8",
+# the paper's SIFT1B precision): observed 0.956 on the pinned seed — the
+# quantization cost must stay a few points, not tens.
+RECALL_FLOORS = {"hnsw": 0.90, "partitioned": 0.90, "csd": 0.90,
+                 "uint8": 0.90}
 K, EF = 10, 40
+# max recall@10 the uint8 path may lose vs the float32 engine on the
+# pinned seed (observed delta: ~0.04)
+UINT8_MAX_RECALL_DROP = 0.08
 
 
 def _recall(ids: np.ndarray, gt: np.ndarray, k: int) -> float:
@@ -38,3 +45,14 @@ def test_bruteforce_baseline_is_exact(backend_zoo):
     """The floor's reference point: the exact backend IS the ground truth."""
     ids = backend_zoo.ids("exact", "l2", k=K)
     assert _recall(ids, backend_zoo.data["gt"], K) == 1.0
+
+
+def test_uint8_recall_within_floor_of_float32(backend_zoo):
+    """The quantized path's recall cost vs the float32 engine stays
+    bounded on the pinned seed (ISSUE: uint8 vs float32 floor)."""
+    gt = backend_zoo.data["gt"]
+    r_f32 = _recall(backend_zoo.ids("partitioned", "l2", k=K, ef=EF), gt, K)
+    r_u8 = _recall(backend_zoo.ids("uint8", "l2", k=K, ef=EF), gt, K)
+    assert r_u8 >= r_f32 - UINT8_MAX_RECALL_DROP, (
+        f"uint8 recall@{K} fell {r_f32 - r_u8:.3f} below float32 "
+        f"(allowed {UINT8_MAX_RECALL_DROP}): {r_u8:.3f} vs {r_f32:.3f}")
