@@ -1,0 +1,102 @@
+"""Streaming-ingest sweep (repro.ingest): QPS and recall@10 under churn.
+
+Not a paper figure — the paper serves a static SIFT1B index — this is the
+dynamic-workload extension's cost surface:
+
+  * recall@10 and QPS vs FRACTION DELETED (tombstone debt burns over-fetch
+    slots and traversal work until compaction reclaims it);
+  * QPS vs SEGMENT COUNT (searches fan out over every live segment — the
+    LSM read-amplification curve);
+  * both, before and after `compact()` (one rebuilt segment restores the
+    static-index cost).
+
+`derived` also carries the modeled write-amplification of the same
+workload (launch/costmodel.compaction_cost), tying the measured read cost
+to the SSD-write cost the compactor pays to fix it.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import recall_of, timeit
+from repro.api import IndexSpec, MutableSearchService, SearchRequest
+from repro.core.hnsw_graph import HNSWConfig
+from repro.data import VectorDataset
+
+N, DIM, NQ = 4000, 64, 64
+K, EF = 10, 40
+CFG = HNSWConfig(M=12, ef_construction=80, seed=0)
+
+
+def _workload():
+    ds = VectorDataset(N, DIM, n_clusters=32, seed=0)
+    return ds.vectors(), ds.queries(NQ)
+
+
+def _gt(vectors, mask, queries):
+    surv = vectors[mask]
+    gids = np.flatnonzero(mask)
+    d2 = (np.einsum("nd,nd->n", surv, surv)[None]
+          - 2 * queries @ surv.T
+          + np.einsum("qd,qd->q", queries, queries)[:, None])
+    return gids[np.argsort(d2, axis=1, kind="stable")[:, :K]]
+
+
+def _measure(svc, queries, gt):
+    req = SearchRequest(queries=queries, k=K, ef=EF)
+    ids = np.asarray(svc.search(req).ids)
+    us = timeit(lambda: svc.search(req).ids, warmup=1, iters=2)
+    return recall_of(ids, gt), us / len(queries), 1e6 / (us / len(queries))
+
+
+def run():
+    vectors, queries = _workload()
+    rows = []
+
+    # -- sweep 1: fraction deleted (fixed segment count) ---------------------
+    for frac in (0.0, 0.25, 0.5):
+        svc = MutableSearchService(
+            IndexSpec(backend="partitioned", num_partitions=2, hnsw=CFG),
+            seal_threshold=N // 4)
+        gids = svc.insert(vectors)
+        n_del = int(frac * N)
+        dele = gids[:: max(1, N // max(n_del, 1))][:n_del]
+        if len(dele):
+            svc.delete(dele)
+        mask = ~np.isin(np.arange(N), dele)
+        gt = _gt(vectors, mask, queries)
+        n_seg_pre = svc.num_segments
+        r0, us0, qps0 = _measure(svc, queries, gt)
+        svc.compact()
+        r1, us1, qps1 = _measure(svc, queries, gt)
+        rows.append((f"fig_ingest_deleted_{int(frac*100):02d}pct", us0,
+                     f"recall_pre={r0:.3f};qps_pre={qps0:.0f};"
+                     f"recall_post_compact={r1:.3f};qps_post={qps1:.0f};"
+                     f"segments_pre={n_seg_pre};"
+                     f"deleted={len(dele)}"))
+
+    # -- sweep 2: segment count (no deletes) ---------------------------------
+    mask = np.ones(N, bool)
+    gt = _gt(vectors, mask, queries)
+    for n_seg in (1, 2, 4, 8):
+        svc = MutableSearchService(
+            IndexSpec(backend="partitioned", num_partitions=2, hnsw=CFG),
+            seal_threshold=N // n_seg)
+        svc.insert(vectors)
+        svc.flush()
+        r0, us0, qps0 = _measure(svc, queries, gt)
+        rows.append((f"fig_ingest_segments_{n_seg}", us0,
+                     f"recall={r0:.3f};qps={qps0:.0f};"
+                     f"live_segments={svc.num_segments}"))
+
+    # modeled write amplification of the same cadence (costmodel tie-in)
+    from repro.launch.costmodel import compaction_cost, vector_row_bytes
+    cc = compaction_cost(N, vector_row_bytes(DIM), seal_threshold=N // 4,
+                         compact_every=4, delete_frac=0.25)
+    rows.append(("fig_ingest_write_amp", 0.0,
+                 f"write_amp={cc.write_amp:.2f};"
+                 f"bytes_ingested={int(cc.bytes_ingested)};"
+                 f"bytes_rewritten={int(cc.bytes_rewritten)};"
+                 f"compactions={cc.compactions}"))
+    return rows

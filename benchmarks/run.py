@@ -19,6 +19,7 @@ MODULES = [
     "fig9_bruteforce",
     "fig11_parallelism",
     "fig12_platforms",
+    "fig_ingest",
     "table2_kernels",
     "lm_substrate",
 ]

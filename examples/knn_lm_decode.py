@@ -13,8 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import IndexSpec, SearchRequest, SearchService
 from repro.configs import reduced_config
-from repro.core.engine import ANNEngine
 from repro.core.hnsw_graph import HNSWConfig
 from repro.data.pipeline import make_batch
 from repro.models.model import decode_step, prefill_step
@@ -42,8 +42,10 @@ def main():
     print("building datastore ...")
     ds_keys, ds_vals = build_datastore(params, cfg)
     print(f"  {len(ds_keys)} memories of dim {cfg.d_model}")
-    engine = ANNEngine.build(ds_keys.astype(np.float32), num_partitions=2,
-                             cfg=HNSWConfig(M=12, ef_construction=60))
+    engine = SearchService.build(
+        ds_keys.astype(np.float32),
+        IndexSpec(backend="partitioned", num_partitions=2,
+                  hnsw=HNSWConfig(M=12, ef_construction=60)))
 
     # decode 12 tokens with kNN interpolation
     B, T0 = 2, 24
@@ -60,8 +62,9 @@ def main():
         # pre-head hidden, which prefill/decode returns via logits' source.
         # Here we query with the argmax embedding as a cheap stand-in key.
         hid_key = np.asarray(lm_logp @ params["embed"][: cfg.vocab_size])
-        ids, dists = engine.search(hid_key.astype(np.float32), k=8, ef=32)
-        ids, dists = np.asarray(ids), np.asarray(dists)
+        resp = engine.search(SearchRequest(
+            queries=hid_key.astype(np.float32), k=8, ef=32))
+        ids, dists = np.asarray(resp.ids), np.asarray(resp.dists)
         knn_logp = np.full((B, cfg.vocab_size), -30.0, np.float32)
         for b in range(B):
             w = np.exp(-dists[b] / 10.0)

@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""CI ingest-smoke: tiny streaming workload on the csd backend.
+
+Exercises the whole mutable-index lifecycle out-of-core with a deliberately
+tiny (8 KiB) cache — insert waves, deletes, explicit flush, searches while
+segments accumulate, then compact — and ASSERTS the acceptance bounds:
+
+  * peak resident store memory stays inside the re-split cache budget
+    (max(cache_bytes, n_segments * block_size)) the whole time, and the
+    total including the memtable stays inside budget + memtable buffer;
+  * deleted ids never surface, before or after compaction;
+  * compaction leaves one segment, non-empty results, space reclaimed on
+    disk (dead segment stores deleted, store manifest swapped).
+
+  PYTHONPATH=src python scripts/ingest_smoke.py
+"""
+
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.api import IndexSpec, MutableSearchService, SearchRequest  # noqa: E402
+from repro.core.hnsw_graph import HNSWConfig  # noqa: E402
+from repro.data import clustered_vectors  # noqa: E402
+from repro.store.segments import list_segments  # noqa: E402
+
+CACHE_BYTES = 8192
+BLOCK_SIZE = 512
+SEAL = 120
+N, DIM = 900, 32
+
+
+def main():
+    store = tempfile.mkdtemp(prefix="ingest-smoke-")
+    vecs = clustered_vectors(N, DIM, k=10, seed=0)
+    rng = np.random.default_rng(1)
+    queries = (vecs[rng.integers(0, N, 8)]
+               + rng.normal(scale=1.0, size=(8, DIM))).astype(np.float32)
+    spec = IndexSpec(backend="csd", num_partitions=1,
+                     hnsw=HNSWConfig(M=8, ef_construction=50, seed=0),
+                     storage_path=store, block_size=BLOCK_SIZE,
+                     cache_bytes=CACHE_BYTES, prefetch=False)
+    svc = MutableSearchService(spec, seal_threshold=SEAL)
+
+    deleted = []
+    mem_peak = 0
+    for lo in range(0, N, 75):
+        gids = svc.insert(vecs[lo: lo + 75])
+        deleted.extend(gids[::5][:5].tolist())
+        svc.delete(gids[::5][:5])
+        resp = svc.search(SearchRequest(queries=queries, k=10, ef=40,
+                                        with_stats=True))
+        ids = np.asarray(resp.ids)
+        assert not np.isin(ids, np.asarray(deleted)).any(), \
+            "deleted id surfaced during streaming"
+        mem_peak = max(mem_peak,
+                       svc.resident_bytes() - svc.storage_resident_bytes())
+        cache_bound = max(CACHE_BYTES, svc.num_segments * BLOCK_SIZE)
+        assert svc.peak_storage_resident_bytes <= cache_bound, (
+            f"cache residency {svc.peak_storage_resident_bytes} B exceeds "
+            f"bound {cache_bound} B")
+    svc.flush()
+    n_seg_pre = svc.num_segments
+    assert n_seg_pre >= 5, f"expected several segments, got {n_seg_pre}"
+    cache_bound = max(CACHE_BYTES, n_seg_pre * BLOCK_SIZE)
+    assert svc.peak_resident_bytes <= cache_bound + mem_peak, (
+        f"peak resident {svc.peak_resident_bytes} B exceeds "
+        f"{cache_bound} + {mem_peak} B")
+
+    out = svc.compact()
+    assert svc.num_segments == 1
+    # every deleted row is physically gone: some were dropped at seal time
+    # (deleted while still in the memtable), the rest just now by compact
+    assert out["rows_reclaimed"] <= len(set(deleted))
+    assert svc.size == N - len(set(deleted))
+    assert list_segments(store) == [s.name for s in svc._segments]
+    resp = svc.search(SearchRequest(queries=queries, k=10, ef=40,
+                                    with_stats=True))
+    ids = np.asarray(resp.ids)
+    assert (ids[:, 0] >= 0).all(), "empty results after compaction"
+    assert not np.isin(ids, np.asarray(deleted)).any()
+    assert resp.stats.block_reads > 0
+
+    print(f"[ingest-smoke] OK: {N} inserts, {len(set(deleted))} deletes, "
+          f"{n_seg_pre} segments -> 1 after compact; "
+          f"peak cache {svc.peak_storage_resident_bytes} B "
+          f"(bound {cache_bound} B), peak memtable {mem_peak} B, "
+          f"block_reads={resp.stats.block_reads}")
+    svc.close()
+
+
+if __name__ == "__main__":
+    main()

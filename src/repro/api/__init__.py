@@ -1,8 +1,10 @@
 """repro.api — the unified search-service surface.
 
 One request/response API over every engine in the repo: exact brute force,
-monolithic HNSW, the paper's partitioned two-stage engine, and the
-mesh-distributed variant. See api/README.md for the backend matrix.
+monolithic HNSW, the paper's partitioned two-stage engine, the
+mesh-distributed variant, and the out-of-core block store. Mutable
+(insert/delete/compact) indexes are `MutableSearchService` from
+`repro.ingest`. See api/README.md for the backend matrix.
 """
 
 from repro.api.backends import (
@@ -29,6 +31,7 @@ from repro.api.types import (
 
 __all__ = [
     "FORMAT_VERSION",
+    "MutableSearchService",
     "IndexSpec",
     "SearchRequest",
     "SearchResponse",
@@ -44,3 +47,13 @@ __all__ = [
     "available_backends",
     "batched_rerank",
 ]
+
+
+def __getattr__(name):
+    """Lazy export of the mutable service (PEP 562): repro.ingest composes
+    the objects defined above, so an eager tail import here would be a
+    cycle whenever repro.ingest itself is the import entry point."""
+    if name == "MutableSearchService":
+        from repro.ingest.service import MutableSearchService
+        return MutableSearchService
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

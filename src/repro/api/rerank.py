@@ -1,11 +1,12 @@
 """Batched on-device stage-2 rerank (paper Fig. 4 stage 2).
 
-Replaces the per-query NumPy loop that used to live in `ANNEngine._rerank`:
-the whole [B, C] candidate pool (C = P*K stage-1 intermediates) is
-deduplicated, gathered, and exactly re-scored in one jitted call. Dedup is
-done by sorting ids within each row — duplicates become adjacent and are
-masked to +inf, which also reproduces the old np.unique tie-break (among
-equal distances the smallest id wins).
+The whole [B, C] candidate pool (C = P*K stage-1 intermediates) is
+deduplicated, gathered, and exactly re-scored in one jitted call — this is
+the single rerank implementation every engine (partitioned, distributed,
+csd, and each segment of a mutable index) routes through. Dedup is done by
+sorting ids within each row — duplicates become adjacent and are masked to
++inf, which also reproduces an np.unique tie-break (among equal distances
+the smallest id wins).
 """
 
 from __future__ import annotations

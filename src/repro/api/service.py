@@ -132,16 +132,36 @@ class SearchService:
 
     @classmethod
     def load(cls, path: str, *, mesh=None) -> "SearchService":
-        """Re-open the latest committed version of a saved index."""
-        with open(os.path.join(path, MANIFEST_NAME)) as f:
+        """Re-open the latest committed version of a saved index.
+
+        Indexes saved before the manifest existed (bare step dirs — the
+        pre-`repro.api` era; this fallback used to live in the retired
+        `ANNEngine` shim) still load: the spec is synthesized from the
+        stored partition count, with default HNSW knobs."""
+        manifest_path = os.path.join(path, MANIFEST_NAME)
+        step = latest_step(path)
+        if not os.path.exists(manifest_path):
+            if step is None:
+                raise FileNotFoundError(
+                    f"no index manifest or committed checkpoint "
+                    f"under {path!r}")
+            leaves = read_step_leaves(path, step)
+            spec = IndexSpec(backend="partitioned",
+                             num_partitions=int(leaves["meta/num_partitions"]))
+            backend = get_backend(spec.backend).from_state(spec, leaves,
+                                                           mesh=mesh)
+            return cls(spec, backend)
+        with open(manifest_path) as f:
             manifest = json.load(f)
         version = manifest.get("format_version")
         if version != FORMAT_VERSION:
+            hint = (" (a mutable segmented index — open it with "
+                    "repro.api.MutableSearchService.load)"
+                    if version == 2 else "")
             raise ValueError(
                 f"index at {path!r} has format_version={version}; "
-                f"this build reads version {FORMAT_VERSION}")
+                f"this build reads version {FORMAT_VERSION}{hint}")
         spec = IndexSpec.from_json(manifest["spec"])
-        step = latest_step(path)
         if step is None:
             raise FileNotFoundError(
                 f"no committed checkpoint step under {path!r}")

@@ -141,6 +141,9 @@ class QueryStats:
     cache_hits: Any = None      # scalar: demand accesses served from cache
     cache_hit_rate: Any = None  # scalar in [0, 1]
     bytes_read: Any = None      # scalar: block_reads * block_size
+    segments: Any = None        # mutable index only: per-segment stat dicts
+                                # ({segment, n, hops, dist_calcs, ...}) —
+                                # per-request, like the storage counters
 
 
 @dataclasses.dataclass(frozen=True)

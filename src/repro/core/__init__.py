@@ -2,18 +2,26 @@
 accelerator-resident graph databases (SmartSSD -> TPU adaptation).
 
 These are the engine primitives. The public serving surface lives in
-`repro.api` (IndexSpec / SearchRequest / SearchService); `ANNEngine` is a
-deprecated shim kept for existing callers."""
+`repro.api` (IndexSpec / SearchRequest / SearchService, plus the mutable
+MutableSearchService from repro.ingest). The deprecated `ANNEngine` shim
+has been removed — its behaviors live on in `SearchService` (including
+pre-manifest index loading)."""
 
-from repro.core.hnsw_graph import HNSWConfig, DeviceDB, build_hnsw, restructure
+from repro.core.hnsw_graph import (
+    DeviceDB,
+    GraphBuilder,
+    HNSWConfig,
+    build_hnsw,
+    restructure,
+)
 from repro.core.search import SearchParams, batch_search
 from repro.core.partitioned import PartitionedDB, build_partitioned_db, search_partitioned
 from repro.core.bruteforce import bruteforce_topk
-from repro.core.engine import ANNEngine
 
 __all__ = [
     "HNSWConfig",
     "DeviceDB",
+    "GraphBuilder",
     "build_hnsw",
     "restructure",
     "SearchParams",
@@ -22,5 +30,4 @@ __all__ = [
     "build_partitioned_db",
     "search_partitioned",
     "bruteforce_topk",
-    "ANNEngine",
 ]

@@ -29,7 +29,7 @@ from repro.core.hnsw_graph import DeviceDB
 from repro.core.partitioned import PartitionedDB, merge_topk
 from repro.core.search import SearchParams, batch_search
 
-__all__ = ["shard_db", "distributed_search", "DistributedANNEngine"]
+__all__ = ["shard_db", "make_distributed_search"]
 
 
 def shard_db(pdb: PartitionedDB, mesh) -> PartitionedDB:
@@ -39,11 +39,6 @@ def shard_db(pdb: PartitionedDB, mesh) -> PartitionedDB:
         lambda a: jax.device_put(a, NamedSharding(mesh, P(*( ("model",) + (None,) * (a.ndim - 1))))),
         pdb.db)
     return PartitionedDB(db=db, num_partitions=pdb.num_partitions, dim=pdb.dim)
-
-
-def _dp_spec(mesh):
-    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
-    return axes
 
 
 def make_distributed_search(mesh, p: SearchParams, maxM0: int,
@@ -96,27 +91,3 @@ def make_distributed_search(mesh, p: SearchParams, maxM0: int,
         return all_ids, all_ds, calcs[:, None]
 
     return jax.jit(_search)
-
-
-class DistributedANNEngine:
-    """Mesh-wide engine: partitions on `model`, queries on `data`/`pod`."""
-
-    def __init__(self, pdb: PartitionedDB, mesh, params: SearchParams):
-        n_model = mesh.shape["model"]
-        assert pdb.num_partitions % n_model == 0, (
-            f"{pdb.num_partitions} partitions must divide over model={n_model}")
-        self.mesh = mesh
-        self.pdb = shard_db(pdb, mesh)
-        self.params = params
-        maxM0 = int(self.pdb.db.l0_nbrs.shape[-1])
-        self._search = make_distributed_search(
-            mesh, params, maxM0, graph_axes=("model",),
-            query_axes=_dp_spec(mesh))
-
-    def search(self, queries):
-        dp = _dp_spec(self.mesh)
-        q = jax.device_put(
-            jnp.asarray(queries),
-            NamedSharding(self.mesh, P(dp, None)))
-        ids, ds, _ = self._search(self.pdb.db, q)
-        return ids, ds

@@ -34,6 +34,7 @@ __all__ = [
     "HNSWConfig",
     "HostGraph",
     "DeviceDB",
+    "GraphBuilder",
     "build_hnsw",
     "restructure",
     "db_size_bytes",
@@ -189,48 +190,123 @@ def _select_heuristic(
     return selected
 
 
-def build_hnsw(vectors: np.ndarray, cfg: HNSWConfig) -> HostGraph:
-    """Insert all points (Algorithm 1 of the HNSW paper), return the graph."""
-    vectors = np.ascontiguousarray(vectors, dtype=np.float32)
-    n, _ = vectors.shape
-    rng = np.random.default_rng(cfg.seed)
-    levels = np.minimum(
-        (-np.log(rng.uniform(1e-12, 1.0, size=n)) * cfg.ml).astype(np.int32),
-        cfg.max_level_cap - 1,
-    )
-    l0 = np.full((n, cfg.maxM0), -1, dtype=np.int32)
-    upper_ids = np.flatnonzero(levels >= 1)
-    up_ptr = np.full(n, -1, dtype=np.int32)
-    up_ptr[upper_ids] = np.arange(len(upper_ids), dtype=np.int32)
-    n_up = max(1, len(upper_ids))
-    up = np.full((cfg.max_level_cap - 1, n_up, cfg.maxM), -1, dtype=np.int32)
+class GraphBuilder:
+    """Incremental HNSW construction: one `insert_point` call per vector.
 
-    def nbrs_at(layer: int):
-        if layer == 0:
-            return lambda p: l0[p]
-        return lambda p: up[layer - 1, up_ptr[p]]
+    This is the insertion loop of Algorithm 1, factored out of `build_hnsw`
+    so mutable indexes (`repro.ingest`) can grow a graph point by point:
+    `build_hnsw` is now exactly `GraphBuilder` + one `insert_point` per row
+    and produces bit-identical graphs to the pre-factoring implementation
+    (levels are drawn from the same seeded stream, upper-table rows are
+    assigned in the same ascending-id order, and the beam/heuristic logic
+    is byte-for-byte the same helpers).
 
-    def set_nbrs(layer: int, p: int, ids: list[int]) -> None:
+    Arrays grow by doubling; `graph()` snapshots the current state as a
+    `HostGraph` (trimmed to the live prefix) at any point — a sealed
+    memtable is just `restructure(builder.graph())`.
+    """
+
+    def __init__(self, dim: int, cfg: HNSWConfig):
+        self.cfg = cfg
+        self.dim = int(dim)
+        self._rng = np.random.default_rng(cfg.seed)
+        self.n = 0
+        self.entry = 0
+        self.max_level = 0
+        cap = 64
+        self._vectors = np.zeros((cap, self.dim), dtype=np.float32)
+        self._levels = np.zeros(cap, dtype=np.int32)
+        self._l0 = np.full((cap, cfg.maxM0), -1, dtype=np.int32)
+        self._up_ptr = np.full(cap, -1, dtype=np.int32)
+        self.n_up = 0
+        up_cap = 16
+        self._up = np.full((cfg.max_level_cap - 1, up_cap, cfg.maxM), -1,
+                           dtype=np.int32)
+
+    # -- growth --------------------------------------------------------------
+
+    def _grow_points(self, need: int) -> None:
+        cap = self._vectors.shape[0]
+        if need <= cap:
+            return
+        new = max(need, 2 * cap)
+        for name in ("_vectors", "_levels", "_l0", "_up_ptr"):
+            old = getattr(self, name)
+            fill = -1 if old.dtype == np.int32 and name != "_levels" else 0
+            grown = np.full((new,) + old.shape[1:], fill, dtype=old.dtype)
+            grown[:cap] = old
+            setattr(self, name, grown)
+
+    def _grow_upper(self, need: int) -> None:
+        cap = self._up.shape[1]
+        if need <= cap:
+            return
+        new = max(need, 2 * cap)
+        grown = np.full((self.cfg.max_level_cap - 1, new, self.cfg.maxM), -1,
+                        dtype=np.int32)
+        grown[:, :cap] = self._up
+        self._up = grown
+
+    # -- the factored insertion routine --------------------------------------
+
+    def draw_level(self) -> int:
+        """Next level from the seeded exponential stream (Algorithm 1 l.4)."""
+        u = float(self._rng.uniform(1e-12, 1.0))
+        return min(int(-math.log(u) * self.cfg.ml), self.cfg.max_level_cap - 1)
+
+    def _nbrs_at(self, layer: int):
         if layer == 0:
-            row, width = l0[p], cfg.maxM0
+            return lambda p: self._l0[p]
+        return lambda p: self._up[layer - 1, self._up_ptr[p]]
+
+    def _set_nbrs(self, layer: int, p: int, ids: list[int]) -> None:
+        cfg = self.cfg
+        if layer == 0:
+            row, width = self._l0[p], cfg.maxM0
         else:
-            row, width = up[layer - 1, up_ptr[p]], cfg.maxM
+            row, width = self._up[layer - 1, self._up_ptr[p]], cfg.maxM
         row[:] = -1
         row[: min(len(ids), width)] = ids[:width]
 
-    entry, max_level = 0, int(levels[0])
-    for i in range(1, n):
-        lvl = int(levels[i])
-        q = vectors[i]
-        eps = [entry]
+    def insert_point(self, q: np.ndarray, level: int | None = None) -> int:
+        """Insert one vector (HNSW paper Algorithm 1); returns its local id.
+
+        `level` overrides the sampled layer (used by `build_hnsw` to keep
+        the vectorized level stream; incremental callers leave it None).
+        """
+        cfg = self.cfg
+        q = np.ascontiguousarray(q, dtype=np.float32)
+        if q.shape != (self.dim,):
+            raise ValueError(f"expected a [{self.dim}] vector, "
+                             f"got shape {q.shape}")
+        lvl = self.draw_level() if level is None else int(level)
+        i = self.n
+        self._grow_points(i + 1)
+        self._vectors[i] = q
+        self._levels[i] = lvl
+        self._l0[i] = -1
+        if lvl >= 1:
+            self._grow_upper(self.n_up + 1)
+            self._up_ptr[i] = self.n_up
+            self._up[:, self.n_up] = -1
+            self.n_up += 1
+        else:
+            self._up_ptr[i] = -1
+        self.n = i + 1
+        if i == 0:
+            self.entry, self.max_level = 0, lvl
+            return i
+
+        vectors = self._vectors
+        eps = [self.entry]
         # 1) greedy descent from the top to lvl+1.
-        for layer in range(max_level, lvl, -1):
+        for layer in range(self.max_level, lvl, -1):
             changed = True
             cur_d = float(_dist(vectors, np.asarray(eps[:1]), q)[0])
             cur = eps[0]
             while changed:
                 changed = False
-                nb = [int(e) for e in nbrs_at(layer)(cur) if e >= 0]
+                nb = [int(e) for e in self._nbrs_at(layer)(cur) if e >= 0]
                 if nb:
                     ds = _dist(vectors, np.asarray(nb), q)
                     j = int(np.argmin(ds))
@@ -238,27 +314,66 @@ def build_hnsw(vectors: np.ndarray, cfg: HNSWConfig) -> HostGraph:
                         cur, cur_d, changed = nb[j], float(ds[j]), True
             eps = [cur]
         # 2) beam insert from min(max_level, lvl) down to 0.
-        for layer in range(min(max_level, lvl), -1, -1):
+        for layer in range(min(self.max_level, lvl), -1, -1):
             width = cfg.maxM0 if layer == 0 else cfg.maxM
             cand_ids, cand_ds = _search_layer_host(
-                vectors, nbrs_at(layer), q, eps, cfg.ef_construction
+                vectors, self._nbrs_at(layer), q, eps, cfg.ef_construction
             )
             sel = _select_heuristic(vectors, cand_ids, cand_ds, cfg.M)
-            set_nbrs(layer, i, sel)
+            self._set_nbrs(layer, i, sel)
             # reverse links with pruning (Algorithm 1 lines 10-17).
             for e in sel:
-                row = nbrs_at(layer)(e)
+                row = self._nbrs_at(layer)(e)
                 cur = [int(x) for x in row if x >= 0]
                 if i not in cur:
                     cur.append(i)
                 if len(cur) > width:
                     ds = _dist(vectors, np.asarray(cur), vectors[e]).tolist()
                     cur = _select_heuristic(vectors, cur, ds, width)
-                set_nbrs(layer, e, cur)
+                self._set_nbrs(layer, e, cur)
             eps = cand_ids
-        if lvl > max_level:
-            entry, max_level = i, lvl
-    return HostGraph(vectors, levels, l0, up, up_ptr, entry, max_level, cfg)
+        if lvl > self.max_level:
+            self.entry, self.max_level = i, lvl
+        return i
+
+    # -- snapshot ------------------------------------------------------------
+
+    def graph(self) -> HostGraph:
+        """Immutable `HostGraph` view of the points inserted so far."""
+        if self.n == 0:
+            raise ValueError("cannot snapshot an empty graph")
+        n, n_up = self.n, max(1, self.n_up)
+        return HostGraph(
+            vectors=self._vectors[:n].copy(),
+            levels=self._levels[:n].copy(),
+            l0_nbrs=self._l0[:n].copy(),
+            up_nbrs=self._up[:, :n_up].copy(),
+            up_ptr=self._up_ptr[:n].copy(),
+            entry=self.entry,
+            max_level=self.max_level,
+            cfg=self.cfg,
+        )
+
+
+def build_hnsw(vectors: np.ndarray, cfg: HNSWConfig) -> HostGraph:
+    """Insert all points (Algorithm 1 of the HNSW paper), return the graph.
+
+    Levels are sampled for the whole batch up front (one vectorized draw
+    from the seeded rng — the historical stream) and fed to the factored
+    `GraphBuilder.insert_point`, so batch builds stay bit-identical across
+    the incremental-construction refactor.
+    """
+    vectors = np.ascontiguousarray(vectors, dtype=np.float32)
+    n, dim = vectors.shape
+    rng = np.random.default_rng(cfg.seed)
+    levels = np.minimum(
+        (-np.log(rng.uniform(1e-12, 1.0, size=n)) * cfg.ml).astype(np.int32),
+        cfg.max_level_cap - 1,
+    )
+    b = GraphBuilder(dim, cfg)
+    for i in range(n):
+        b.insert_point(vectors[i], level=int(levels[i]))
+    return b.graph()
 
 
 # ---------------------------------------------------------------------------

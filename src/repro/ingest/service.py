@@ -1,0 +1,501 @@
+"""MutableSearchService: streaming inserts + tombstone deletes over
+`repro.api`, with LSM-style sealed segments and background-able compaction.
+
+    from repro.api import IndexSpec, MutableSearchService, SearchRequest
+
+    svc = MutableSearchService(IndexSpec(backend="partitioned"),
+                               seal_threshold=1024)
+    gids = svc.insert(vectors)          # global ids, assigned monotonically
+    svc.delete(gids[:100])              # tombstoned; never surfaces again
+    resp = svc.search(SearchRequest(queries, k=10, ef=40))
+    svc.flush()                         # seal the memtable explicitly
+    svc.compact()                       # merge segments + reclaim space
+    svc.save(path); MutableSearchService.load(path)   # manifest v2
+
+Search fans out over the memtable (exact scan) and every sealed segment
+(each one is a normal `SearchService` — partitioned/csd hop kernels
+unchanged: a segment is just one more partition), filters tombstones, and
+rank-merges the per-source top-k — the same stage-2 reduction as the
+two-stage engine; `rerank=True` re-scores inside each segment first, so
+the merged distances are exact.
+
+Consistency: one lock guards all mutations; `search` snapshots (segment
+list, tombstone bitmap, memtable rows) under that lock and then runs
+lock-free, so a query batch always sees one atomic state — the snapshot
+semantics `repro.serve` relies on to interleave writes with batched reads.
+
+Memory (csd backend): segment PageCaches share ONE `spec.cache_bytes`
+budget — the budget is re-split (`PageCache.resize`) whenever the live
+segment set changes — so peak resident store memory stays
+`max(cache_bytes, n_segments * block_size)` + the memtable buffer no
+matter how many rows stream in. `peak_resident_bytes` tracks the
+high-water mark and the ingest CI job asserts the bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+
+import numpy as np
+
+from repro.api import metrics as _metrics
+from repro.api.service import SearchService
+from repro.api.types import (IndexSpec, QueryStats, SearchRequest,
+                             SearchResponse)
+from repro.ingest.compactor import compact_segments
+from repro.ingest.memtable import Memtable
+from repro.ingest.segments import Segment, seal_memtable
+from repro.ingest.tombstones import TombstoneSet
+
+__all__ = ["MutableSearchService", "MUTABLE_FORMAT_VERSION",
+           "MUTABLE_MANIFEST_NAME"]
+
+# v1 is the immutable SearchService manifest; v2 adds the segment list,
+# tombstones, and the memtable — a half-compacted index round-trips.
+MUTABLE_FORMAT_VERSION = 2
+MUTABLE_MANIFEST_NAME = "index_manifest.json"
+
+_SUPPORTED = ("exact", "hnsw", "partitioned", "csd")
+# Per-source over-fetch ceiling: k + tombstone-debt is clamped here so a
+# pathological pile of deletes degrades recall instead of blowing up the
+# scan kernels (compact() is the actual fix for that much debt).
+_MAX_FETCH = 256
+
+
+class MutableSearchService:
+    """A segmented, mutable index over one immutable-backend spec."""
+
+    def __init__(self, spec: IndexSpec | None = None, *,
+                 seal_threshold: int = 1024):
+        spec = spec or IndexSpec()
+        if spec.backend not in _SUPPORTED:
+            raise ValueError(
+                f"mutable indexes support backends {_SUPPORTED}; got "
+                f"{spec.backend!r} (distributed segments would need a "
+                f"mesh-wide seal — build those immutably)")
+        if spec.dtype != "float32":
+            raise ValueError(
+                "mutable indexes are float32-only for now: per-segment "
+                "quantizer fitting would make distances drift across "
+                "segments as the data churns")
+        metric = _metrics.get_metric(spec.metric)
+        if spec.backend != "exact" and not metric.graph_safe:
+            raise ValueError(
+                f"metric {spec.metric!r} is not graph-safe: use "
+                f"backend='exact' (same rule as SearchService.build)")
+        if seal_threshold < 1:
+            raise ValueError(f"seal_threshold must be >= 1, "
+                             f"got {seal_threshold}")
+        if spec.backend == "csd" and not spec.storage_path:
+            raise ValueError(
+                "backend='csd' needs IndexSpec(storage_path=...): the "
+                "segment block stores live there")
+        self.spec = spec
+        self.metric = metric
+        self.seal_threshold = int(seal_threshold)
+        self.backend = None               # duck-typing for serve stats
+        self._lock = threading.RLock()
+        self._compact_lock = threading.Lock()   # serializes compactions
+        self._segments: list[Segment] = []
+        self._tombstones = TombstoneSet()
+        self._memtable: Memtable | None = None     # created on first insert
+        self._dim: int | None = None
+        self._next_gid = 0
+        self._next_seg = 0
+        self.peak_resident_bytes = 0
+        self.peak_storage_resident_bytes = 0
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def num_segments(self) -> int:
+        with self._lock:
+            return len(self._segments)
+
+    @property
+    def size(self) -> int:
+        """Live (non-tombstoned) row count."""
+        with self._lock:
+            total = sum(s.n - s.n_deleted for s in self._segments)
+            if self._memtable is not None and len(self._memtable):
+                _, gids = self._memtable.snapshot()
+                total += int((~self._tombstones.contains(gids)).sum())
+            return total
+
+    def storage_resident_bytes(self) -> int:
+        """Bytes currently held by segment page caches. Structurally
+        bounded by max(cache_bytes, n_segments * block_size): the one
+        budget is re-split across readers as the segment set changes."""
+        with self._lock:
+            total = 0
+            for seg in self._segments:
+                reader = getattr(seg.service.backend, "reader", None)
+                if reader is not None:
+                    total += reader.cache.current_bytes
+            return total
+
+    def resident_bytes(self) -> int:
+        """Current resident bytes: segment page caches + memtable buffer."""
+        with self._lock:
+            total = self.storage_resident_bytes()
+            if self._memtable is not None:
+                total += self._memtable.nbytes
+            return total
+
+    def _note_resident(self) -> None:
+        self.peak_storage_resident_bytes = max(
+            self.peak_storage_resident_bytes, self.storage_resident_bytes())
+        self.peak_resident_bytes = max(self.peak_resident_bytes,
+                                       self.resident_bytes())
+
+    # -- mutations -----------------------------------------------------------
+
+    def insert(self, vectors) -> np.ndarray:
+        """Add rows; returns their newly-assigned global ids [n]. Seals the
+        memtable into a segment whenever it reaches `seal_threshold`."""
+        vectors = np.atleast_2d(np.asarray(vectors, np.float32))
+        prepared = self.metric.prepare_data(vectors)
+        with self._lock:
+            if self._dim is None:
+                self._dim = int(prepared.shape[1])
+            elif prepared.shape[1] != self._dim:
+                raise ValueError(f"expected dim {self._dim}, "
+                                 f"got {prepared.shape[1]}")
+            gids = np.arange(self._next_gid,
+                             self._next_gid + len(prepared), dtype=np.int64)
+            self._next_gid += len(prepared)
+            if self._memtable is None:
+                self._memtable = Memtable(self._dim, self.spec.hnsw,
+                                          build_graph=self.spec.backend
+                                          != "exact")
+            # seal in threshold-sized waves so one huge insert cannot grow
+            # the memtable unboundedly past the threshold
+            off = 0
+            while off < len(prepared):
+                room = self.seal_threshold - len(self._memtable)
+                take = min(room, len(prepared) - off)
+                self._memtable.insert(prepared[off: off + take],
+                                      gids[off: off + take])
+                off += take
+                if len(self._memtable) >= self.seal_threshold:
+                    self._seal_locked()
+            self._note_resident()
+        return gids
+
+    def delete(self, gids) -> int:
+        """Tombstone global ids; returns how many were newly deleted.
+        Deleted ids never surface again (asserted in tests, including
+        through rerank); space comes back at seal/compaction time."""
+        gids = np.atleast_1d(np.asarray(gids, np.int64))
+        with self._lock:
+            known = np.unique(gids[(gids >= 0) & (gids < self._next_gid)])
+            fresh_mask = ~self._tombstones.contains(known)
+            fresh = known[fresh_mask]
+            self._tombstones.add(known)
+            for seg in self._segments:
+                seg.n_deleted += int(seg.contains(fresh).sum())
+            return int(fresh.size)
+
+    def flush(self) -> None:
+        """Seal the memtable into a segment now (no-op when empty)."""
+        with self._lock:
+            self._seal_locked()
+            self._note_resident()
+
+    def compact(self) -> dict:
+        """Merge every live segment (memtable flushed first) plus the
+        tombstones into one rebuilt segment; returns a summary dict. Space
+        is reclaimed and per-query fan-out drops back to one segment.
+
+        Concurrent compactions serialize on their own lock (two racing
+        rebuilds over the same snapshot would publish every row twice);
+        searches and mutations are NOT blocked by a running rebuild.
+
+        csd note: compaction deletes the merged-away segment stores, so a
+        `save()` taken earlier — whose manifests reference those stores
+        without copying them, the block store's standing no-copy contract
+        — is superseded; re-`save()` after compacting to keep a loadable
+        snapshot."""
+        with self._compact_lock:
+            with self._lock:
+                self._seal_locked()
+                segments = list(self._segments)
+                tomb = self._tombstones.copy()
+                name = self._seg_name()
+            # the expensive rebuild runs outside the service lock: searches
+            # keep serving from the old segment list, mutations queue on
+            # the lock only for the final swap below
+            result = compact_segments(
+                self.spec, segments, tomb, name,
+                storage_path=self._seg_storage(name),
+                cache_bytes=self._cache_budget(1))
+            with self._lock:
+                if self.spec.backend == "csd" and segments:
+                    from repro.store.segments import replace_segments
+                    replace_segments(self.spec.storage_path,
+                                     [s.name for s in segments],
+                                     [result.merged.name]
+                                     if result.merged else [])
+                # retire only the tombstones this rebuild actually dropped
+                # — a delete() that raced the lock-free rebuild keeps its
+                # bit set and keeps filtering the merged segment's rows
+                for s in segments:
+                    was_dead = tomb.contains(s.gid_map)
+                    self._tombstones.discard(s.gid_map[was_dead])
+                merged = []
+                if result.merged is not None:
+                    result.merged.n_deleted = int(self._tombstones.contains(
+                        result.merged.gid_map).sum())
+                    merged = [result.merged]
+                old_ids = set(map(id, segments))
+                self._segments = merged + [s for s in self._segments
+                                           if id(s) not in old_ids]
+                self._rebalance_caches_locked()
+                self._note_resident()
+            return {"merged_segments": len(segments),
+                    "rows_read": result.rows_read,
+                    "rows_written": result.rows_written,
+                    "rows_reclaimed": result.rows_reclaimed,
+                    "live_segments": self.num_segments}
+
+    def close(self) -> None:
+        """Close segment store readers (csd); in-memory backends are GC'd."""
+        with self._lock:
+            for seg in self._segments:
+                reader = getattr(seg.service.backend, "reader", None)
+                if reader is not None:
+                    reader.close()
+
+    # -- sealing internals ---------------------------------------------------
+
+    def _seg_name(self) -> str:
+        name = f"seg_{self._next_seg:08d}"
+        self._next_seg += 1
+        return name
+
+    def _seg_storage(self, name: str) -> str | None:
+        if self.spec.backend != "csd":
+            return None
+        return os.path.join(self.spec.storage_path, name)
+
+    def _cache_budget(self, n_segments: int) -> int | None:
+        if self.spec.backend != "csd":
+            return None
+        return max(self.spec.block_size,
+                   self.spec.cache_bytes // max(1, n_segments))
+
+    def _rebalance_caches_locked(self) -> None:
+        """Re-split the one cache_bytes budget over the live csd readers."""
+        if self.spec.backend != "csd":
+            return
+        budget = self._cache_budget(len(self._segments))
+        for seg in self._segments:
+            reader = getattr(seg.service.backend, "reader", None)
+            if reader is not None:
+                reader.cache.resize(budget)
+
+    def _seal_locked(self) -> None:
+        mem = self._memtable
+        if mem is None or len(mem) == 0:
+            return
+        vectors, gids = mem.snapshot()
+        dead = self._tombstones.contains(gids)
+        if dead.any():
+            # dead rows never reach a segment: drop them now and retire
+            # their tombstones (the space debt is settled at the source);
+            # the incremental graph contains them, so rebuild the survivors
+            self._tombstones.discard(gids[dead])
+            vectors, gids = vectors[~dead], gids[~dead]
+            graph = None
+        else:
+            graph = mem.graph() if mem.build_graph else None
+        self._memtable = Memtable(self._dim, self.spec.hnsw,
+                                  build_graph=mem.build_graph)
+        if gids.size == 0:
+            return
+        name = self._seg_name()
+        seg = seal_memtable(
+            self.spec, name, vectors, gids, graph,
+            storage_path=self._seg_storage(name),
+            cache_bytes=self._cache_budget(len(self._segments) + 1))
+        if self.spec.backend == "csd":
+            from repro.store.segments import append_segment
+            append_segment(self.spec.storage_path, name)
+        self._segments.append(seg)
+        self._rebalance_caches_locked()
+
+    # -- search --------------------------------------------------------------
+
+    def search(self, request: SearchRequest) -> SearchResponse:
+        """Snapshot-consistent fan-out over memtable + live segments."""
+        if not isinstance(request, SearchRequest):
+            request = SearchRequest(queries=request)
+        with self._lock:                       # one atomic snapshot
+            segments = list(self._segments)
+            tomb = self._tombstones.copy()
+            mem = (self._memtable.snapshot() if self._memtable is not None
+                   else None)
+        queries = np.atleast_2d(np.asarray(request.queries, np.float32))
+        b, k = queries.shape[0], request.k
+
+        all_ids, all_ds = [], []
+        seg_stats: list[dict] = []
+        agg = {"hops": None, "dist_calcs": None, "block_reads": 0,
+               "cache_hits": 0, "bytes_read": 0}
+
+        def _acc(stats, name: str, n: int):
+            if stats is None:
+                return
+            row = {"segment": name, "n": n}
+            for f in ("hops", "dist_calcs"):
+                v = getattr(stats, f)
+                if v is not None:
+                    v = np.asarray(v)
+                    row[f] = float(v.mean())
+                    agg[f] = v if agg[f] is None else agg[f] + v
+            for f in ("block_reads", "cache_hits", "bytes_read"):
+                v = getattr(stats, f)
+                if v is not None:
+                    row[f] = int(v)
+                    agg[f] += int(v)
+            seg_stats.append(row)
+
+        for seg in segments:
+            # the clamp bounds tombstone OVER-fetch only — never k itself
+            k_fetch = max(k, min(k + seg.n_deleted, _MAX_FETCH))
+            gids, ds, stats = seg.search(
+                queries, k=k_fetch, ef=request.ef, rerank=request.rerank,
+                with_stats=request.with_stats)
+            dead = tomb.contains(gids)
+            all_ids.append(np.where(dead, np.int64(-1), gids))
+            all_ds.append(np.where(dead, np.float32(np.inf),
+                                   ds.astype(np.float32)))
+            if request.with_stats:
+                _acc(stats, seg.name, seg.n)
+
+        if mem is not None and mem[1].size:
+            mem_dead = int(tomb.contains(mem[1]).sum())
+            k_fetch = max(k, min(k + mem_dead, _MAX_FETCH))
+            mq = self.metric.prepare_queries(queries)
+            ids, ds = Memtable.scan(mem[0], mem[1], mq, k_fetch,
+                                    self.spec.metric)
+            dead = tomb.contains(ids)
+            all_ids.append(np.where(dead, np.int64(-1), ids))
+            all_ds.append(np.where(dead, np.float32(np.inf), ds))
+            if request.with_stats:
+                calcs = np.full((b,), mem[1].size, np.int64)
+                _acc(QueryStats(dist_calcs=calcs), "memtable", mem[1].size)
+
+        if not all_ids:
+            return SearchResponse(ids=np.full((b, k), -1, np.int64),
+                                  dists=np.full((b, k), np.inf, np.float32))
+        # stage-2 rank merge across sources (== core.partitioned.merge_topk
+        # over a ragged candidate set): tombstoned lanes carry +inf so they
+        # can never displace a live id
+        cat_i = np.concatenate(all_ids, axis=1)
+        cat_d = np.concatenate(all_ds, axis=1)
+        order = np.argsort(cat_d, axis=1, kind="stable")[:, :k]
+        out_i = np.take_along_axis(cat_i, order, axis=1)
+        out_d = np.take_along_axis(cat_d, order, axis=1)
+        out_i = np.where(np.isfinite(out_d), out_i, -1)
+        if out_i.shape[1] < k:                 # fewer candidates than k
+            pad = k - out_i.shape[1]
+            out_i = np.pad(out_i, ((0, 0), (0, pad)), constant_values=-1)
+            out_d = np.pad(out_d, ((0, 0), (0, pad)),
+                           constant_values=np.inf)
+        stats = None
+        if request.with_stats:
+            self._note_resident()
+            stats = QueryStats(
+                hops=agg["hops"], dist_calcs=agg["dist_calcs"],
+                block_reads=agg["block_reads"] or None,
+                cache_hits=agg["cache_hits"] or None,
+                bytes_read=agg["bytes_read"] or None,
+                segments=seg_stats)
+        return SearchResponse(ids=out_i, dists=out_d, stats=stats)
+
+    # -- persistence (manifest v2) -------------------------------------------
+
+    def save(self, path: str) -> str:
+        """Persist the whole mutable state — segments, tombstones, and the
+        un-sealed memtable — so a half-compacted index round-trips."""
+        with self._lock:
+            os.makedirs(path, exist_ok=True)
+            seg_root = os.path.join(path, "segments")
+            os.makedirs(seg_root, exist_ok=True)
+            live = {s.name for s in self._segments}
+            for stale in os.listdir(seg_root):        # dropped by compaction
+                if stale not in live:
+                    shutil.rmtree(os.path.join(seg_root, stale),
+                                  ignore_errors=True)
+            entries = []
+            for seg in self._segments:
+                d = os.path.join(seg_root, seg.name)
+                seg.service.save(d)
+                np.save(os.path.join(d, "gid_map.npy"), seg.gid_map)
+                entries.append({"name": seg.name, "n": seg.n,
+                                "n_deleted": int(seg.n_deleted)})
+            np.save(os.path.join(path, "tombstones.npy"),
+                    self._tombstones.words())
+            if self._memtable is not None and len(self._memtable):
+                mv, mg = self._memtable.snapshot()
+            else:
+                mv = np.zeros((0, self._dim or 0), np.float32)
+                mg = np.zeros(0, np.int64)
+            np.save(os.path.join(path, "memtable_vectors.npy"), mv)
+            np.save(os.path.join(path, "memtable_gids.npy"), mg)
+            manifest = {
+                "format_version": MUTABLE_FORMAT_VERSION,
+                "kind": "mutable-segmented-index",
+                "spec": self.spec.to_json(),
+                "seal_threshold": self.seal_threshold,
+                "next_gid": int(self._next_gid),
+                "next_seg": int(self._next_seg),
+                "dim": self._dim,
+                "segments": entries,
+            }
+            tmp = os.path.join(path, MUTABLE_MANIFEST_NAME + ".tmp")
+            with open(tmp, "w") as f:
+                json.dump(manifest, f, indent=1)
+            os.replace(tmp, os.path.join(path, MUTABLE_MANIFEST_NAME))
+            return path
+
+    @classmethod
+    def load(cls, path: str) -> "MutableSearchService":
+        with open(os.path.join(path, MUTABLE_MANIFEST_NAME)) as f:
+            manifest = json.load(f)
+        version = manifest.get("format_version")
+        if version != MUTABLE_FORMAT_VERSION:
+            raise ValueError(
+                f"index at {path!r} has format_version={version}; mutable "
+                f"indexes are version {MUTABLE_FORMAT_VERSION} "
+                f"(SearchService.load reads version 1)")
+        spec = IndexSpec.from_json(manifest["spec"])
+        svc = cls(spec, seal_threshold=int(manifest["seal_threshold"]))
+        svc._dim = manifest["dim"]
+        svc._next_gid = int(manifest["next_gid"])
+        svc._next_seg = int(manifest["next_seg"])
+        budget = svc._cache_budget(max(1, len(manifest["segments"])))
+        for e in manifest["segments"]:
+            d = os.path.join(path, "segments", e["name"])
+            sub = SearchService.load(d)
+            if budget is not None:
+                reader = getattr(sub.backend, "reader", None)
+                if reader is not None:
+                    reader.cache.resize(budget)
+            gid_map = np.load(os.path.join(d, "gid_map.npy"))
+            svc._segments.append(Segment(e["name"], sub, gid_map,
+                                         n_deleted=int(e["n_deleted"])))
+        svc._tombstones = TombstoneSet.from_words(
+            np.load(os.path.join(path, "tombstones.npy")))
+        mv = np.load(os.path.join(path, "memtable_vectors.npy"))
+        mg = np.load(os.path.join(path, "memtable_gids.npy"))
+        if len(mg):
+            svc._memtable = Memtable(svc._dim, spec.hnsw,
+                                     build_graph=spec.backend != "exact")
+            svc._memtable.insert(mv, mg)   # replays the incremental graph
+        return svc

@@ -28,6 +28,7 @@ import dataclasses
 from repro.models.transformer import LayerSpec, ModelConfig
 
 __all__ = ["cell_costs", "StorageCost", "storage_cost",
+           "CompactionCost", "compaction_cost",
            "VECTOR_DTYPE_BYTES", "vector_row_bytes"]
 
 
@@ -285,6 +286,87 @@ def storage_cost(block_accesses: float, block_size: int,
         bytes_from_flash=float(nbytes),
         storage_s=float(nbytes / ssd_bw),
         hit_rate=float(cache_hit_rate),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Ingest tier (repro.ingest): write amplification of the mutable index
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionCost:
+    """Storage-write cost of a streaming-ingest workload (repro.ingest).
+
+    The mutable index appends one sealed segment per `seal_threshold`
+    inserts (bytes_ingested — the unavoidable write) and periodically
+    compacts every live segment into one (bytes_rewritten — the
+    maintenance tax). Write amplification is the LSM figure of merit:
+
+        write_amp = (bytes_ingested + bytes_rewritten) / bytes_ingested
+
+    `rewrite_s` prices the rewrites on the SSD link — compare against the
+    read-side `StorageCost.storage_s` to see how much serving bandwidth a
+    given compaction cadence steals (paper §6.5's SSD-bound regime means
+    every rewritten byte is a byte not serving queries).
+    """
+
+    bytes_ingested: float
+    bytes_rewritten: float
+    write_amp: float
+    seals: int
+    compactions: int
+    rewrite_s: float
+
+
+def compaction_cost(n_inserted: int, row_bytes: float,
+                    seal_threshold: int, compact_every: int,
+                    delete_frac: float = 0.0,
+                    ssd_bw: float | None = None) -> CompactionCost:
+    """Simulate the seal/compact cadence of `repro.ingest` exactly.
+
+    n_inserted     : total rows streamed in
+    row_bytes      : bytes per stored row (launch.costmodel.vector_row_bytes)
+    seal_threshold : memtable rows per sealed segment
+    compact_every  : run compact() after this many seals (compaction merges
+                     ALL live segments — the implemented policy)
+    delete_frac    : fraction of live rows tombstoned between compactions
+                     (compaction drops them, shrinking later rewrites)
+
+    The simulation replays the policy seal by seal, so the quadratic
+    growth of repeated merge-everything compactions is priced honestly
+    instead of hidden behind a closed form.
+    """
+    if not 0.0 <= delete_frac < 1.0:
+        raise ValueError(f"delete_frac must be in [0, 1), got {delete_frac}")
+    if seal_threshold < 1 or compact_every < 1:
+        raise ValueError("seal_threshold and compact_every must be >= 1")
+    seals = int(n_inserted // seal_threshold)
+    live_rows = 0.0            # rows in the one compacted segment
+    pending = 0                # seals since the last compaction
+    rewritten_rows = 0.0
+    compactions = 0
+    for _ in range(seals):
+        pending += 1
+        if pending >= compact_every:
+            merged = live_rows + pending * seal_threshold
+            live_rows = merged * (1.0 - delete_frac)
+            rewritten_rows += live_rows
+            compactions += 1
+            pending = 0
+    bytes_ingested = float(n_inserted) * row_bytes
+    bytes_rewritten = rewritten_rows * row_bytes
+    if ssd_bw is None:
+        from repro.launch.roofline import HW
+        ssd_bw = HW().ssd_bw
+    return CompactionCost(
+        bytes_ingested=bytes_ingested,
+        bytes_rewritten=bytes_rewritten,
+        write_amp=((bytes_ingested + bytes_rewritten) / bytes_ingested
+                   if bytes_ingested else 1.0),
+        seals=seals,
+        compactions=compactions,
+        rewrite_s=float(bytes_rewritten / ssd_bw),
     )
 
 

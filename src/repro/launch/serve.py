@@ -35,11 +35,11 @@ def serve_loop(service, queries, batch: int, k: int, ef: int,
                rerank: bool = False, log=print):
     """Stream `queries` through in fixed batches; returns (ids, stats).
 
-    Synchronous compatibility shim (fig12 / examples): no queue, no
+    Synchronous compatibility loop (fig12 / examples): no queue, no
     dynamic batching — one blocking `search` per stride. `service` is a
-    SearchService; the deprecated ANNEngine shim is accepted too.
+    SearchService (or MutableSearchService).
     """
-    svc = getattr(service, "_service", service)
+    svc = service
     lat = []
     n = 0
     ids_all = []
@@ -75,7 +75,7 @@ def serve_async(service, queries, *, k: int, ef: int, rerank: bool = False,
     """
     from repro.serve import SearchServer
 
-    svc = getattr(service, "_service", service)
+    svc = service
     with SearchServer(svc, replicas=replicas, max_batch=max_batch,
                       max_wait_ms=max_wait_ms) as srv:
         futs = srv.submit_many(queries, k=k, ef=ef, rerank=rerank)

@@ -44,12 +44,16 @@ def bucket_size(n: int, max_batch: int) -> int:
 def slice_stats(stats: QueryStats, i: int) -> QueryStats:
     """Row `i` of the per-query stats arrays; per-request scalars (the csd
     storage counters — shared PageCache, per-query attribution undefined)
-    pass through unchanged."""
+    and the per-segment dict list (mutable indexes) pass through
+    unchanged."""
     vals = {}
     for f in dataclasses.fields(stats):
         v = getattr(stats, f.name)
         if v is None:
             vals[f.name] = None
+            continue
+        if f.name == "segments":       # per-request structure, not per-query
+            vals[f.name] = v
             continue
         a = np.asarray(v)
         vals[f.name] = a[i] if a.ndim >= 1 else v

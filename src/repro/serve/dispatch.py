@@ -149,6 +149,13 @@ def _clone_service(service, i: int):
     so every branch that cannot (or need not) clone falls back to it."""
     from repro.api.service import SearchService
 
+    if hasattr(service, "insert") and hasattr(service, "compact"):
+        # mutable segmented index (repro.ingest): every replica MUST share
+        # the one service — independent clones would diverge on writes.
+        # Its search() snapshots under the service lock, so shared serving
+        # stays snapshot-consistent per batch.
+        return service, False
+
     spec = service.spec
     if spec.backend == "csd":
         # independent PageCache/Prefetcher over the one shared block store

@@ -156,6 +156,44 @@ class SearchServer:
         """One future per row of `queries` [B, D] (arrival order = row order)."""
         return [self.submit(q, **kw) for q in np.asarray(queries)]
 
+    # -- mutations (mutable segmented indexes only) --------------------------
+    # Writes interleave with batched reads under snapshot consistency: the
+    # mutable service applies each mutation atomically under its own lock,
+    # and every dispatched batch snapshots (segments, tombstones, memtable)
+    # under that same lock — a batch sees the whole write or none of it.
+    # Replicas share the one mutable service (dispatch._clone_service), so
+    # a mutation is visible to every replica the moment it returns.
+
+    def _mutable(self):
+        svc = self.pool.replicas[0].service
+        if not (hasattr(svc, "insert") and hasattr(svc, "compact")):
+            raise TypeError(
+                f"the served index (backend="
+                f"{getattr(svc.spec, 'backend', '?')!r}) is immutable — "
+                f"serve a repro.api.MutableSearchService to accept writes")
+        if self._shutdown:
+            raise ServeClosed("server is shut down; no new mutations")
+        return svc
+
+    def insert(self, vectors) -> np.ndarray:
+        """Insert rows into the served mutable index; returns global ids.
+        Synchronous: on return, every later-dispatched batch sees them."""
+        return self._mutable().insert(vectors)
+
+    def delete(self, ids) -> int:
+        """Tombstone global ids; batches dispatched after the call can
+        never return them. Returns the newly-deleted count."""
+        return self._mutable().delete(ids)
+
+    def flush_index(self) -> None:
+        """Seal the served index's memtable into a segment."""
+        self._mutable().flush()
+
+    def compact_index(self) -> dict:
+        """Compact the served index; in-flight batches keep serving from
+        their pre-compaction snapshot while the rebuild runs."""
+        return self._mutable().compact()
+
     def _one_done(self, _fut: Future) -> None:
         with self._drain_cond:
             self._outstanding -= 1

@@ -11,6 +11,9 @@ larger than host memory are a supported scenario:
   layout    : paper Fig. 5 table layout + the row-granular StoreReader
   csd       : the out-of-core two-stage engine, registered as the `csd`
               backend of repro.api
+  segments  : segment directory of a mutable store (repro.ingest): one
+              committed block store per sealed segment + an atomically
+              swapped segments.json — appends never rewrite existing blocks
 """
 
 from repro.store.blockfile import (
@@ -22,8 +25,18 @@ from repro.store.cache import PageCache
 from repro.store.csd import CSDBackend, store_search
 from repro.store.layout import StoreReader, open_store, write_store
 from repro.store.prefetch import Prefetcher
+from repro.store.segments import (
+    append_segment,
+    list_segments,
+    replace_segments,
+    segment_dir,
+)
 
 __all__ = [
+    "append_segment",
+    "list_segments",
+    "replace_segments",
+    "segment_dir",
     "BlockFile",
     "BlockFileWriter",
     "StoreFormatError",

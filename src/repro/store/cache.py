@@ -153,6 +153,19 @@ class PageCache:
         self.current_bytes += len(data)
         self.peak_bytes = max(self.peak_bytes, self.current_bytes)
 
+    def resize(self, capacity_bytes: int) -> None:
+        """Shrink/grow the capacity in place, evicting LRU blocks down to
+        the new bound. The ingest layer re-splits one `cache_bytes` budget
+        across segment readers as segments appear, so the TOTAL resident
+        cache stays bounded no matter how many segments are live. Clamped
+        to one block (a cache that cannot hold a single read is useless)."""
+        with self._lock:
+            self.capacity_bytes = max(int(capacity_bytes), self.block_size)
+            while self._lru and self.current_bytes > self.capacity_bytes:
+                _, old = self._lru.popitem(last=False)
+                self.current_bytes -= len(old)
+                self.evictions += 1
+
     @property
     def block_reads(self) -> int:
         return self.misses + self.prefetch_reads

@@ -1,8 +1,9 @@
 """Distributed ANN correctness worker (run under 8 fake devices).
 
 Asserts:
-  * graph-parallel shard_map search returns the same results as the
-    single-device partitioned engine;
+  * the graph-parallel shard_map search (backend="distributed" through
+    repro.api) returns the same results as the single-device partitioned
+    engine;
   * query parallelism (dp axis) returns per-query-identical output.
 Exit code 0 == pass. Launched by tests/test_distributed.py in a subprocess
 so the parent pytest process keeps its 1-device view.
@@ -15,13 +16,10 @@ os.environ["XLA_FLAGS"] = (
 ).strip()
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import IndexSpec, SearchRequest, SearchService
 from repro.core import hnsw_graph as hg
-from repro.core.distributed import DistributedANNEngine
-from repro.core.partitioned import build_partitioned_db, search_partitioned
-from repro.core.search import SearchParams
 from repro.data import clustered_vectors
 
 
@@ -36,29 +34,28 @@ def main():
     queries = queries.astype(np.float32)
 
     cfg = hg.HNSWConfig(M=8, ef_construction=60)
-    pdb = build_partitioned_db(vecs, 4, cfg)           # 4 partitions / 4 model
-    p = SearchParams(ef=32, k=8)
+    k, ef = 8, 32
 
-    # single-device reference
-    pdb_host = pdb._replace(db=jax.tree.map(jnp.asarray, pdb.db))
-    ref_ids, ref_ds, _ = search_partitioned(pdb_host, jnp.asarray(queries), p)
-    ref_ids = np.asarray(ref_ids)
+    # single-device reference (partitioned backend, same graph seed)
+    ref_svc = SearchService.build(vecs, IndexSpec(
+        backend="partitioned", num_partitions=4, hnsw=cfg))
+    ref = ref_svc.search(SearchRequest(queries=queries, k=k, ef=ef))
+    ref_ids, ref_ds = np.asarray(ref.ids), np.asarray(ref.dists)
 
-    # graph parallelism over the mesh
-    eng = DistributedANNEngine(pdb, mesh, p)
-    ids, ds = eng.search(queries)
-    ids = np.asarray(ids)
+    # graph parallelism over the mesh: 4 partitions / 4 `model` devices
+    svc = SearchService.build(vecs, IndexSpec(
+        backend="distributed", num_partitions=4, hnsw=cfg), mesh=mesh)
+    resp = svc.search(SearchRequest(queries=queries, k=k, ef=ef))
+    ids, ds = np.asarray(resp.ids), np.asarray(resp.dists)
 
     for b in range(len(queries)):
         assert set(ids[b]) == set(ref_ids[b]), (b, ids[b], ref_ids[b])
-    np.testing.assert_allclose(np.sort(np.asarray(ds), 1),
-                               np.sort(np.asarray(ref_ds), 1), rtol=1e-5)
+    np.testing.assert_allclose(np.sort(ds, 1), np.sort(ref_ds, 1), rtol=1e-5)
     print("DIST OK: graph-parallel == single-device")
 
     # query parallelism: batch twice the dp size, same per-query answers
     q2 = np.concatenate([queries, queries], 0)
-    ids2, _ = eng.search(q2)
-    ids2 = np.asarray(ids2)
+    ids2 = np.asarray(svc.search(SearchRequest(queries=q2, k=k, ef=ef)).ids)
     for b in range(len(queries)):
         assert set(ids2[b]) == set(ids2[b + len(queries)])
     print("DIST OK: query-parallel consistent")

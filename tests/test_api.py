@@ -130,16 +130,15 @@ def test_ip_rejected_on_graph_backends(small_dataset):
 
 def test_legacy_index_without_manifest_still_loads(svc4, small_dataset,
                                                    tmp_path):
-    """Pre-manifest indexes (bare step dirs) load through the shim."""
-    from repro.core.engine import ANNEngine
+    """Pre-manifest indexes (bare step dirs) load through the fallback
+    that moved from the retired ANNEngine shim into SearchService.load."""
     path = str(tmp_path / "idx")
     svc4.save(path)
     os.remove(os.path.join(path, "index_manifest.json"))
-    eng = ANNEngine.load(path)
-    ids, _ = eng.search(small_dataset["queries"], k=10, ef=40)
-    resp = svc4.search(SearchRequest(queries=small_dataset["queries"],
-                                     k=10, ef=40))
-    np.testing.assert_array_equal(np.asarray(ids), np.asarray(resp.ids))
+    svc = SearchService.load(path)
+    req = SearchRequest(queries=small_dataset["queries"], k=10, ef=40)
+    np.testing.assert_array_equal(np.asarray(svc.search(req).ids),
+                                  np.asarray(svc4.search(req).ids))
 
 
 def test_ip_exact_matches_ground_truth(small_dataset):

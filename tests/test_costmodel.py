@@ -14,7 +14,8 @@ import numpy as np
 import pytest
 
 from repro.configs import reduced_config
-from repro.launch.costmodel import _count_params, cell_costs, storage_cost
+from repro.launch.costmodel import (_count_params, cell_costs,
+                                    compaction_cost, storage_cost)
 from repro.models.model import prefill_step
 from repro.models.transformer import init_cache, init_params
 
@@ -76,6 +77,45 @@ def test_storage_cost_term():
     assert cold.storage_s > (1000 * 4096 / hw.hbm_bw) * 100
     with pytest.raises(ValueError, match="cache_hit_rate"):
         storage_cost(1, 4096, cache_hit_rate=1.5)
+
+
+def test_compaction_cost_write_amplification():
+    """The ingest write-amp term: no compaction -> amp 1; the
+    merge-everything policy compounds; deletes shrink later rewrites;
+    uint8 rows cut the absolute bytes 4x at identical amplification."""
+    from repro.launch.costmodel import vector_row_bytes
+    from repro.launch.roofline import HW
+
+    hw = HW()
+    none = compaction_cost(10_000, 400, seal_threshold=100,
+                           compact_every=10**9, ssd_bw=hw.ssd_bw)
+    assert none.compactions == 0 and none.write_amp == 1.0
+    cc = compaction_cost(10_000, 400, seal_threshold=100, compact_every=10,
+                         ssd_bw=hw.ssd_bw)
+    assert cc.seals == 100 and cc.compactions == 10
+    # merge-everything: rewrite_j = j * 10 * 100 rows -> amp = 1 + 5.5
+    assert cc.write_amp == pytest.approx(6.5)
+    assert cc.rewrite_s == pytest.approx(cc.bytes_rewritten / hw.ssd_bw)
+    # more frequent compaction rewrites strictly more
+    eager = compaction_cost(10_000, 400, seal_threshold=100,
+                            compact_every=2, ssd_bw=hw.ssd_bw)
+    assert eager.write_amp > cc.write_amp
+    # churn shrinks the live set and therefore later rewrites
+    churn = compaction_cost(10_000, 400, seal_threshold=100,
+                            compact_every=10, delete_frac=0.3,
+                            ssd_bw=hw.ssd_bw)
+    assert churn.bytes_rewritten < cc.bytes_rewritten
+    # quantized rows: 4x fewer bytes, same amplification factor
+    u8 = compaction_cost(10_000, vector_row_bytes(128, "uint8"),
+                         seal_threshold=100, compact_every=10,
+                         ssd_bw=hw.ssd_bw)
+    f32 = compaction_cost(10_000, vector_row_bytes(128, "float32"),
+                          seal_threshold=100, compact_every=10,
+                          ssd_bw=hw.ssd_bw)
+    assert f32.bytes_rewritten == pytest.approx(4 * u8.bytes_rewritten)
+    assert f32.write_amp == pytest.approx(u8.write_amp)
+    with pytest.raises(ValueError, match="delete_frac"):
+        compaction_cost(100, 4, 10, 1, delete_frac=1.0)
 
 
 @pytest.mark.parametrize("arch", ["granite_3_8b", "qwen3_14b",

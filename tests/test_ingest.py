@@ -1,0 +1,360 @@
+"""repro.ingest: mutable segmented index (streaming insert/delete/compact).
+
+Pins the subsystem's acceptance criteria:
+  * interleaved insert/delete recall floor vs a from-scratch rebuild of
+    the surviving vectors (pinned seed);
+  * deleted ids never surface — merge path AND rerank path;
+  * memtable-seal parity (a sealed segment answers like the memtable did);
+  * compact() on the csd backend is bit-identical to an in-memory
+    partitioned build over the same merged rows;
+  * save/load round-trips a half-compacted index (segments + tombstones +
+    memtable, manifest v2);
+  * csd streaming ingest keeps resident store memory inside the re-split
+    cache_bytes budget;
+  * serve-layer writes interleave with batched reads snapshot-consistently.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (IndexSpec, MutableSearchService, SearchRequest,
+                       SearchService)
+from repro.core.hnsw_graph import GraphBuilder, HNSWConfig, build_hnsw
+from repro.data import clustered_vectors
+
+CFG = HNSWConfig(M=8, ef_construction=60, seed=0)
+K, EF = 10, 40
+# pinned-seed floors: observed mutable recall ~0.97+ on this workload; a
+# broken merge/tombstone path drops it far below
+RECALL_FLOOR = 0.90
+MAX_DROP_VS_REBUILD = 0.05
+
+
+@pytest.fixture(scope="module")
+def stream_data():
+    n, d = 1400, 32
+    vecs = clustered_vectors(n, d, k=14, seed=0)
+    rng = np.random.default_rng(1)
+    queries = (vecs[rng.integers(0, n, 12)]
+               + rng.normal(scale=1.0, size=(12, d))).astype(np.float32)
+    return {"vectors": vecs, "queries": queries}
+
+
+def _recall(ids, gt, k=K):
+    return float(np.mean(
+        [len(set(ids[b]) & set(gt[b])) / k for b in range(len(gt))]))
+
+
+def _gt_of(vectors, gids, queries, k=K):
+    d2 = (np.einsum("nd,nd->n", vectors, vectors)[None]
+          - 2 * queries @ vectors.T
+          + np.einsum("qd,qd->q", queries, queries)[:, None])
+    return gids[np.argsort(d2, axis=1, kind="stable")[:, :k]]
+
+
+def _mutable(backend, tmp_path, seal_threshold=300, num_partitions=2,
+             **spec_kw):
+    kw = dict(backend=backend, num_partitions=num_partitions, hnsw=CFG)
+    if backend == "csd":
+        kw.update(storage_path=str(tmp_path / "store"), block_size=512,
+                  cache_bytes=16384, prefetch=False)
+    kw.update(spec_kw)
+    return MutableSearchService(IndexSpec(**kw),
+                                seal_threshold=seal_threshold)
+
+
+def _interleaved_workload(svc, vecs):
+    """Pinned insert/delete interleaving; returns surviving (gids, mask)."""
+    n = len(vecs)
+    gids = svc.insert(vecs[: n // 2])
+    svc.delete(gids[::5][:60])                     # sealed + memtable rows
+    gids2 = svc.insert(vecs[n // 2:])
+    svc.delete(gids2[1::7][:40])
+    deleted = np.concatenate([gids[::5][:60], gids2[1::7][:40]])
+    mask = ~np.isin(np.arange(n), deleted)
+    return np.arange(n)[mask], deleted, mask
+
+
+@pytest.mark.parametrize("backend", ["exact", "partitioned", "csd"])
+def test_interleaved_recall_floor_vs_rebuild(backend, stream_data, tmp_path):
+    vecs, q = stream_data["vectors"], stream_data["queries"]
+    svc = _mutable(backend, tmp_path)
+    surv_gids, deleted, mask = _interleaved_workload(svc, vecs)
+    gt = _gt_of(vecs[mask], surv_gids, q)
+
+    ids = np.asarray(svc.search(SearchRequest(queries=q, k=K, ef=EF)).ids)
+    r_mut = _recall(ids, gt)
+
+    rebuild = SearchService.build(vecs[mask], dataclasses.replace(
+        svc.spec, backend="partitioned" if backend == "csd" else backend,
+        storage_path=None))
+    rb = np.asarray(rebuild.search(SearchRequest(queries=q, k=K, ef=EF)).ids)
+    r_reb = _recall(np.where(rb >= 0, surv_gids[np.maximum(rb, 0)], -1), gt)
+
+    assert r_mut >= RECALL_FLOOR, f"{backend}: mutable recall {r_mut:.3f}"
+    assert r_mut >= r_reb - MAX_DROP_VS_REBUILD, (
+        f"{backend}: mutable {r_mut:.3f} vs rebuild {r_reb:.3f}")
+    # deleted ids never surface
+    assert not np.isin(ids, deleted).any()
+    svc.close()
+
+
+@pytest.mark.parametrize("backend", ["partitioned", "csd"])
+def test_deletes_never_surface_including_rerank(backend, stream_data,
+                                               tmp_path):
+    vecs, q = stream_data["vectors"], stream_data["queries"]
+    svc = _mutable(backend, tmp_path, keep_vectors=backend != "csd")
+    gids = svc.insert(vecs)
+    # delete the TRUE nearest neighbors so filtering is actually load-bearing
+    gt = _gt_of(vecs, np.arange(len(vecs)), q, k=5)
+    dele = np.unique(gt.ravel())
+    svc.delete(dele)
+    for rerank in (False, True):
+        resp = svc.search(SearchRequest(queries=q, k=K, ef=EF,
+                                        rerank=rerank))
+        ids = np.asarray(resp.ids)
+        assert not np.isin(ids, dele).any(), f"rerank={rerank}"
+        assert (ids[:, 0] >= 0).all()
+    # ... and still not after compaction reclaims them
+    svc.compact()
+    ids = np.asarray(svc.search(SearchRequest(queries=q, k=K, ef=EF)).ids)
+    assert not np.isin(ids, dele).any()
+    assert svc.size == len(vecs) - len(dele)
+    svc.close()
+
+
+def test_memtable_seal_parity_exact_backend(stream_data, tmp_path):
+    """Exact backend: sealing is a pure representation change — the sealed
+    segment answers bit-identically to the pre-seal memtable scan (same
+    blocked-scan kernel, same CHUNK padding)."""
+    vecs, q = stream_data["vectors"][:200], stream_data["queries"]
+    svc = _mutable("exact", tmp_path, seal_threshold=1000)
+    svc.insert(vecs)
+    req = SearchRequest(queries=q, k=K, ef=EF)
+    pre = svc.search(req)
+    assert svc.num_segments == 0          # still all-memtable
+    svc.flush()
+    assert svc.num_segments == 1
+    post = svc.search(req)
+    np.testing.assert_array_equal(np.asarray(pre.ids), np.asarray(post.ids))
+    np.testing.assert_allclose(np.asarray(pre.dists),
+                               np.asarray(post.dists), rtol=1e-6)
+
+
+def test_memtable_seal_parity_graph_backend(stream_data, tmp_path):
+    """Graph backend: the sealed segment (incrementally-built HNSW via the
+    factored insert_point) must find what the exact pre-seal scan found
+    for the surviving ids — near-exact at this scale."""
+    vecs, q = stream_data["vectors"][:250], stream_data["queries"]
+    svc = _mutable("partitioned", tmp_path, seal_threshold=1000)
+    gids = svc.insert(vecs)
+    svc.delete(gids[3::11])
+    req = SearchRequest(queries=q, k=K, ef=64)
+    pre = np.asarray(svc.search(req).ids)
+    svc.flush()
+    post = np.asarray(svc.search(req).ids)
+    assert not np.isin(post, gids[3::11]).any()
+    overlap = np.mean([len(set(pre[b]) & set(post[b])) / K
+                       for b in range(len(q))])
+    assert overlap >= 0.95, f"seal changed answers: overlap {overlap:.3f}"
+
+
+def test_insert_point_factoring_matches_batch_build():
+    """build_hnsw == GraphBuilder + insert_point, bit for bit (the levels
+    stream, upper-row assignment, and link state all line up)."""
+    vecs = clustered_vectors(300, 16, k=6, seed=2)
+    g_batch = build_hnsw(vecs, CFG)
+    b = GraphBuilder(16, CFG)
+    for row in vecs:
+        b.insert_point(row)
+    g_inc = b.graph()
+    np.testing.assert_array_equal(g_batch.levels, g_inc.levels)
+    np.testing.assert_array_equal(g_batch.l0_nbrs, g_inc.l0_nbrs)
+    np.testing.assert_array_equal(g_batch.up_nbrs, g_inc.up_nbrs)
+    np.testing.assert_array_equal(g_batch.up_ptr, g_inc.up_ptr)
+    assert (g_batch.entry, g_batch.max_level) == (g_inc.entry, g_inc.max_level)
+
+
+def test_compact_csd_bit_identical_to_inmemory_partitioned(stream_data,
+                                                           tmp_path):
+    """Acceptance: compact() on csd == in-memory partitioned over the same
+    merged segment — bit-identical ids and distances."""
+    vecs, q = stream_data["vectors"], stream_data["queries"]
+    svc = _mutable("csd", tmp_path)
+    surv_gids, deleted, mask = _interleaved_workload(svc, vecs)
+    svc.compact()
+    assert svc.num_segments == 1
+    resp = svc.search(SearchRequest(queries=q, k=K, ef=EF))
+
+    ref = SearchService.build(vecs[mask], IndexSpec(
+        backend="partitioned", num_partitions=2, hnsw=CFG))
+    rr = ref.search(SearchRequest(queries=q, k=K, ef=EF))
+    ref_ids = np.asarray(rr.ids)
+    ref_gids = np.where(ref_ids >= 0, surv_gids[np.maximum(ref_ids, 0)], -1)
+    np.testing.assert_array_equal(np.asarray(resp.ids), ref_gids)
+    np.testing.assert_array_equal(np.asarray(resp.dists),
+                                  np.asarray(rr.dists))
+    svc.close()
+
+
+@pytest.mark.parametrize("backend", ["partitioned", "csd"])
+def test_save_load_roundtrips_half_compacted_index(backend, stream_data,
+                                                   tmp_path):
+    """Manifest v2: segments + tombstones + un-sealed memtable all
+    round-trip; the reloaded index answers bit-identically."""
+    vecs, q = stream_data["vectors"], stream_data["queries"]
+    svc = _mutable(backend, tmp_path)
+    surv_gids, deleted, mask = _interleaved_workload(svc, vecs)
+    assert svc.num_segments > 1           # genuinely half-compacted
+    path = str(tmp_path / "saved")
+    svc.save(path)
+    svc2 = MutableSearchService.load(path)
+    assert svc2.num_segments == svc.num_segments
+    assert svc2.size == svc.size
+    req = SearchRequest(queries=q, k=K, ef=EF)
+    a, b = svc.search(req), svc2.search(req)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+    assert not np.isin(np.asarray(b.ids), deleted).any()
+    # the reloaded index keeps ingesting: ids continue past the old stream
+    new = svc2.insert(vecs[:3])
+    assert new.min() >= len(vecs)
+    # v2 manifests are refused by the immutable loader, with a pointer
+    with pytest.raises(ValueError, match="MutableSearchService"):
+        SearchService.load(path)
+    svc.close()
+    svc2.close()
+
+
+def test_csd_streaming_ingest_bounded_memory(stream_data, tmp_path):
+    """Acceptance: peak resident store memory during csd streaming ingest
+    stays inside the (re-split) cache_bytes budget + the memtable buffer,
+    no matter how many segments accumulate."""
+    vecs, q = stream_data["vectors"], stream_data["queries"]
+    spec = IndexSpec(backend="csd", num_partitions=1, hnsw=CFG,
+                     storage_path=str(tmp_path / "store"), block_size=512,
+                     cache_bytes=8192, prefetch=False)
+    svc = MutableSearchService(spec, seal_threshold=150)
+    mem_peak = 0
+    for lo in range(0, len(vecs), 100):
+        svc.insert(vecs[lo: lo + 100])
+        svc.search(SearchRequest(queries=q[:4], k=K, ef=EF,
+                                 with_stats=True))
+        mem_peak = max(mem_peak, svc.resident_bytes()
+                       - svc.storage_resident_bytes())
+    assert svc.num_segments >= 8
+    cache_bound = max(spec.cache_bytes,
+                      svc.num_segments * spec.block_size)
+    assert svc.peak_storage_resident_bytes <= cache_bound, (
+        f"cache residency {svc.peak_storage_resident_bytes} exceeds "
+        f"{cache_bound}")
+    assert svc.peak_resident_bytes <= cache_bound + mem_peak
+    svc.close()
+
+
+def test_per_segment_stats_reported(stream_data, tmp_path):
+    vecs, q = stream_data["vectors"], stream_data["queries"]
+    svc = _mutable("csd", tmp_path, seal_threshold=400)
+    svc.insert(vecs)
+    resp = svc.search(SearchRequest(queries=q, k=K, ef=EF, with_stats=True))
+    st = resp.stats
+    names = [row["segment"] for row in st.segments]
+    assert len(names) == svc.num_segments + 1      # + memtable
+    assert names[-1] == "memtable"
+    assert st.block_reads and st.block_reads == sum(
+        row.get("block_reads", 0) for row in st.segments)
+    assert st.dist_calcs is not None and (np.asarray(st.dist_calcs) > 0).all()
+    svc.close()
+
+
+def test_store_segment_manifest_is_crash_safe(tmp_path):
+    """segments.json only ever names committed stores; replace is atomic
+    and reclaims the dead directories."""
+    import os
+
+    from repro.store.blockfile import StoreFormatError
+    from repro.store.segments import (append_segment, list_segments,
+                                      replace_segments, segment_dir)
+
+    root = str(tmp_path / "segstore")
+    os.makedirs(segment_dir(root, "seg_a"))       # no commit marker
+    with pytest.raises(StoreFormatError, match="commit marker"):
+        append_segment(root, "seg_a")
+    assert list_segments(root) == []
+    for name in ("seg_a", "seg_b"):
+        os.makedirs(segment_dir(root, name), exist_ok=True)
+        with open(os.path.join(segment_dir(root, name), "_COMMITTED"),
+                  "w") as f:
+            f.write("ok")
+    append_segment(root, "seg_a")
+    append_segment(root, "seg_b")
+    assert list_segments(root) == ["seg_a", "seg_b"]
+    with pytest.raises(ValueError, match="already published"):
+        append_segment(root, "seg_a")
+    os.makedirs(segment_dir(root, "seg_c"))
+    with open(os.path.join(segment_dir(root, "seg_c"), "_COMMITTED"),
+              "w") as f:
+        f.write("ok")
+    replace_segments(root, ["seg_a", "seg_b"], ["seg_c"])
+    assert list_segments(root) == ["seg_c"]
+    assert not os.path.exists(segment_dir(root, "seg_a"))
+
+
+def test_serve_interleaves_writes_with_batched_reads(stream_data, tmp_path):
+    """repro.serve threading: mutations through SearchServer are visible
+    to every batch dispatched after they return (snapshot consistency),
+    and deleted ids never appear in post-delete batches."""
+    from repro.serve import SearchServer
+
+    vecs, q = stream_data["vectors"], stream_data["queries"]
+    svc = _mutable("partitioned", tmp_path, seal_threshold=200)
+    with SearchServer(svc, replicas=2, max_batch=8, max_wait_ms=1.0) as srv:
+        gids = srv.insert(vecs[:800])
+        futs = srv.submit_many(q, k=K, ef=EF)
+        res_a = [f.result(timeout=120) for f in futs]
+        assert all((r.ids >= 0).all() for r in res_a)
+        gt = _gt_of(vecs[:800], np.arange(800), q, k=3)
+        dele = np.unique(gt.ravel())
+        assert srv.delete(dele) == len(dele)
+        srv.insert(vecs[800:])
+        futs = srv.submit_many(q, k=K, ef=EF)
+        for f in futs:
+            assert not np.isin(f.result(timeout=120).ids, dele).any()
+        srv.compact_index()
+        assert svc.num_segments == 1
+        futs = srv.submit_many(q, k=K, ef=EF)
+        for f in futs:
+            res = f.result(timeout=120)
+            assert (res.ids >= 0).all()
+            assert not np.isin(res.ids, dele).any()
+    svc.close()
+
+
+def test_immutable_service_rejects_mutations(stream_data, tmp_path):
+    from repro.serve import SearchServer
+
+    svc = SearchService.build(stream_data["vectors"][:256],
+                              IndexSpec(backend="exact"))
+    with SearchServer(svc, replicas=1) as srv:
+        with pytest.raises(TypeError, match="immutable"):
+            srv.insert(stream_data["vectors"][:1])
+
+
+def test_mutable_spec_validation(tmp_path):
+    with pytest.raises(ValueError, match="distributed"):
+        MutableSearchService(IndexSpec(backend="distributed"))
+    with pytest.raises(ValueError, match="float32-only"):
+        MutableSearchService(IndexSpec(backend="partitioned", dtype="uint8",
+                                       qscale=1.0, qzero=0))
+    with pytest.raises(ValueError, match="graph-safe"):
+        MutableSearchService(IndexSpec(backend="partitioned", metric="ip"))
+    with pytest.raises(ValueError, match="storage_path"):
+        MutableSearchService(IndexSpec(backend="csd"))
+    # ip is fine on the exact backend
+    svc = MutableSearchService(IndexSpec(backend="exact", metric="ip"))
+    svc.insert(np.eye(4, dtype=np.float32))
+    ids = np.asarray(svc.search(SearchRequest(
+        queries=np.eye(4, dtype=np.float32)[:1], k=1)).ids)
+    assert ids[0, 0] == 0

@@ -131,6 +131,97 @@ def _serve_ctx():
     return _SERVE_CTX["svc"], _SERVE_CTX["vecs"]
 
 
+# ---------------------------------------------------------------------------
+# repro.ingest: any insert/delete/search interleaving matches a numpy oracle
+# ---------------------------------------------------------------------------
+
+_INGEST_POOL: dict = {}
+
+
+def _ingest_pool():
+    """Deterministic vector pool (integer-valued: f32 distances are exact,
+    so oracle comparisons cannot hinge on rounding)."""
+    if not _INGEST_POOL:
+        rng = np.random.default_rng(11)
+        _INGEST_POOL["vecs"] = rng.integers(
+            -8, 8, size=(256, 8)).astype(np.float32)
+    return _INGEST_POOL["vecs"]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ops=st.lists(
+        st.one_of(
+            st.tuples(st.just("insert"),
+                      st.integers(min_value=1, max_value=24)),
+            st.tuples(st.just("delete"),
+                      st.integers(min_value=0, max_value=10_000)),
+            st.tuples(st.just("search"),
+                      st.integers(min_value=1, max_value=8)),
+        ),
+        min_size=1, max_size=24),
+    seal_threshold=st.integers(min_value=4, max_value=64),
+)
+def test_mutable_index_matches_numpy_oracle(ops, seal_threshold):
+    """Exact-backend memtables under ANY interleaving of insert/delete/
+    search equal a naive numpy oracle over the surviving rows: same
+    distance multiset, only live ids, deleted ids never surface."""
+    from repro.api import IndexSpec, MutableSearchService, SearchRequest
+
+    pool = _ingest_pool()
+    svc = MutableSearchService(IndexSpec(backend="exact"),
+                               seal_threshold=seal_threshold)
+    live: dict[int, np.ndarray] = {}      # gid -> vector (the oracle)
+    cursor = 0
+    next_gid = 0
+    for op, arg in ops:
+        if op == "insert":
+            rows = pool[cursor % 200: cursor % 200 + arg]
+            cursor += arg
+            gids = svc.insert(rows)
+            assert gids.tolist() == list(range(next_gid,
+                                               next_gid + len(rows)))
+            next_gid += len(rows)
+            live.update(zip(gids.tolist(), rows))
+        elif op == "delete":
+            assigned = sorted(live)
+            victims = ([assigned[arg % len(assigned)]] if assigned else []) \
+                + [arg]                    # one live id + an arbitrary one
+            svc.delete(np.asarray(victims, np.int64))
+            for v in victims:
+                live.pop(v, None)
+        else:
+            k = arg
+            q = pool[(cursor + 7) % 240: (cursor + 7) % 240 + 2]
+            resp = svc.search(SearchRequest(queries=q, k=k))
+            ids = np.asarray(resp.ids)
+            dists = np.asarray(resp.dists)
+            if not live:
+                assert (ids == -1).all()
+                continue
+            oracle_gids = np.asarray(sorted(live), np.int64)
+            oracle_vecs = np.stack([live[g] for g in oracle_gids])
+            d2 = (np.einsum("nd,nd->n", oracle_vecs, oracle_vecs)[None]
+                  - 2 * q @ oracle_vecs.T
+                  + np.einsum("qd,qd->q", q, q)[:, None])
+            k_eff = min(k, len(oracle_gids))
+            for b in range(len(q)):
+                got_i, got_d = ids[b], dists[b]
+                assert (got_i[:k_eff] >= 0).all()
+                assert (got_i[k_eff:] == -1).all()
+                # every returned id is live, and its distance is exact
+                for j in range(k_eff):
+                    assert int(got_i[j]) in live
+                    idx = int(np.searchsorted(oracle_gids, got_i[j]))
+                    np.testing.assert_allclose(got_d[j], d2[b, idx],
+                                               rtol=0, atol=0)
+                # the distance multiset equals the oracle's k smallest
+                np.testing.assert_allclose(
+                    np.sort(got_d[:k_eff]), np.sort(d2[b])[:k_eff],
+                    rtol=0, atol=0)
+    svc.close()
+
+
 @settings(max_examples=15, deadline=None)
 @given(
     plan=st.lists(

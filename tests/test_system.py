@@ -1,8 +1,8 @@
-"""End-to-end behaviour tests for the paper's system."""
+"""End-to-end behaviour tests for the paper's system (repro.api surface)."""
 
 import numpy as np
 
-from repro.core.engine import ANNEngine
+from repro.api import IndexSpec, SearchRequest, SearchService
 from repro.core.hnsw_graph import HNSWConfig
 from repro.data import VectorDataset
 
@@ -12,10 +12,11 @@ def test_end_to_end_serving_pipeline():
     from repro.launch.serve import serve_loop
 
     ds = VectorDataset(1200, 32, n_clusters=12, seed=3)
-    eng = ANNEngine.build(ds.vectors(), num_partitions=2,
-                          cfg=HNSWConfig(M=8, ef_construction=50))
+    svc = SearchService.build(ds.vectors(), IndexSpec(
+        backend="partitioned", num_partitions=2,
+        hnsw=HNSWConfig(M=8, ef_construction=50)))
     queries = ds.queries(64)
-    ids, stats = serve_loop(eng, queries, batch=16, k=5, ef=24,
+    ids, stats = serve_loop(svc, queries, batch=16, k=5, ef=24,
                             log=lambda *a: None)
     assert stats["qps"] > 0 and stats["batches"] == 4
     assert ids.shape == (64, 5)
@@ -25,11 +26,11 @@ def test_end_to_end_serving_pipeline():
 def test_engine_recall_beats_random_baseline():
     ds = VectorDataset(1000, 24, n_clusters=10, seed=4)
     vecs = ds.vectors()
-    eng = ANNEngine.build(vecs, num_partitions=2,
-                          cfg=HNSWConfig(M=8, ef_construction=50))
+    svc = SearchService.build(vecs, IndexSpec(
+        backend="partitioned", num_partitions=2,
+        hnsw=HNSWConfig(M=8, ef_construction=50)))
     q = ds.queries(8)
-    ids, dists = eng.search(q, k=5, ef=24)
-    ids = np.asarray(ids)
+    ids = np.asarray(svc.search(SearchRequest(queries=q, k=5, ef=24)).ids)
     d2 = (np.einsum("nd,nd->n", vecs, vecs)[None]
           - 2 * q @ vecs.T + np.einsum("qd,qd->q", q, q)[:, None])
     gt = np.argsort(d2, 1)[:, :5]
@@ -39,17 +40,17 @@ def test_engine_recall_beats_random_baseline():
 
 def test_engine_save_load_roundtrip(tmp_path):
     """Fig. 4 step 1-2: persist the restructured DB, reload, same results."""
-    import numpy as np
-
-    from repro.data import VectorDataset
-
     ds = VectorDataset(800, 24, n_clusters=8, seed=7)
-    eng = ANNEngine.build(ds.vectors(), num_partitions=2,
-                          cfg=HNSWConfig(M=8, ef_construction=40))
+    svc = SearchService.build(ds.vectors(), IndexSpec(
+        backend="partitioned", num_partitions=2,
+        hnsw=HNSWConfig(M=8, ef_construction=40)))
     q = ds.queries(8)
-    ids0, ds0 = eng.search(q, k=5, ef=24)
-    eng.save(str(tmp_path / "db"))
-    eng2 = ANNEngine.load(str(tmp_path / "db"))
-    ids1, ds1 = eng2.search(q, k=5, ef=24)
-    np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
-    np.testing.assert_allclose(np.asarray(ds0), np.asarray(ds1), rtol=1e-6)
+    req = SearchRequest(queries=q, k=5, ef=24)
+    resp0 = svc.search(req)
+    svc.save(str(tmp_path / "db"))
+    svc2 = SearchService.load(str(tmp_path / "db"))
+    resp1 = svc2.search(req)
+    np.testing.assert_array_equal(np.asarray(resp0.ids),
+                                  np.asarray(resp1.ids))
+    np.testing.assert_allclose(np.asarray(resp0.dists),
+                               np.asarray(resp1.dists), rtol=1e-6)
