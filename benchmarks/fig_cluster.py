@@ -1,0 +1,148 @@
+"""Cluster scaling sweep (repro.cluster): QPS/recall vs shards x replicas,
+plus the failover-under-load latency spike.
+
+Not a paper figure — the paper stops at 4 SmartSSDs in one server
+(Fig. 11's graph parallelism); this is the cross-node layer's cost
+surface:
+
+  * QPS and recall@10 vs SHARD COUNT (the merge is bit-identical to one
+    index, so recall is flat by construction — the QPS column prices the
+    scatter-gather tax of full-ef traversal on every shard; NOTE on this
+    single-box harness all shards share one CPU, so the sweep shows the
+    tax only — the aggregate-flash-bandwidth win that pays for it needs
+    real nodes and is priced by `costmodel.cluster_fanout_cost`);
+  * QPS vs REPLICAS per shard under concurrent load (replicas are the
+    throughput lever: each serves from its own executor);
+  * p50/p99 latency with all replicas up vs after killing one replica of
+    every shard mid-stream (failover keeps answers identical; the spike
+    is the price).
+
+Emits `BENCH_cluster.json` at the repo root (per-PR perf trajectory,
+ROADMAP item 2) in addition to the usual CSV rows.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from benchmarks.common import recall_of
+from repro.api import IndexSpec, SearchRequest, SearchService
+from repro.cluster import build_cluster
+from repro.core.hnsw_graph import HNSWConfig
+from repro.data import VectorDataset
+
+N, DIM, NQ = 4000, 64, 64
+K, EF = 10, 40
+CFG = HNSWConfig(M=12, ef_construction=80, seed=0)
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_cluster.json")
+
+
+def _workload():
+    ds = VectorDataset(N, DIM, n_clusters=32, seed=0)
+    vectors = ds.vectors()
+    queries = ds.queries(NQ)
+    d2 = (np.einsum("nd,nd->n", vectors, vectors)[None]
+          - 2 * queries @ vectors.T
+          + np.einsum("qd,qd->q", queries, queries)[:, None])
+    return vectors, queries, np.argsort(d2, axis=1, kind="stable")[:, :K]
+
+
+def _throughput(search, queries, *, lanes: int = 4, rounds: int = 6):
+    """Concurrent-lane QPS + latency percentiles (router work overlaps
+    across lanes the way repro.serve drives it)."""
+    import jax
+
+    req = SearchRequest(queries=queries, k=K, ef=EF)
+    jax.block_until_ready(search(req).ids)          # warmup / compile
+    lat = []
+
+    def lane():
+        out = []
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            jax.block_until_ready(search(req).ids)  # numpy: no-op
+            out.append(time.perf_counter() - t0)
+        return out
+
+    t0 = time.perf_counter()
+    with ThreadPoolExecutor(max_workers=lanes) as ex:
+        for fut in [ex.submit(lane) for _ in range(lanes)]:
+            lat.extend(fut.result())
+    wall = time.perf_counter() - t0
+    lat_ms = np.asarray(lat) * 1e3
+    n_queries = lanes * rounds * len(queries)
+    return {"qps": n_queries / wall,
+            "p50_ms": float(np.percentile(lat_ms, 50)),
+            "p99_ms": float(np.percentile(lat_ms, 99)),
+            "us_per_query": wall / n_queries * 1e6}
+
+
+def run():
+    vectors, queries, gt = _workload()
+    spec = IndexSpec(backend="partitioned", num_partitions=1, hnsw=CFG,
+                     keep_vectors=True)
+    rows, record = [], {"n": N, "dim": DIM, "k": K, "ef": EF,
+                        "sweeps": {}}
+
+    # single-index baseline: what shards==1 must tie with
+    single = SearchService.build(
+        vectors, IndexSpec(backend="partitioned", num_partitions=1,
+                           hnsw=CFG, keep_vectors=True))
+    base = _throughput(single.search, queries)
+    base_ids = np.asarray(single.search(
+        SearchRequest(queries=queries, k=K, ef=EF)).ids)
+    rec0 = recall_of(base_ids, gt)
+    rows.append(("fig_cluster_single_index", base["us_per_query"],
+                 f"recall={rec0:.3f};qps={base['qps']:.0f}"))
+    record["sweeps"]["single_index"] = {**base, "recall": round(rec0, 4)}
+
+    # -- sweep: shards x replicas --------------------------------------------
+    for n_shards in (1, 2, 3, 4):
+        for replicas in (1, 2):
+            cluster = build_cluster(vectors, spec, n_shards,
+                                    replicas=replicas)
+            ids = np.asarray(cluster.search(
+                SearchRequest(queries=queries, k=K, ef=EF)).ids)
+            rec = recall_of(ids, gt)
+            m = _throughput(cluster.search, queries)
+            cluster.close()
+            rows.append((f"fig_cluster_{n_shards}shards_x{replicas}",
+                         m["us_per_query"],
+                         f"recall={rec:.3f};qps={m['qps']:.0f};"
+                         f"p50_ms={m['p50_ms']:.1f};"
+                         f"p99_ms={m['p99_ms']:.1f}"))
+            record["sweeps"][f"shards_{n_shards}x{replicas}"] = {
+                **m, "recall": round(rec, 4)}
+
+    # -- failover under load: kill one replica of every shard mid-stream ----
+    cluster = build_cluster(vectors, spec, 3, replicas=2)
+    want = np.asarray(cluster.search(
+        SearchRequest(queries=queries, k=K, ef=EF)).ids)
+    healthy = _throughput(cluster.search, queries)
+    for client in cluster.shards:
+        client.replicas[0].kill()
+    degraded = _throughput(cluster.search, queries)
+    got = np.asarray(cluster.search(
+        SearchRequest(queries=queries, k=K, ef=EF)).ids)
+    correct = bool(np.array_equal(want, got))
+    cluster.close()
+    rows.append(("fig_cluster_failover", degraded["us_per_query"],
+                 f"answers_identical={correct};"
+                 f"qps_healthy={healthy['qps']:.0f};"
+                 f"qps_degraded={degraded['qps']:.0f};"
+                 f"p99_healthy_ms={healthy['p99_ms']:.1f};"
+                 f"p99_degraded_ms={degraded['p99_ms']:.1f}"))
+    record["sweeps"]["failover_3x2_kill_one_each"] = {
+        "healthy": healthy, "degraded": degraded,
+        "answers_identical": correct}
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=1, sort_keys=True)
+    rows.append(("fig_cluster_json", 0.0, f"wrote={BENCH_JSON}"))
+    return rows

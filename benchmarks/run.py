@@ -20,6 +20,7 @@ MODULES = [
     "fig11_parallelism",
     "fig12_platforms",
     "fig_ingest",
+    "fig_cluster",
     "table2_kernels",
     "lm_substrate",
 ]

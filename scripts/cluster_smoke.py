@@ -1,0 +1,114 @@
+#!/usr/bin/env python
+"""CI cluster-smoke: 3 shards x 2 replicas out-of-core, failover mid-stream.
+
+Stands up a `repro.cluster` router over csd shards on tiny data and
+ASSERTS the acceptance bounds end to end:
+
+  * merge parity — the cluster's top-k ids AND dists are bit-identical to
+    one SearchService built over the same rows (with and without rerank);
+  * failover — one replica of every shard is killed WHILE a stream of
+    in-flight queries is running; every query completes with the correct
+    answer (nothing lost, nothing duplicated, no error surfaces);
+  * the health sweep reports the killed replicas down and the survivors
+    up, and the published `cluster.json` matches the live topology.
+
+  PYTHONPATH=src python scripts/cluster_smoke.py
+"""
+
+import dataclasses
+import os
+import sys
+import tempfile
+import threading
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.api import IndexSpec, SearchRequest, SearchService  # noqa: E402
+from repro.cluster import HealthMonitor, build_cluster, read_topology  # noqa: E402
+from repro.core.hnsw_graph import HNSWConfig  # noqa: E402
+from repro.data import clustered_vectors  # noqa: E402
+
+N, DIM, NSHARDS, REPLICAS = 900, 32, 3, 2
+K, EF = 10, 40
+
+
+def main():
+    root = tempfile.mkdtemp(prefix="cluster-smoke-")
+    vecs = clustered_vectors(N, DIM, k=10, seed=0)
+    rng = np.random.default_rng(1)
+    queries = (vecs[rng.integers(0, N, 8)]
+               + rng.normal(scale=1.0, size=(8, DIM))).astype(np.float32)
+    spec = IndexSpec(backend="csd", num_partitions=1,
+                     hnsw=HNSWConfig(M=8, ef_construction=50, seed=0),
+                     block_size=512, cache_bytes=1 << 20, prefetch=False)
+
+    single = SearchService.build(vecs, dataclasses.replace(
+        spec, num_partitions=NSHARDS,
+        storage_path=os.path.join(root, "single")))
+    cluster = build_cluster(vecs, spec, NSHARDS, replicas=REPLICAS,
+                            path=root)
+
+    # -- merge parity: bit-identical to the single index --------------------
+    for rerank in (False, True):
+        req = SearchRequest(queries=queries, k=K, ef=EF, rerank=rerank)
+        want, got = single.search(req), cluster.search(req)
+        assert np.array_equal(np.asarray(want.ids), np.asarray(got.ids)), \
+            f"id mismatch (rerank={rerank})"
+        assert np.array_equal(np.asarray(want.dists),
+                              np.asarray(got.dists)), \
+            f"dist mismatch (rerank={rerank})"
+    req = SearchRequest(queries=queries, k=K, ef=EF)
+    want_ids = np.asarray(single.search(req).ids)
+
+    # -- kill one replica of EVERY shard while queries are in flight --------
+    results, errors = [], []
+    started = threading.Event()
+
+    def stream():
+        for i in range(40):
+            if i == 4:
+                started.set()
+            try:
+                results.append(np.asarray(cluster.search(req).ids))
+            except Exception as exc:     # no query may see the failure
+                errors.append(repr(exc))
+
+    t = threading.Thread(target=stream)
+    t.start()
+    started.wait(timeout=60)
+    for client in cluster.shards:
+        client.replicas[0].kill()
+    t.join()
+    assert not errors, f"queries failed during failover: {errors[:3]}"
+    assert len(results) == 40, "queries were lost during failover"
+    for ids in results:
+        assert np.array_equal(ids, want_ids), \
+            "failover produced a wrong answer"
+    per_shard = [sum(rep.queries for rep in c.replicas)
+                 for c in cluster.shards]
+    expected = (2 + 40) * len(queries)       # parity x2 + stream
+    assert all(q == expected for q in per_shard), (
+        f"lost/duplicated shard requests: {per_shard} != {expected}")
+
+    # -- health + topology ----------------------------------------------------
+    mon = HealthMonitor(cluster, interval_s=30.0, timeout_s=60.0)
+    states = mon.probe_now()
+    assert all(v == [False, True] for v in states.values()), states
+    topo = read_topology(root)
+    assert topo.version == cluster.version
+    assert [s.name for s in topo.shards] == \
+        [c.name for c in cluster.shards]
+
+    failovers = sum(c.failovers for c in cluster.shards)
+    print(f"[cluster-smoke] OK: {NSHARDS} shards x {REPLICAS} replicas "
+          f"(csd), parity bit-identical (+rerank), 40 in-flight queries "
+          f"correct across kill-one-replica-per-shard "
+          f"({failovers} failovers), manifest v{topo.version}")
+    cluster.close()
+
+
+if __name__ == "__main__":
+    main()

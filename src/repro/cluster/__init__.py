@@ -1,0 +1,26 @@
+"""repro.cluster — one logical index sharded across N workers.
+
+The missing layer between "one box" (the paper's 4-SmartSSD server) and
+"a fleet": shard workers behind a wire-serializable transport boundary, a
+scatter-gather router whose merged results are bit-identical to a single
+index over the union of rows, replica failover, heartbeat health checks,
+and elastic topology changes published through an atomically-swapped
+`cluster.json`. See `src/repro/cluster/README.md` for the dataflow.
+"""
+
+from repro.cluster.health import HealthMonitor
+from repro.cluster.rebalance import build_cluster, make_shard
+from repro.cluster.router import ClusterRouter, ClusterStats, ShardClient
+from repro.cluster.shard import ShardFault, ShardWorker, from_wire, to_wire
+from repro.cluster.topology import (CLUSTER_FORMAT, CLUSTER_MANIFEST,
+                                    ClusterTopology, ShardInfo,
+                                    read_topology, shard_bounds, shard_spec,
+                                    write_topology)
+
+__all__ = [
+    "HealthMonitor", "build_cluster", "make_shard", "ClusterRouter",
+    "ClusterStats", "ShardClient", "ShardFault", "ShardWorker",
+    "from_wire", "to_wire", "CLUSTER_FORMAT", "CLUSTER_MANIFEST",
+    "ClusterTopology", "ShardInfo", "read_topology", "shard_bounds",
+    "shard_spec", "write_topology",
+]

@@ -1,0 +1,83 @@
+"""Cluster construction and elastic growth.
+
+`build_cluster` is the one-call path from a vector table to a serving
+cluster: it splits rows with `topology.shard_bounds` (the same linspace
+split `build_partitioned_db` applies inside one index), builds each shard
+as an independent `SearchService` with `topology.shard_spec` (per-shard
+seed offset), clones replicas with the same backend-aware logic
+`repro.serve` uses (csd replicas get their own reader + page cache, like
+independent nodes would), and hands the shard clients to a
+`ClusterRouter`. The two shared choices — row split and seed schedule —
+are exactly what makes `router.search` bit-identical to a single index
+built over the full table.
+
+`make_shard` is the elastic unit: build one shard over an arbitrary row
+set (contiguous range or any ascending gid assignment) so tests and
+operators can grow a live cluster with `router.add_shard`.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.api.service import SearchService
+from repro.cluster.router import ClusterRouter, ShardClient
+from repro.cluster.shard import ShardWorker
+from repro.cluster.topology import shard_bounds, shard_spec
+
+__all__ = ["build_cluster", "make_shard"]
+
+
+def make_shard(vectors, spec, *, name: str, gid_map, shard_index: int = 0,
+               replicas: int = 1,
+               storage_root: str | None = None) -> ShardClient:
+    """Build one shard (primary + replicas) over `vectors`, whose global
+    ids are `gid_map` (ascending). `shard_index` positions the shard in
+    the cluster's seed schedule; csd shards persist under
+    `storage_root/<name>`."""
+    from repro.serve.dispatch import _clone_service
+
+    if replicas < 1:
+        raise ValueError(f"replicas must be >= 1, got {replicas}")
+    storage_path = None
+    if spec.backend == "csd":
+        if storage_root is None and spec.storage_path is None:
+            raise ValueError(
+                "csd shards need a storage directory: pass storage_root "
+                "(or set spec.storage_path)")
+        storage_path = os.path.join(storage_root or spec.storage_path, name)
+    sspec = shard_spec(spec, shard_index, storage_path=storage_path)
+    service = SearchService.build(np.ascontiguousarray(vectors), sspec)
+    gid_map = np.asarray(gid_map, np.int64)
+    workers = [ShardWorker(name, service, gid_map, rid=0)]
+    for r in range(1, replicas):
+        svc, owns = _clone_service(service, r)
+        workers.append(ShardWorker(name, svc, gid_map, rid=r,
+                                   owns_backend=owns))
+    return ShardClient(name, workers)
+
+
+def build_cluster(vectors, spec, n_shards: int, *, replicas: int = 1,
+                  path: str | None = None) -> ClusterRouter:
+    """Shard `vectors` N ways and stand up the full serving cluster.
+
+    The returned router's results are bit-identical to a single
+    `SearchService` built over `vectors` with
+    `num_partitions = n_shards * spec.num_partitions`.
+    """
+    vectors = np.ascontiguousarray(np.asarray(vectors, np.float32))
+    bounds = shard_bounds(vectors.shape[0], n_shards)
+    storage_root = None
+    if spec.backend == "csd":
+        storage_root = spec.storage_path or (
+            os.path.join(path, "shards") if path is not None else None)
+    clients = []
+    for i in range(n_shards):
+        lo, hi = int(bounds[i]), int(bounds[i + 1])
+        clients.append(make_shard(
+            vectors[lo:hi], spec, name=f"shard-{i:03d}",
+            gid_map=np.arange(lo, hi, dtype=np.int64), shard_index=i,
+            replicas=replicas, storage_root=storage_root))
+    return ClusterRouter(spec, clients, path=path)

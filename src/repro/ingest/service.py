@@ -46,6 +46,7 @@ from repro.api import metrics as _metrics
 from repro.api.service import SearchService
 from repro.api.types import (IndexSpec, QueryStats, SearchRequest,
                              SearchResponse)
+from repro.core.merge import mask_dead_lanes, rank_merge
 from repro.ingest.compactor import compact_segments
 from repro.ingest.memtable import Memtable
 from repro.ingest.segments import Segment, seal_memtable
@@ -370,10 +371,9 @@ class MutableSearchService:
             gids, ds, stats = seg.search(
                 queries, k=k_fetch, ef=request.ef, rerank=request.rerank,
                 with_stats=request.with_stats)
-            dead = tomb.contains(gids)
-            all_ids.append(np.where(dead, np.int64(-1), gids))
-            all_ds.append(np.where(dead, np.float32(np.inf),
-                                   ds.astype(np.float32)))
+            gids, ds = mask_dead_lanes(gids, ds, tomb.contains(gids))
+            all_ids.append(gids)
+            all_ds.append(ds)
             if request.with_stats:
                 _acc(stats, seg.name, seg.n)
 
@@ -383,9 +383,9 @@ class MutableSearchService:
             mq = self.metric.prepare_queries(queries)
             ids, ds = Memtable.scan(mem[0], mem[1], mq, k_fetch,
                                     self.spec.metric)
-            dead = tomb.contains(ids)
-            all_ids.append(np.where(dead, np.int64(-1), ids))
-            all_ds.append(np.where(dead, np.float32(np.inf), ds))
+            ids, ds = mask_dead_lanes(ids, ds, tomb.contains(ids))
+            all_ids.append(ids)
+            all_ds.append(ds)
             if request.with_stats:
                 calcs = np.full((b,), mem[1].size, np.int64)
                 _acc(QueryStats(dist_calcs=calcs), "memtable", mem[1].size)
@@ -393,20 +393,10 @@ class MutableSearchService:
         if not all_ids:
             return SearchResponse(ids=np.full((b, k), -1, np.int64),
                                   dists=np.full((b, k), np.inf, np.float32))
-        # stage-2 rank merge across sources (== core.partitioned.merge_topk
-        # over a ragged candidate set): tombstoned lanes carry +inf so they
-        # can never displace a live id
-        cat_i = np.concatenate(all_ids, axis=1)
-        cat_d = np.concatenate(all_ds, axis=1)
-        order = np.argsort(cat_d, axis=1, kind="stable")[:, :k]
-        out_i = np.take_along_axis(cat_i, order, axis=1)
-        out_d = np.take_along_axis(cat_d, order, axis=1)
-        out_i = np.where(np.isfinite(out_d), out_i, -1)
-        if out_i.shape[1] < k:                 # fewer candidates than k
-            pad = k - out_i.shape[1]
-            out_i = np.pad(out_i, ((0, 0), (0, pad)), constant_values=-1)
-            out_d = np.pad(out_d, ((0, 0), (0, pad)),
-                           constant_values=np.inf)
+        # stage-2 rank merge across sources (core.merge.rank_merge — the
+        # same reduction the cluster router uses): tombstoned lanes carry
+        # +inf so they can never displace a live id
+        out_i, out_d = rank_merge(all_ids, all_ds, k)
         stats = None
         if request.with_stats:
             self._note_resident()

@@ -138,6 +138,28 @@ def main():
         "roofline above prices".format(n_daily, seal_threshold,
                                        compact_every))
 
+    # cluster fan-out term (repro.cluster): the same storage-bound search
+    # sharded across nodes. Each shard replica brings its own SSD link, so
+    # aggregate flash bandwidth scales with N*R, but every query pays the
+    # router scatter-gather plus full-ef traversal on EVERY shard (the
+    # over-fetch that keeps the merge bit-identical) — this row shows where
+    # the cluster stops being storage-bound and the router NIC takes over.
+    from repro.launch.costmodel import cluster_fanout_cost
+    cluster = {}
+    for n_shards in (1, 2, 4):
+        for reps in (1, 2):
+            fc = cluster_fanout_cost(
+                n_shards, reps, dim=128, k=10,
+                blocks_per_query=blocks_per_query, block_size=block_size,
+                cache_hit_rate=0.5, ssd_bw=hw.ssd_bw)
+            cluster[f"shards_{n_shards}x{reps}"] = {
+                "router_bytes_per_query": fc.router_bytes_q,
+                "flash_bytes_per_query": fc.flash_bytes_q,
+                "aggregate_ssd_bw": fc.aggregate_ssd_bw,
+                "modeled_qps": round(fc.modeled_qps, 1),
+                "bound": fc.bound,
+            }
+
     rec = {
         "mesh": "multi" if args.multi_pod else "single",
         "devices": int(mesh.devices.size),
@@ -160,6 +182,13 @@ def main():
                          / (bytes_per_query / hw.hbm_bw))),
         },
         "ingest_write_amplification": {**ingest, "note": ingest_note},
+        "cluster_fanout": {
+            **cluster,
+            "note": ("repro.cluster scatter-gather at cache hit 0.5 over a "
+                     "10 GbE router link: replicas scale storage QPS "
+                     "linearly; shards add SSDs but also duplicate full-ef "
+                     "traversal, so gains flatten until the router binds"),
+        },
         "note": ("stage-2 merge traffic per query = P*k*(4+4)B across "
                  "`model` — negligible vs stage-1 HBM reads (paper: 0.2%)"),
     }

@@ -29,6 +29,7 @@ from repro.models.transformer import LayerSpec, ModelConfig
 
 __all__ = ["cell_costs", "StorageCost", "storage_cost",
            "CompactionCost", "compaction_cost",
+           "ClusterFanoutCost", "cluster_fanout_cost",
            "VECTOR_DTYPE_BYTES", "vector_row_bytes"]
 
 
@@ -368,6 +369,86 @@ def compaction_cost(n_inserted: int, row_bytes: float,
         compactions=compactions,
         rewrite_s=float(bytes_rewritten / ssd_bw),
     )
+
+
+# ---------------------------------------------------------------------------
+# Cluster tier (repro.cluster): router scatter-gather vs aggregate flash
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterFanoutCost:
+    """Fan-out economics of a sharded cluster (repro.cluster).
+
+    Sharding buys aggregate flash bandwidth (every shard replica brings its
+    own SSD) but pays two taxes the single box does not: the router link
+    (each query is scattered to all N shards and N top-k lists come back)
+    and duplicated traversal (each shard runs the FULL-ef search over its
+    1/N of the rows — that over-fetch is exactly what makes the merge
+    bit-identical, so total flash work grows ~linearly with N).
+
+    router_bytes_q     : per-query bytes on the router link (scatter+gather)
+    flash_bytes_q      : per-query bytes from flash, summed over shards
+    aggregate_ssd_bw   : n_shards * replicas * per-node ssd_bw
+    router_qps / storage_qps : each side's throughput ceiling
+    modeled_qps        : min of the two; `bound` names the binding side
+    """
+
+    n_shards: int
+    replicas: int
+    router_bytes_q: float
+    flash_bytes_q: float
+    aggregate_ssd_bw: float
+    router_qps: float
+    storage_qps: float
+    modeled_qps: float
+    bound: str
+
+
+def cluster_fanout_cost(n_shards: int, replicas: int = 1, *, dim: int,
+                        k: int, blocks_per_query: float, block_size: int,
+                        cache_hit_rate: float = 0.0,
+                        ssd_bw: float | None = None,
+                        link_bw: float = 10e9) -> ClusterFanoutCost:
+    """Price an N-shard x R-replica cluster for one query stream.
+
+    blocks_per_query : PER-SHARD demand block accesses (a single shard's
+                       measured `QueryStats.block_reads`, or the analytic
+                       hops * blocks-per-hop — full-ef traversal over the
+                       shard's rows, which is why it does not shrink 1/N)
+    link_bw          : router NIC bandwidth, bytes/s (default 10 GbE)
+
+    Router side: scatter `dim * 4` query bytes to each shard, gather
+    `k * 12` result bytes (int64 id + f32 dist) back from each. Storage
+    side: each query burns `flash_bytes_q` across its N owning replicas
+    while the cluster's capacity is the aggregate of all N*R SSDs — so
+    replicas raise storage QPS linearly, and shards raise it only through
+    aggregation minus the duplicated-traversal tax.
+    """
+    if n_shards < 1 or replicas < 1:
+        raise ValueError(
+            f"n_shards and replicas must be >= 1, got {n_shards}, "
+            f"{replicas}")
+    if not 0.0 <= cache_hit_rate <= 1.0:
+        raise ValueError(f"cache_hit_rate must be in [0, 1], "
+                         f"got {cache_hit_rate}")
+    if ssd_bw is None:
+        from repro.launch.roofline import HW
+        ssd_bw = HW().ssd_bw
+    router_bytes_q = float(n_shards) * (dim * 4.0 + k * 12.0)
+    per_shard_bytes = blocks_per_query * block_size * (1.0 - cache_hit_rate)
+    flash_bytes_q = float(n_shards) * per_shard_bytes
+    aggregate_ssd_bw = float(n_shards * replicas) * ssd_bw
+    router_qps = link_bw / router_bytes_q if router_bytes_q else float("inf")
+    storage_qps = (aggregate_ssd_bw / flash_bytes_q if flash_bytes_q
+                   else float("inf"))
+    modeled = min(router_qps, storage_qps)
+    return ClusterFanoutCost(
+        n_shards=int(n_shards), replicas=int(replicas),
+        router_bytes_q=router_bytes_q, flash_bytes_q=flash_bytes_q,
+        aggregate_ssd_bw=aggregate_ssd_bw, router_qps=float(router_qps),
+        storage_qps=float(storage_qps), modeled_qps=float(modeled),
+        bound="router" if router_qps <= storage_qps else "storage")
 
 
 def _count_params(cfg: ModelConfig) -> float:

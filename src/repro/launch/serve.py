@@ -15,6 +15,10 @@ Two request paths, one flag apart:
   PYTHONPATH=src python -m repro.launch.serve --n 20000 --partitions 4 \
       --batch 64 --num-batches 50 --backend partitioned --metric l2 \
       --serve-async --replicas 4 --max-batch 64 --max-wait-ms 2
+
+With `--shards N` the index is built as a `repro.cluster` scatter-gather
+cluster instead of one service (`--shard-replicas R` for per-shard
+failover sets); either request path fronts the router unchanged.
 """
 
 from __future__ import annotations
@@ -113,6 +117,18 @@ def build_service(args, ds: VectorDataset) -> SearchService:
                      hnsw=HNSWConfig(M=args.M),
                      keep_vectors=args.rerank and args.backend != "csd",
                      storage_path=storage)
+    if args.shards > 1:
+        from repro.cluster import build_cluster
+        print(f"[serve] building {args.shards}-shard {spec.backend} cluster "
+              f"(x{args.shard_replicas} replicas, "
+              f"{args.partitions} partitions/shard, metric={spec.metric}) "
+              f"over {args.n} vectors ...")
+        t0 = time.perf_counter()
+        router = build_cluster(ds.vectors(), spec, args.shards,
+                               replicas=args.shard_replicas,
+                               path=storage)
+        print(f"[serve] build {time.perf_counter()-t0:.1f}s")
+        return router
     print(f"[serve] building {spec.backend} index "
           f"({args.partitions} partitions, metric={spec.metric}) over "
           f"{args.n} vectors ...")
@@ -143,6 +159,11 @@ def main(argv=None):
                     help="serve through repro.serve (queue + dynamic "
                          "batcher + replica pool) instead of the sync loop")
     ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard the index across N cluster workers "
+                         "(repro.cluster scatter-gather router)")
+    ap.add_argument("--shard-replicas", type=int, default=1,
+                    help="replicas per shard (failover set)")
     ap.add_argument("--max-batch", type=int, default=None,
                     help="dynamic batcher flush size (default: --batch)")
     ap.add_argument("--max-wait-ms", type=float, default=2.0)

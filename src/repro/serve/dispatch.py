@@ -149,6 +149,12 @@ def _clone_service(service, i: int):
     so every branch that cannot (or need not) clone falls back to it."""
     from repro.api.service import SearchService
 
+    if hasattr(service, "shards"):
+        # cluster router (repro.cluster): replication already happens one
+        # layer down (per-shard replica sets with failover), so server
+        # lanes share the one router — it is thread-safe by construction.
+        return service, False
+
     if hasattr(service, "insert") and hasattr(service, "compact"):
         # mutable segmented index (repro.ingest): every replica MUST share
         # the one service — independent clones would diverge on writes.

@@ -1,0 +1,397 @@
+"""repro.cluster: sharded serving == single index, bit for bit.
+
+The load-bearing invariants:
+
+  * parity     — `ClusterRouter.search` over N shards returns bit-identical
+                 ids AND dists to one `SearchService` over the union of
+                 rows (exact/partitioned/csd, with and without rerank)
+  * failover   — killing a replica degrades latency, never correctness;
+                 no request is lost or served twice
+  * elasticity — shards join under live traffic; in-flight searches keep
+                 their snapshot
+  * durability — `cluster.json` swaps atomically and refuses to regress
+  * merge      — `core.merge.rank_merge` is bit-identical to the inline
+                 reduction `ingest/service.py` shipped before the factor-out
+"""
+
+import dataclasses
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api.service import SearchService
+from repro.api.types import IndexSpec, SearchRequest
+from repro.cluster import (ClusterRouter, ClusterTopology, HealthMonitor,
+                           ShardFault, ShardInfo, build_cluster, from_wire,
+                           make_shard, read_topology, shard_bounds,
+                           shard_spec, to_wire, write_topology)
+from repro.core.hnsw_graph import HNSWConfig
+from repro.core.merge import mask_dead_lanes, rank_merge
+
+CFG = HNSWConfig(M=8, ef_construction=50, seed=0)
+N, DIM, NSHARDS = 900, 32, 3
+
+
+def _data():
+    rng = np.random.default_rng(7)
+    return (rng.standard_normal((N, DIM), dtype=np.float32),
+            rng.standard_normal((10, DIM), dtype=np.float32))
+
+
+def _spec(backend, storage=None):
+    return IndexSpec(metric="l2", backend=backend, num_partitions=1,
+                     hnsw=CFG, keep_vectors=backend != "csd",
+                     storage_path=storage, cache_bytes=1 << 20)
+
+
+@pytest.fixture(scope="module", params=["exact", "partitioned", "csd"])
+def zoo(request, tmp_path_factory):
+    """(backend, single-index reference, 3-shard x 2-replica cluster)."""
+    backend = request.param
+    vecs, queries = _data()
+    td = tmp_path_factory.mktemp(f"cluster-{backend}")
+    spec = _spec(backend, storage=str(td / "shards")
+                 if backend == "csd" else None)
+    ref_spec = spec if backend == "exact" else dataclasses.replace(
+        spec, num_partitions=NSHARDS,
+        storage_path=str(td / "single") if backend == "csd" else None)
+    ref = SearchService.build(vecs, ref_spec)
+    cluster = build_cluster(vecs, spec, NSHARDS, replicas=2, path=str(td))
+    yield backend, ref, cluster, queries
+    cluster.close()
+
+
+# ---------------------------------------------------------------------------
+# parity: cluster == single index, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rerank", [False, True])
+def test_cluster_parity_bit_identical(zoo, rerank):
+    backend, ref, cluster, queries = zoo
+    req = SearchRequest(queries=queries, k=10, ef=40, rerank=rerank)
+    want = ref.search(req)
+    got = cluster.search(req)
+    np.testing.assert_array_equal(np.asarray(want.ids), np.asarray(got.ids))
+    np.testing.assert_array_equal(np.asarray(want.dists),
+                                  np.asarray(got.dists))
+
+
+def test_cluster_stats_rollup(zoo):
+    backend, ref, cluster, queries = zoo
+    cluster.search(SearchRequest(queries=queries, k=5, ef=40,
+                                 with_stats=True))
+    s = cluster.stats()
+    assert s.n_shards == NSHARDS
+    assert s.queries > 0
+    assert set(s.qps) == {c.name for c in cluster.shards}
+    assert s.row_skew >= 1.0 and s.query_skew >= 1.0
+    if backend == "csd":
+        assert s.block_reads > 0 and s.bytes_read > 0
+        assert s.cache_hit_rate is not None
+
+
+def test_cluster_query_stats_aggregate(zoo):
+    backend, ref, cluster, queries = zoo
+    resp = cluster.search(SearchRequest(queries=queries, k=5, ef=40,
+                                        with_stats=True))
+    if backend == "exact":
+        return                      # exact tracks no traversal counters
+    assert resp.stats is not None
+    assert np.asarray(resp.stats.hops).shape == (queries.shape[0],)
+    if backend == "csd":
+        # the shared module cache may be fully warm: demand accesses must
+        # show up either as flash reads or as hits, never vanish
+        assert resp.stats.block_reads + resp.stats.cache_hits > 0
+
+
+# ---------------------------------------------------------------------------
+# failover
+# ---------------------------------------------------------------------------
+
+
+def test_failover_correctness_no_lost_or_duplicated(zoo):
+    backend, ref, cluster, queries = zoo
+    req = SearchRequest(queries=queries, k=10, ef=40)
+    want = ref.search(req)
+    shard = cluster.shards[0]
+    before = [rep.queries for rep in shard.replicas]
+    shard.replicas[0].kill()
+    rounds = 6
+    for _ in range(rounds):
+        got = cluster.search(req)
+        np.testing.assert_array_equal(np.asarray(want.ids),
+                                      np.asarray(got.ids))
+        np.testing.assert_array_equal(np.asarray(want.dists),
+                                      np.asarray(got.dists))
+    # exactly one replica served each request: nothing lost, nothing double
+    served = sum(rep.queries for rep in shard.replicas) - sum(before)
+    assert served == rounds * queries.shape[0]
+    shard.replicas[0].revive()
+    shard.mark(0, True)
+
+
+def test_transient_fault_fails_over(zoo):
+    backend, ref, cluster, queries = zoo
+    req = SearchRequest(queries=queries, k=10, ef=40)
+    want = ref.search(req)
+    shard = cluster.shards[1]
+    failovers = shard.failovers
+    shard.replicas[0].inject_faults(1)
+    for _ in range(4):              # round-robin guarantees a hit
+        got = cluster.search(req)
+        np.testing.assert_array_equal(np.asarray(want.ids),
+                                      np.asarray(got.ids))
+    assert shard.failovers > failovers
+    for i in range(len(shard.replicas)):
+        shard.mark(i, True)
+
+
+def test_all_replicas_down_raises(tmp_path):
+    vecs, queries = _data()
+    cluster = build_cluster(vecs[:300], _spec("exact"), 2, replicas=1)
+    try:
+        for rep in cluster.shards[0].replicas:
+            rep.kill()
+        with pytest.raises(ShardFault, match="no live replicas"):
+            cluster.search(SearchRequest(queries=queries, k=5, ef=40))
+    finally:
+        cluster.close()
+
+
+def test_health_monitor_detects_and_revives(zoo):
+    backend, ref, cluster, queries = zoo
+    mon = HealthMonitor(cluster, interval_s=30.0, timeout_s=60.0)
+    shard = cluster.shards[2]
+    shard.replicas[1].kill()
+    states = mon.probe_now()
+    assert states[shard.name] == [True, False]
+    assert shard.live() == 1
+    shard.replicas[1].revive()
+    assert mon.probe_now()[shard.name] == [True, True]
+    assert shard.live() == 2
+
+
+# ---------------------------------------------------------------------------
+# elasticity under live traffic
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_add_shard_under_live_traffic(tmp_path):
+    vecs, queries = _data()
+    spec = _spec("exact")
+    cluster = build_cluster(vecs[:600], spec, 2, path=str(tmp_path))
+    errors, stop = [], threading.Event()
+
+    def hammer():
+        req = SearchRequest(queries=queries, k=5, ef=40)
+        while not stop.is_set():
+            try:
+                r = cluster.search(req)
+                if np.asarray(r.ids).shape != (queries.shape[0], 5):
+                    errors.append("bad shape")
+            except Exception as exc:   # traffic must never see the swap
+                errors.append(repr(exc))
+
+    threads = [threading.Thread(target=hammer) for _ in range(3)]
+    for t in threads:
+        t.start()
+    try:
+        newbie = make_shard(vecs[600:], spec, name="shard-new",
+                            gid_map=np.arange(600, N), shard_index=2)
+        cluster.add_shard(newbie)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    assert not errors
+    assert cluster.topology().n_shards == 3
+    assert read_topology(str(tmp_path)).version == cluster.version
+    # the new shard's rows are served now
+    r = cluster.search(SearchRequest(queries=vecs[700:701], k=1, ef=40))
+    assert int(np.asarray(r.ids)[0, 0]) == 700
+    assert float(np.asarray(r.dists)[0, 0]) == 0.0
+    cluster.close()
+
+
+def test_add_remove_replica_publishes(tmp_path):
+    vecs, _ = _data()
+    spec = _spec("exact")
+    cluster = build_cluster(vecs[:300], spec, 2, path=str(tmp_path))
+    v0 = cluster.version
+    from repro.cluster import ShardWorker
+    name = cluster.shards[0].name
+    svc = cluster.shards[0].replicas[0].service
+    cluster.add_replica(name, ShardWorker(
+        name, svc, cluster.shards[0].replicas[0].gid_map, rid=1))
+    assert len(cluster._client(name).replicas) == 2
+    assert read_topology(str(tmp_path)).version == v0 + 1
+    cluster.remove_replica(name, 1)
+    assert len(cluster._client(name).replicas) == 1
+    with pytest.raises(ValueError, match="last replica"):
+        cluster.remove_replica(name, 0)
+    with pytest.raises(KeyError):
+        cluster.remove_shard("no-such-shard")
+    cluster.close()
+
+
+# ---------------------------------------------------------------------------
+# cluster.json durability
+# ---------------------------------------------------------------------------
+
+
+def test_manifest_crash_safety(tmp_path):
+    td = str(tmp_path)
+    topo = ClusterTopology(shards=(ShardInfo("s0", replicas=2, rows=100),),
+                           version=1)
+    write_topology(td, topo)
+    # a crash mid-write leaves a torn tmp file; the committed manifest wins
+    with open(os.path.join(td, "cluster.json.tmp"), "w") as f:
+        f.write('{"torn": tru')
+    got = read_topology(td)
+    assert got == topo
+    # stale writers are refused
+    with pytest.raises(ValueError, match="stale topology"):
+        write_topology(td, ClusterTopology(
+            shards=(ShardInfo("s0"),), version=1))
+    # a fresh version replaces the torn tmp and commits
+    write_topology(td, ClusterTopology(shards=(ShardInfo("s0"),),
+                                       version=2))
+    assert read_topology(td).version == 2
+
+
+def test_manifest_format_check(tmp_path):
+    with open(tmp_path / "cluster.json", "w") as f:
+        json.dump({"format": "something-else", "version": 1}, f)
+    with pytest.raises(ValueError, match="format"):
+        read_topology(str(tmp_path))
+
+
+def test_read_topology_empty_dir(tmp_path):
+    topo = read_topology(str(tmp_path))
+    assert topo.n_shards == 0 and topo.version == 0
+
+
+# ---------------------------------------------------------------------------
+# topology math
+# ---------------------------------------------------------------------------
+
+
+def test_shard_bounds_match_partition_split():
+    for n, p in [(900, 3), (1000, 7), (5, 5), (64, 1)]:
+        want = np.linspace(0, n, p + 1).astype(np.int64)
+        np.testing.assert_array_equal(shard_bounds(n, p), want)
+    with pytest.raises(ValueError):
+        shard_bounds(100, 0)
+
+
+def test_shard_spec_seed_schedule():
+    spec = _spec("partitioned")
+    spec2 = dataclasses.replace(spec, num_partitions=2)
+    # shard i, q partitions/shard -> seeds [i*q, i*q+q) == global schedule
+    assert shard_spec(spec2, 0).hnsw.seed == CFG.seed
+    assert shard_spec(spec2, 3).hnsw.seed == CFG.seed + 6
+    assert shard_spec(spec2, 3).num_partitions == 2
+    s = shard_spec(spec, 1, storage_path="/x/y")
+    assert s.storage_path == "/x/y" and s.hnsw.seed == CFG.seed + 1
+
+
+def test_cluster_rejects_quantized_spec():
+    spec = dataclasses.replace(_spec("partitioned"), dtype="uint8")
+    with pytest.raises(ValueError, match="float32-only"):
+        ClusterRouter(spec, [])
+
+
+# ---------------------------------------------------------------------------
+# wire protocol
+# ---------------------------------------------------------------------------
+
+
+def test_wire_roundtrip():
+    msg = {"op": "search", "k": 10, "frac": 0.5, "flag": True,
+           "name": "shard-000", "nothing": None,
+           "queries": np.arange(12, dtype=np.float32).reshape(3, 4),
+           "ids": np.array([[1, -1], [5, 9]], dtype=np.int64),
+           "empty": np.zeros((0, 4), dtype=np.int32)}
+    got = from_wire(to_wire(msg))
+    for k in ("op", "k", "frac", "flag", "name", "nothing"):
+        assert got[k] == msg[k]
+    for k in ("queries", "ids", "empty"):
+        assert got[k].dtype == msg[k].dtype
+        np.testing.assert_array_equal(got[k], msg[k])
+
+
+def test_wire_rejects_bad_magic():
+    with pytest.raises(ValueError, match="magic"):
+        from_wire(b"XXXX" + b"\x00" * 16)
+
+
+# ---------------------------------------------------------------------------
+# core.merge: the factored-out reduction is the one ingest shipped
+# ---------------------------------------------------------------------------
+
+
+def _legacy_inline_merge(all_ids, all_ds, k):
+    """ingest/service.py's merge block before the core.merge factor-out."""
+    cat_ids = np.concatenate(all_ids, axis=1)
+    cat_ds = np.concatenate(all_ds, axis=1)
+    order = np.argsort(cat_ds, axis=1, kind="stable")[:, :k]
+    out_i = np.take_along_axis(cat_ids, order, axis=1)
+    out_d = np.take_along_axis(cat_ds, order, axis=1)
+    out_i = np.where(np.isfinite(out_d), out_i, -1)
+    if out_i.shape[1] < k:
+        pad = k - out_i.shape[1]
+        out_i = np.pad(out_i, ((0, 0), (0, pad)), constant_values=-1)
+        out_d = np.pad(out_d, ((0, 0), (0, pad)), constant_values=np.inf)
+    return out_i, out_d
+
+
+def test_rank_merge_bit_identical_to_legacy_inline():
+    rng = np.random.default_rng(3)
+    for trial in range(20):
+        b, k = int(rng.integers(1, 5)), int(rng.integers(1, 12))
+        ids_list, ds_list = [], []
+        for _ in range(int(rng.integers(1, 4))):
+            w = int(rng.integers(1, 9))
+            d = np.sort(rng.choice(  # ties on purpose: stable order matters
+                np.float32([0.5, 1.0, 1.0, 2.0, 3.0, np.inf]),
+                size=(b, w)), axis=1)
+            i = np.where(np.isfinite(d),
+                         rng.integers(0, 1000, (b, w)), -1).astype(np.int64)
+            ids_list.append(i)
+            ds_list.append(np.float32(d))
+        want = _legacy_inline_merge(ids_list, ds_list, k)
+        got = rank_merge(ids_list, ds_list, k)
+        np.testing.assert_array_equal(want[0], got[0])
+        np.testing.assert_array_equal(want[1], got[1])
+
+
+def test_mask_dead_lanes():
+    ids = np.array([[3, 7, 9]], dtype=np.int64)
+    ds = np.array([[0.5, 1.5, 2.5]], dtype=np.float32)
+    mi, md = mask_dead_lanes(ids, ds, np.array([[False, True, False]]))
+    np.testing.assert_array_equal(mi, [[3, -1, 9]])
+    np.testing.assert_array_equal(md, np.float32([[0.5, np.inf, 2.5]]))
+    assert mi.dtype == np.int64 and md.dtype == np.float32
+
+
+# ---------------------------------------------------------------------------
+# serving integration: a cluster is just another dispatch target
+# ---------------------------------------------------------------------------
+
+
+def test_search_server_over_cluster(zoo):
+    from repro.serve import SearchServer
+
+    backend, ref, cluster, queries = zoo
+    want = np.asarray(ref.search(
+        SearchRequest(queries=queries, k=5, ef=40)).ids)
+    with SearchServer(cluster, replicas=2, max_batch=4,
+                      max_wait_ms=1.0) as srv:
+        futs = srv.submit_many(queries, k=5, ef=40)
+        got = np.stack([np.asarray(f.result().ids) for f in futs])
+        srv.drain()
+    np.testing.assert_array_equal(want, got)

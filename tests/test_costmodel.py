@@ -118,6 +118,59 @@ def test_compaction_cost_write_amplification():
         compaction_cost(100, 4, 10, 1, delete_frac=1.0)
 
 
+def test_cluster_fanout_cost_term():
+    """The repro.cluster fan-out term: replicas scale storage QPS linearly;
+    shards duplicate full-ef traversal so storage QPS does NOT scale with
+    shard count alone; the router link binds once fan-out bytes beat it."""
+    from repro.launch.costmodel import cluster_fanout_cost
+    from repro.launch.roofline import HW
+
+    hw = HW()
+    base = cluster_fanout_cost(1, 1, dim=128, k=10, blocks_per_query=100,
+                               block_size=4096, ssd_bw=hw.ssd_bw)
+    # router bytes: N * (query scatter + top-k gather)
+    assert base.router_bytes_q == 128 * 4 + 10 * 12
+    assert base.flash_bytes_q == 100 * 4096
+    assert base.storage_qps == pytest.approx(
+        hw.ssd_bw / (100 * 4096))
+    assert base.modeled_qps == min(base.router_qps, base.storage_qps)
+
+    # replicas: aggregate SSDs grow, per-query flash work does not
+    rep2 = cluster_fanout_cost(1, 2, dim=128, k=10, blocks_per_query=100,
+                               block_size=4096, ssd_bw=hw.ssd_bw)
+    assert rep2.storage_qps == pytest.approx(2 * base.storage_qps)
+    assert rep2.router_bytes_q == base.router_bytes_q
+
+    # shards: N SSDs but N full-ef traversals — storage QPS unchanged,
+    # router bytes grow with N (the fan-out tax)
+    sh4 = cluster_fanout_cost(4, 1, dim=128, k=10, blocks_per_query=100,
+                              block_size=4096, ssd_bw=hw.ssd_bw)
+    assert sh4.aggregate_ssd_bw == pytest.approx(4 * hw.ssd_bw)
+    assert sh4.flash_bytes_q == pytest.approx(4 * base.flash_bytes_q)
+    assert sh4.storage_qps == pytest.approx(base.storage_qps)
+    assert sh4.router_bytes_q == pytest.approx(4 * base.router_bytes_q)
+
+    # cache hits shrink flash traffic, raising the storage ceiling
+    warm = cluster_fanout_cost(4, 1, dim=128, k=10, blocks_per_query=100,
+                               block_size=4096, cache_hit_rate=0.9,
+                               ssd_bw=hw.ssd_bw)
+    assert warm.storage_qps == pytest.approx(10 * sh4.storage_qps)
+
+    # a slow router link eventually binds
+    bound = cluster_fanout_cost(64, 8, dim=128, k=10, blocks_per_query=1,
+                                block_size=4096, cache_hit_rate=0.99,
+                                ssd_bw=hw.ssd_bw, link_bw=1e6)
+    assert bound.bound == "router"
+    assert bound.modeled_qps == pytest.approx(bound.router_qps)
+
+    with pytest.raises(ValueError, match="n_shards"):
+        cluster_fanout_cost(0, 1, dim=128, k=10, blocks_per_query=1,
+                            block_size=4096)
+    with pytest.raises(ValueError, match="cache_hit_rate"):
+        cluster_fanout_cost(1, 1, dim=128, k=10, blocks_per_query=1,
+                            block_size=4096, cache_hit_rate=-0.1)
+
+
 @pytest.mark.parametrize("arch", ["granite_3_8b", "qwen3_14b",
                                   "deepseek_v2_lite_16b", "jamba_v01_52b",
                                   "xlstm_350m", "musicgen_large"])

@@ -222,6 +222,65 @@ def test_mutable_index_matches_numpy_oracle(ops, seal_threshold):
     svc.close()
 
 
+# ---------------------------------------------------------------------------
+# repro.cluster: ANY shard assignment of rows matches the numpy oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_rows=st.integers(min_value=8, max_value=120),
+    n_shards=st.integers(min_value=1, max_value=5),
+    k=st.integers(min_value=1, max_value=12),
+    assign_seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_cluster_random_sharding_matches_numpy_oracle(
+        n_rows, n_shards, k, assign_seed):
+    """Scatter rows across shards ARBITRARILY (not the contiguous split) —
+    the router's merge must still equal a numpy scan over all rows: exact
+    distances (integer-valued pool), only real ids, k-smallest multiset.
+    """
+    from repro.api import IndexSpec, SearchRequest
+    from repro.cluster import ClusterRouter, make_shard
+
+    pool = _ingest_pool()
+    vecs = pool[:n_rows]
+    arng = np.random.default_rng(assign_seed)
+    assign = arng.integers(0, n_shards, size=n_rows)
+    spec = IndexSpec(backend="exact")
+    clients = []
+    for s in range(n_shards):
+        gids = np.flatnonzero(assign == s).astype(np.int64)
+        if gids.size == 0:
+            continue                      # hypothesis may empty a shard
+        clients.append(make_shard(vecs[gids], spec, name=f"s{s}",
+                                  gid_map=gids))
+    if not clients:
+        return
+    router = ClusterRouter(spec, clients)
+    try:
+        q = pool[200:204, :].astype(np.float32)
+        resp = router.search(SearchRequest(queries=q, k=k))
+        ids = np.asarray(resp.ids)
+        dists = np.asarray(resp.dists)
+        d2 = (np.einsum("nd,nd->n", vecs, vecs)[None]
+              - 2 * q @ vecs.T + np.einsum("qd,qd->q", q, q)[:, None])
+        k_eff = min(k, n_rows)
+        for b in range(len(q)):
+            assert (ids[b, :k_eff] >= 0).all()
+            assert (ids[b, k_eff:] == -1).all()
+            # every id is a real row with its exact distance
+            for j in range(k_eff):
+                np.testing.assert_allclose(
+                    dists[b, j], d2[b, int(ids[b, j])], rtol=0, atol=0)
+            # the k smallest distances, as a multiset
+            np.testing.assert_allclose(np.sort(dists[b, :k_eff]),
+                                       np.sort(d2[b])[:k_eff],
+                                       rtol=0, atol=0)
+    finally:
+        router.close()
+
+
 @settings(max_examples=15, deadline=None)
 @given(
     plan=st.lists(
