@@ -21,6 +21,7 @@ MODULES = [
     "fig12_platforms",
     "fig_ingest",
     "fig_cluster",
+    "fig_obs",
     "table2_kernels",
     "lm_substrate",
 ]

@@ -1,0 +1,168 @@
+#!/usr/bin/env python
+"""CI obs-smoke: tracing + metrics over the real serving stack, end to end.
+
+Serves a tiny query stream through SearchServer -> batcher -> replica pool
+-> csd SearchService with tracing ON, then ASSERTS the observability
+acceptance bounds:
+
+  * every layer of the paper's request path shows up in the trace at least
+    once — queue, batch, dispatch, search, traversal, store-read, hop —
+    and the spans form one well-parented tree (no orphans);
+  * the Chrome/Perfetto trace-event export is valid JSON with 'X' events
+    whose args carry the span identity (loads in ui.perfetto.dev);
+  * the Prometheus text exposition parses line by line (TYPE'd families,
+    histogram bucket monotonicity, _count == +Inf bucket) and carries the
+    serve/store/api series the docs promise;
+  * results are bit-identical with tracing on vs off (observability must
+    never steer the search).
+
+  PYTHONPATH=src python scripts/obs_smoke.py
+"""
+
+import json
+import os
+import re
+import sys
+import tempfile
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.api import IndexSpec, SearchRequest, SearchService  # noqa: E402
+from repro.core.hnsw_graph import HNSWConfig  # noqa: E402
+from repro.data import clustered_vectors  # noqa: E402
+from repro.obs import TRACER, write_snapshot  # noqa: E402
+from repro.serve import SearchServer  # noqa: E402
+
+N, DIM, K, EF = 1200, 32, 10, 40
+NQ = 24
+
+# the layers the trace must witness (ISSUE 7 acceptance list)
+REQUIRED_SPANS = {"request", "queue", "batch", "dispatch", "search",
+                  "traversal", "store-read", "hop", "hop-kernel", "rerank"}
+
+PROM_LINE = re.compile(
+    r'^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? [^ ]+$')
+
+
+def check_prometheus(text: str) -> dict:
+    """Parse the exposition the way a scraper would; return {name: value}
+    for scalar samples."""
+    samples, families = {}, {}
+    for ln in text.strip().splitlines():
+        if ln.startswith("# TYPE"):
+            _, _, name, kind = ln.split()
+            assert name not in families, f"duplicate TYPE for {name}"
+            families[name] = kind
+            continue
+        assert not ln.startswith("#"), f"unexpected comment line: {ln!r}"
+        assert PROM_LINE.match(ln), f"unparseable sample line: {ln!r}"
+        name, value = ln.rsplit(" ", 1)
+        samples[name] = float(value) if value != "+Inf" else float("inf")
+    # histogram invariants: buckets cumulative-monotone, count == +Inf
+    for fam, kind in families.items():
+        if kind != "histogram":
+            continue
+        series = [(n, v) for n, v in samples.items()
+                  if n.startswith(fam + "_bucket")]
+        assert series, f"histogram {fam} has no buckets"
+        by_labels: dict = {}
+        for n, v in series:
+            base = re.sub(r'le="[^"]*",?', "", n)
+            by_labels.setdefault(base, []).append(v)
+        # exposition order is ascending le, so each group must be monotone
+        for base, vs in by_labels.items():
+            assert vs == sorted(vs), f"non-monotone buckets in {base}"
+    return samples
+
+
+def main():
+    root = tempfile.mkdtemp(prefix="obs-smoke-")
+    vecs = clustered_vectors(N, DIM, k=10, seed=0)
+    rng = np.random.default_rng(1)
+    queries = (vecs[rng.integers(0, N, NQ)]
+               + rng.normal(scale=1.0, size=(NQ, DIM))).astype(np.float32)
+    spec = IndexSpec(backend="csd", num_partitions=2,
+                     hnsw=HNSWConfig(M=8, ef_construction=50, seed=0),
+                     block_size=512, cache_bytes=1 << 20, prefetch=False,
+                     storage_path=os.path.join(root, "store"))
+    svc = SearchService.build(vecs, spec)
+
+    # -- golden run, tracing OFF --------------------------------------------
+    req = SearchRequest(queries=queries, k=K, ef=EF, rerank=True)
+    want = np.asarray(svc.search(req).ids)
+
+    # -- traced run through the full serving stack --------------------------
+    TRACER.configure(enabled=True, sample_rate=1.0)
+    TRACER.clear()
+    with SearchServer(svc, replicas=2, max_batch=8, max_wait_ms=1.0) as srv:
+        futs = [srv.submit(q, k=K, ef=EF, rerank=True) for q in queries]
+        got = np.stack([np.asarray(f.result(timeout=120).ids)
+                        for f in futs])
+        srv.drain()
+        prom = srv.metrics()
+        trace_doc = TRACER.export()
+    TRACER.configure(enabled=False)
+
+    assert np.array_equal(got, want), \
+        "tracing changed search results (must be bit-identical)"
+
+    # -- span coverage + tree shape -----------------------------------------
+    spans = TRACER.spans()
+    names = {s["name"] for s in spans}
+    missing = REQUIRED_SPANS - names
+    assert not missing, f"layers missing from the trace: {sorted(missing)}"
+    by_id = {s["id"]: s for s in spans}
+    n_req = 0
+    for s in spans:
+        if s["parent"] == 0:
+            assert s["name"] == "request", \
+                f"unexpected root span {s['name']!r}"
+            n_req += 1
+        else:
+            parent = by_id.get(s["parent"])
+            assert parent is not None, f"orphan span {s['name']!r}"
+            assert parent["trace"] == s["trace"], \
+                f"span {s['name']!r} crosses trace ids"
+    assert n_req == NQ, f"expected {NQ} request roots, got {n_req}"
+
+    # -- Perfetto JSON loads -------------------------------------------------
+    trace_path = os.path.join(root, "trace.json")
+    TRACER.write(trace_path)
+    with open(trace_path) as f:
+        doc = json.load(f)
+    assert doc == json.loads(json.dumps(trace_doc))
+    events = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    assert len(events) == len(spans)
+    for e in events:
+        assert e["dur"] >= 0 and "span_id" in e["args"]
+    assert any(e.get("ph") == "M" and e["name"] == "thread_name"
+               for e in doc["traceEvents"])
+    assert doc["otherData"]["dropped_events"] == 0
+
+    # -- Prometheus exposition parses + promised series exist ---------------
+    samples = check_prometheus(prom)
+    assert samples['api_searches_total{backend="csd"}'] >= 1
+    assert samples["serve_requests_total"] == NQ
+    assert any(n.startswith("store_block_reads_total") for n in samples)
+    assert any(n.startswith("serve_e2e_ms_bucket") for n in samples)
+    assert any(n.startswith("serve_replica_queries_total") for n in samples)
+    # the one-shot file writer round-trips both formats
+    jpath = write_snapshot(os.path.join(root, "metrics.json"))
+    with open(jpath) as f:
+        jdoc = json.load(f)
+    assert jdoc["ts_unix"] > 0 and jdoc["counters"]
+    check_prometheus(open(write_snapshot(
+        os.path.join(root, "metrics.prom"))).read())
+
+    stage_names = sorted(names & REQUIRED_SPANS)
+    print(f"[obs-smoke] OK: {len(spans)} spans over {NQ} requests, layers "
+          f"{stage_names} all present; results bit-identical traced vs "
+          f"untraced; Prometheus exposition ({len(samples)} samples) and "
+          f"Perfetto JSON ({len(events)} events) both parse")
+
+
+if __name__ == "__main__":
+    main()

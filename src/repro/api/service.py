@@ -34,6 +34,8 @@ from repro.api.types import (
     SearchResponse,
 )
 from repro.checkpoint import latest_step, save_checkpoint, step_dir
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import TRACER
 
 __all__ = ["SearchService", "MANIFEST_NAME", "read_step_leaves"]
 
@@ -99,18 +101,36 @@ class SearchService:
         """One batched request; accepts a raw query array as shorthand."""
         if not isinstance(request, SearchRequest):
             request = SearchRequest(queries=request)
-        q = request.queries
-        if self.metric.normalize_queries:
-            q = self.metric.prepare_queries(np.asarray(q))
-        # else: leave device arrays on device — the kernels cast to f32
-        # themselves, so no host round-trip on the hot path
-        if self.quantizer is not None:
-            # one edge quantization feeds every backend the same codes —
-            # this is what keeps quantized partitioned/csd bit-identical
-            q = self.quantizer.encode_f32(np.asarray(q))
-        ids, dists, stats = self.backend.search(
-            q, k=request.k, ef=request.ef, rerank=request.rerank,
-            with_stats=request.with_stats)
+        # nest under this thread's open span when there is one (the replica
+        # dispatch span); fall back to the batcher-stamped request ctx when
+        # the thread is cold (direct-dispatch path crosses no thread)
+        if request.trace is not None and TRACER.current_ctx() is None:
+            span = TRACER.span("search", parent=request.trace,
+                               backend=self.spec.backend, k=request.k,
+                               ef=request.ef)
+        else:
+            span = TRACER.span("search", backend=self.spec.backend,
+                               k=request.k, ef=request.ef)
+        with span:
+            q = request.queries
+            if self.metric.normalize_queries:
+                q = self.metric.prepare_queries(np.asarray(q))
+            # else: leave device arrays on device — the kernels cast to f32
+            # themselves, so no host round-trip on the hot path
+            if self.quantizer is not None:
+                # one edge quantization feeds every backend the same codes —
+                # this is what keeps quantized partitioned/csd bit-identical
+                q = self.quantizer.encode_f32(np.asarray(q))
+            ids, dists, stats = self.backend.search(
+                q, k=request.k, ef=request.ef, rerank=request.rerank,
+                with_stats=request.with_stats)
+        REGISTRY.counter("api_searches_total",
+                         backend=self.spec.backend).inc()
+        # shape, not np.asarray: never force a device array to host here
+        shape = getattr(request.queries, "shape", None)
+        nq = int(shape[0]) if shape else len(request.queries)
+        REGISTRY.counter("api_queries_total",
+                         backend=self.spec.backend).inc(nq)
         return SearchResponse(ids=ids, dists=dists, stats=stats)
 
     # -- persistence --------------------------------------------------------

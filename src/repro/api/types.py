@@ -122,6 +122,10 @@ class SearchRequest:
     ef: int = 40
     rerank: bool = False
     with_stats: bool = False
+    # trace ctx (repro.obs.SpanCtx) linking this batch to the request spans
+    # it serves — set by the dynamic batcher, ignored everywhere else; not
+    # part of request identity/equality and never serialized
+    trace: Any = dataclasses.field(default=None, compare=False, repr=False)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +143,10 @@ class QueryStats:
     dist_calcs: Any = None      # [B] distance evaluations == "vector reads"
     block_reads: Any = None     # scalar: flash blocks transferred (Fig. 9)
     cache_hits: Any = None      # scalar: demand accesses served from cache
+    cache_misses: Any = None    # scalar: demand accesses that hit flash —
+                                # hits + misses == demand, which is what
+                                # demand-weighted hit-rate aggregation
+                                # (ingest segments, cluster shards) needs
     cache_hit_rate: Any = None  # scalar in [0, 1]
     bytes_read: Any = None      # scalar: block_reads * block_size
     segments: Any = None        # mutable index only: per-segment stat dicts

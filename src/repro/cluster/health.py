@@ -20,6 +20,8 @@ from __future__ import annotations
 import threading
 import time
 
+from repro.obs.metrics import REGISTRY
+
 __all__ = ["HealthMonitor"]
 
 
@@ -41,14 +43,18 @@ class HealthMonitor:
         timeouts, return {shard: [replica healthy flags]}."""
         now = time.monotonic()
         states = {}
+        down = 0
         for client in self.router.shards:
             flags = client.probe()
             for i, rep in enumerate(client.replicas):
                 if flags[i] and now - rep.last_beat > self.timeout_s:
                     client.mark(i, False)      # heartbeat stale: hung node
                     flags[i] = False
+            down += flags.count(False)
             states[client.name] = flags
         self.sweeps += 1
+        REGISTRY.counter("cluster_health_sweeps_total").inc()
+        REGISTRY.gauge("cluster_replicas_down").set(down)
         return states
 
     def start(self) -> "HealthMonitor":

@@ -43,6 +43,8 @@ from repro.core.merge import rank_merge
 from repro.cluster.shard import ShardFault, ShardWorker, to_wire, from_wire
 from repro.cluster.topology import (ClusterTopology, ShardInfo,
                                     write_topology)
+from repro.obs.metrics import REGISTRY, next_uid
+from repro.obs.trace import TRACER
 
 __all__ = ["ShardClient", "ClusterRouter", "ClusterStats"]
 
@@ -163,6 +165,24 @@ class ClusterStats:
     query_skew: float               # max/mean replica queries
 
 
+def _collect_router(router: "ClusterRouter"):
+    """Snapshot-time metric samples for the whole cluster (repro.obs)."""
+    shards = router.shards
+    labels = {"router": router.uid}
+    out = [("gauge", "cluster_shards", labels, len(shards)),
+           ("gauge", "cluster_replicas_live", labels,
+            sum(c.live() for c in shards)),
+           ("counter", "cluster_failovers_total", labels,
+            sum(c.failovers for c in shards))]
+    for c in shards:
+        sl = {"router": router.uid, "shard": c.name}
+        out.append(("counter", "cluster_shard_queries_total", sl,
+                    sum(rep.queries for rep in c.replicas)))
+        out.append(("counter", "cluster_shard_failures_total", sl,
+                    sum(rep.failures for rep in c.replicas)))
+    return out
+
+
 class ClusterRouter:
     """One logical index over N shards. Quacks like a `SearchService`
     (`.spec` / `.search`) so `repro.serve.SearchServer` can front it."""
@@ -184,6 +204,8 @@ class ClusterRouter:
         self._pool = ThreadPoolExecutor(
             max_workers=16, thread_name_prefix="cluster-router")
         self._monitor = None        # HealthMonitor attaches here
+        self.uid = next_uid()
+        REGISTRY.register_collector(self, _collect_router)
         if publish and path is not None:
             self._publish()
 
@@ -267,16 +289,26 @@ class ClusterRouter:
             np.asarray(request.queries, np.float32))
         shards = self.shards             # snapshot: elastic-change safe
         rerank = bool(request.rerank) and self.spec.backend != "exact"
-        if rerank:
-            return self._search_rerank(shards, queries, request)
-        msg = {"op": "search", "queries": queries, "k": int(request.k),
-               "ef": int(request.ef), "rerank": False,
-               "with_stats": bool(request.with_stats)}
-        resps = self._scatter(shards, msg)
-        ids, dists = rank_merge([r["ids"] for r in resps],
-                                [r["dists"] for r in resps], int(request.k))
-        stats = self._roll_stats(resps) if request.with_stats else None
-        return SearchResponse(ids=ids, dists=dists, stats=stats)
+        # same span contract as SearchService.search: ambient nesting wins
+        # (replica dispatch span); batcher ctx only on a cold thread
+        if request.trace is not None and TRACER.current_ctx() is None:
+            span = TRACER.span("search", parent=request.trace,
+                               backend="cluster", shards=len(shards))
+        else:
+            span = TRACER.span("search", backend="cluster",
+                               shards=len(shards))
+        with span:
+            if rerank:
+                return self._search_rerank(shards, queries, request)
+            msg = {"op": "search", "queries": queries, "k": int(request.k),
+                   "ef": int(request.ef), "rerank": False,
+                   "with_stats": bool(request.with_stats)}
+            resps = self._scatter(shards, msg)
+            ids, dists = rank_merge(
+                [r["ids"] for r in resps],
+                [r["dists"] for r in resps], int(request.k))
+            stats = self._roll_stats(resps) if request.with_stats else None
+            return SearchResponse(ids=ids, dists=dists, stats=stats)
 
     def _search_rerank(self, shards, queries, request) -> SearchResponse:
         """Global stage 2: gather every shard's stage-1 candidate pool,
@@ -327,7 +359,19 @@ class ClusterRouter:
                               stats=stats)
 
     def _scatter(self, shards, msg: dict) -> list:
-        futs = [self._pool.submit(c.request, msg) for c in shards]
+        # the fan-out crosses onto the router pool threads: capture the
+        # caller's ctx here and parent each per-shard span on it explicitly
+        ctx = TRACER.current_ctx()
+
+        def _one(c):
+            if ctx is None:
+                return c.request(msg)
+            with TRACER.span("shard", parent=ctx, shard=c.name) as sp:
+                m = dict(msg)
+                m["trace"] = sp.ctx.wire()   # rides the JSON wire header
+                return c.request(m)
+
+        futs = [self._pool.submit(_one, c) for c in shards]
         return [f.result() for f in futs]          # shard order preserved
 
     def _roll_stats(self, resps) -> QueryStats:
@@ -337,9 +381,17 @@ class ClusterRouter:
                 return None
             return (int(sum(vals)) if scalar
                     else np.sum(np.stack(vals), axis=0))
+        hits = _sum("cache_hits", scalar=True)
+        misses = _sum("cache_misses", scalar=True)
+        # demand-weighted over shards: one rate from the summed counters,
+        # identical in form to a single cache's hits / (hits + misses)
+        demand = (hits or 0) + (misses or 0)
+        hit_rate = (((hits or 0) / demand) if demand else 0.0) \
+            if (hits is not None or misses is not None) else None
         return QueryStats(hops=_sum("hops"), dist_calcs=_sum("dist_calcs"),
                           block_reads=_sum("block_reads", scalar=True),
-                          cache_hits=_sum("cache_hits", scalar=True),
+                          cache_hits=hits, cache_misses=misses,
+                          cache_hit_rate=hit_rate,
                           bytes_read=_sum("bytes_read", scalar=True))
 
     # -- introspection -------------------------------------------------------
@@ -358,9 +410,11 @@ class ClusterRouter:
         rows = np.asarray([c.n for c in shards], np.float64)
         rep_q = np.asarray([r["queries"] for r in per_rep], np.float64)
         csd = [r for r in per_rep if "cache_hit_rate" in r]
-        hit = (sum(r["cache_hit_rate"] * max(r["queries"], 1) for r in csd)
-               / max(sum(max(r["queries"], 1) for r in csd), 1)
-               if csd else None)
+        # exact demand-weighting from the summed counters (the per-replica
+        # stats now carry cache_hits/cache_misses), not an average of rates
+        dh = sum(r.get("cache_hits", 0) for r in csd)
+        dm = sum(r.get("cache_misses", 0) for r in csd)
+        hit = ((dh / (dh + dm) if (dh + dm) else 0.0) if csd else None)
         return ClusterStats(
             n_shards=len(shards),
             n_replicas=sum(c.live() for c in shards),

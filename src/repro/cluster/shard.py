@@ -35,6 +35,8 @@ from concurrent.futures import Future, ThreadPoolExecutor
 import numpy as np
 
 from repro.api.types import SearchRequest
+from repro.obs.stats import latency_summary
+from repro.obs.trace import SpanCtx, TRACER
 
 __all__ = ["ShardFault", "to_wire", "from_wire", "ShardWorker"]
 
@@ -166,7 +168,17 @@ class ShardWorker:
         msg = from_wire(payload)
         try:
             self._check_fault()
-            out = self._dispatch(msg)
+            # the trace ctx crosses the wire in the JSON header: enter a
+            # worker-side span only when the caller sent one (pings and
+            # health probes stay span-free)
+            w = msg.pop("trace", None)
+            if w is not None:
+                with TRACER.span("shard-exec", parent=SpanCtx.from_wire(w),
+                                 shard=self.name, replica=self.rid,
+                                 op=msg.get("op")):
+                    out = self._dispatch(msg)
+            else:
+                out = self._dispatch(msg)
             out["ok"] = True
         except Exception as exc:          # serialize the failure — a real
             self.failures += 1            # transport cannot raise across it
@@ -239,18 +251,20 @@ class ShardWorker:
     # -- introspection -------------------------------------------------------
 
     def stats(self) -> dict:
-        lat = np.asarray(self._lat_ms, np.float64)
+        lat = latency_summary(self._lat_ms)
         d = {"shard": self.name, "replica": self.rid, "n": self.n,
              "queries": self.queries, "batches": self.batches,
              "failures": self.failures, "busy_s": self.busy_s,
-             "p50_ms": float(np.percentile(lat, 50)) if lat.size else 0.0,
-             "p99_ms": float(np.percentile(lat, 99)) if lat.size else 0.0}
+             "p50_ms": lat["p50"], "p99_ms": lat["p99"],
+             "p999_ms": lat["p999"]}
         reader = getattr(self.service.backend, "reader", None)
         if reader is not None:             # csd: this replica's own cache
             snap = reader.cache.snapshot()
             demand = snap["hits"] + snap["misses"]
             d.update(block_reads=snap["block_reads"],
                      bytes_read=snap["bytes_read"],
+                     cache_hits=snap["hits"],
+                     cache_misses=snap["misses"],
                      cache_hit_rate=(snap["hits"] / demand if demand
                                      else 0.0))
         return d
@@ -268,7 +282,7 @@ def _wire_stats(stats) -> dict:
         v = getattr(stats, f)
         if v is not None:
             out[f] = np.asarray(v, np.int64)
-    for f in ("block_reads", "cache_hits", "bytes_read"):
+    for f in ("block_reads", "cache_hits", "cache_misses", "bytes_read"):
         v = getattr(stats, f)
         if v is not None:
             out[f] = int(v)

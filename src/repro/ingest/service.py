@@ -51,6 +51,8 @@ from repro.ingest.compactor import compact_segments
 from repro.ingest.memtable import Memtable
 from repro.ingest.segments import Segment, seal_memtable
 from repro.ingest.tombstones import TombstoneSet
+from repro.obs.metrics import REGISTRY, next_uid
+from repro.obs.trace import TRACER
 
 __all__ = ["MutableSearchService", "MUTABLE_FORMAT_VERSION",
            "MUTABLE_MANIFEST_NAME"]
@@ -65,6 +67,21 @@ _SUPPORTED = ("exact", "hnsw", "partitioned", "csd")
 # pathological pile of deletes degrades recall instead of blowing up the
 # scan kernels (compact() is the actual fix for that much debt).
 _MAX_FETCH = 256
+
+
+def _collect_ingest(svc: "MutableSearchService"):
+    """Snapshot-time metric samples (repro.obs registry collector)."""
+    labels = {"index": svc.uid}
+    return [
+        ("counter", "ingest_rows_inserted_total", labels, svc._next_gid),
+        ("counter", "ingest_rows_deleted_total", labels, svc._deleted_total),
+        ("counter", "ingest_compactions_total", labels, svc._compactions),
+        ("gauge", "ingest_segments", labels, svc.num_segments),
+        ("gauge", "ingest_live_rows", labels, svc.size),
+        ("gauge", "ingest_resident_bytes", labels, svc.resident_bytes()),
+        ("gauge", "ingest_peak_resident_bytes", labels,
+         svc.peak_resident_bytes),
+    ]
 
 
 class MutableSearchService:
@@ -109,6 +126,10 @@ class MutableSearchService:
         self._next_seg = 0
         self.peak_resident_bytes = 0
         self.peak_storage_resident_bytes = 0
+        self._deleted_total = 0            # monotonic (tombstones shrink)
+        self._compactions = 0
+        self.uid = next_uid()
+        REGISTRY.register_collector(self, _collect_ingest)
 
     # -- introspection -------------------------------------------------------
 
@@ -199,6 +220,7 @@ class MutableSearchService:
             self._tombstones.add(known)
             for seg in self._segments:
                 seg.n_deleted += int(seg.contains(fresh).sum())
+            self._deleted_total += int(fresh.size)
             return int(fresh.size)
 
     def flush(self) -> None:
@@ -257,6 +279,7 @@ class MutableSearchService:
                                            if id(s) not in old_ids]
                 self._rebalance_caches_locked()
                 self._note_resident()
+                self._compactions += 1
             return {"merged_segments": len(segments),
                     "rows_read": result.rows_read,
                     "rows_written": result.rows_written,
@@ -346,7 +369,8 @@ class MutableSearchService:
         all_ids, all_ds = [], []
         seg_stats: list[dict] = []
         agg = {"hops": None, "dist_calcs": None, "block_reads": 0,
-               "cache_hits": 0, "bytes_read": 0}
+               "cache_hits": 0, "cache_misses": 0, "bytes_read": 0,
+               "saw_cache": False}
 
         def _acc(stats, name: str, n: int):
             if stats is None:
@@ -358,52 +382,76 @@ class MutableSearchService:
                     v = np.asarray(v)
                     row[f] = float(v.mean())
                     agg[f] = v if agg[f] is None else agg[f] + v
-            for f in ("block_reads", "cache_hits", "bytes_read"):
+            for f in ("block_reads", "cache_hits", "cache_misses",
+                      "bytes_read"):
                 v = getattr(stats, f)
                 if v is not None:
                     row[f] = int(v)
                     agg[f] += int(v)
+                    if f in ("cache_hits", "cache_misses"):
+                        agg["saw_cache"] = True
             seg_stats.append(row)
 
-        for seg in segments:
-            # the clamp bounds tombstone OVER-fetch only — never k itself
-            k_fetch = max(k, min(k + seg.n_deleted, _MAX_FETCH))
-            gids, ds, stats = seg.search(
-                queries, k=k_fetch, ef=request.ef, rerank=request.rerank,
-                with_stats=request.with_stats)
-            gids, ds = mask_dead_lanes(gids, ds, tomb.contains(gids))
-            all_ids.append(gids)
-            all_ds.append(ds)
-            if request.with_stats:
-                _acc(stats, seg.name, seg.n)
+        # the fan-out span: ambient nesting wins (replica dispatch span);
+        # the batcher-stamped request ctx only parents on a cold thread
+        if request.trace is not None and TRACER.current_ctx() is None:
+            span = TRACER.span("search", parent=request.trace,
+                               backend="mutable", k=request.k)
+        else:
+            span = TRACER.span("search", backend="mutable", k=request.k)
+        with span:
+            for seg in segments:
+                # the clamp bounds tombstone OVER-fetch only — never k itself
+                k_fetch = max(k, min(k + seg.n_deleted, _MAX_FETCH))
+                with TRACER.child_span("segment", segment=seg.name):
+                    gids, ds, stats = seg.search(
+                        queries, k=k_fetch, ef=request.ef,
+                        rerank=request.rerank,
+                        with_stats=request.with_stats)
+                gids, ds = mask_dead_lanes(gids, ds, tomb.contains(gids))
+                all_ids.append(gids)
+                all_ds.append(ds)
+                if request.with_stats:
+                    _acc(stats, seg.name, seg.n)
 
-        if mem is not None and mem[1].size:
-            mem_dead = int(tomb.contains(mem[1]).sum())
-            k_fetch = max(k, min(k + mem_dead, _MAX_FETCH))
-            mq = self.metric.prepare_queries(queries)
-            ids, ds = Memtable.scan(mem[0], mem[1], mq, k_fetch,
-                                    self.spec.metric)
-            ids, ds = mask_dead_lanes(ids, ds, tomb.contains(ids))
-            all_ids.append(ids)
-            all_ds.append(ds)
-            if request.with_stats:
-                calcs = np.full((b,), mem[1].size, np.int64)
-                _acc(QueryStats(dist_calcs=calcs), "memtable", mem[1].size)
+            if mem is not None and mem[1].size:
+                mem_dead = int(tomb.contains(mem[1]).sum())
+                k_fetch = max(k, min(k + mem_dead, _MAX_FETCH))
+                mq = self.metric.prepare_queries(queries)
+                with TRACER.child_span("memtable", rows=int(mem[1].size)):
+                    ids, ds = Memtable.scan(mem[0], mem[1], mq, k_fetch,
+                                            self.spec.metric)
+                ids, ds = mask_dead_lanes(ids, ds, tomb.contains(ids))
+                all_ids.append(ids)
+                all_ds.append(ds)
+                if request.with_stats:
+                    calcs = np.full((b,), mem[1].size, np.int64)
+                    _acc(QueryStats(dist_calcs=calcs), "memtable",
+                         mem[1].size)
 
-        if not all_ids:
-            return SearchResponse(ids=np.full((b, k), -1, np.int64),
-                                  dists=np.full((b, k), np.inf, np.float32))
-        # stage-2 rank merge across sources (core.merge.rank_merge — the
-        # same reduction the cluster router uses): tombstoned lanes carry
-        # +inf so they can never displace a live id
-        out_i, out_d = rank_merge(all_ids, all_ds, k)
+            if not all_ids:
+                return SearchResponse(
+                    ids=np.full((b, k), -1, np.int64),
+                    dists=np.full((b, k), np.inf, np.float32))
+            # stage-2 rank merge across sources (core.merge.rank_merge — the
+            # same reduction the cluster router uses): tombstoned lanes carry
+            # +inf so they can never displace a live id
+            out_i, out_d = rank_merge(all_ids, all_ds, k)
         stats = None
         if request.with_stats:
             self._note_resident()
+            # demand-weighted hit rate over all csd segments — the same
+            # formula as one cache (hits / (hits + misses)), computed from
+            # the summed counters, never by averaging per-segment rates
+            demand = agg["cache_hits"] + agg["cache_misses"]
+            hit_rate = ((agg["cache_hits"] / demand if demand else 0.0)
+                        if agg["saw_cache"] else None)
             stats = QueryStats(
                 hops=agg["hops"], dist_calcs=agg["dist_calcs"],
                 block_reads=agg["block_reads"] or None,
                 cache_hits=agg["cache_hits"] or None,
+                cache_misses=agg["cache_misses"] or None,
+                cache_hit_rate=hit_rate,
                 bytes_read=agg["bytes_read"] or None,
                 segments=seg_stats)
         return SearchResponse(ids=out_i, dists=out_d, stats=stats)

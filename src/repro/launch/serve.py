@@ -169,19 +169,53 @@ def main(argv=None):
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--storage", default=None,
                     help="csd block-store directory (default: a tempdir)")
+    ap.add_argument("--trace", action="store_true",
+                    help="record hierarchical trace spans over the whole "
+                         "request path (repro.obs)")
+    ap.add_argument("--trace-sample", type=float, default=1.0,
+                    help="per-request trace sampling rate in [0, 1]")
+    ap.add_argument("--trace-out", default=None,
+                    help="write Chrome/Perfetto trace-event JSON here "
+                         "(implies --trace)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a metrics snapshot here (.json -> JSON, "
+                         "else Prometheus text exposition)")
+    ap.add_argument("--metrics-interval", type=float, default=0.0,
+                    help="with --metrics-out: re-emit the file every N "
+                         "seconds while serving (0 = once, at the end)")
     args = ap.parse_args(argv)
+
+    from repro.obs import PeriodicExporter, TRACER, write_snapshot
+    if args.trace or args.trace_out:
+        TRACER.configure(enabled=True, sample_rate=args.trace_sample)
 
     ds = VectorDataset(args.n, args.dim)
     service = build_service(args, ds)
     queries = ds.queries(args.batch * args.num_batches)
-    if args.serve_async:
-        _, stats = serve_async(
-            service, queries, k=args.k, ef=args.ef, rerank=args.rerank,
-            replicas=args.replicas, max_batch=args.max_batch or args.batch,
-            max_wait_ms=args.max_wait_ms)
-    else:
-        _, stats = serve_loop(service, queries, args.batch, args.k, args.ef,
-                              rerank=args.rerank)
+
+    exporter = None
+    if args.metrics_out and args.metrics_interval > 0:
+        exporter = PeriodicExporter(
+            args.metrics_out, args.metrics_interval,
+            tracer=TRACER if (args.trace or args.trace_out) else None,
+            trace_path=args.trace_out).start()
+    try:
+        if args.serve_async:
+            _, stats = serve_async(
+                service, queries, k=args.k, ef=args.ef, rerank=args.rerank,
+                replicas=args.replicas,
+                max_batch=args.max_batch or args.batch,
+                max_wait_ms=args.max_wait_ms)
+        else:
+            _, stats = serve_loop(service, queries, args.batch, args.k,
+                                  args.ef, rerank=args.rerank)
+    finally:
+        if exporter is not None:
+            exporter.stop()                  # final complete snapshot
+        elif args.metrics_out:
+            print(f"[serve] metrics -> {write_snapshot(args.metrics_out)}")
+        if args.trace_out:
+            print(f"[serve] trace   -> {TRACER.write(args.trace_out)}")
     return stats
 
 

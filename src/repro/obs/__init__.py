@@ -1,0 +1,35 @@
+"""repro.obs — the telemetry spine: traces, metrics, exporters.
+
+One coherent observability layer replacing the three ad-hoc stats
+surfaces the stack grew (serve's `_pct` rollup, cluster's inline
+percentiles, the PageCache counter dicts):
+
+  * `TRACER`   — hierarchical trace spans over the whole request path
+                 (request -> queue -> batch -> dispatch -> shard ->
+                 segment -> traversal -> store-read -> hop), exported as
+                 Chrome/Perfetto trace-event JSON. Near-zero cost when
+                 disabled (the default), sampled when enabled.
+  * `REGISTRY` — process-wide metrics (counters / gauges / bounded
+                 histograms) every layer publishes into, snapshot behind
+                 one call, exported as Prometheus text or JSON.
+  * `latency_summary` — the one percentile helper (p50/p99/p999/mean).
+
+See docs/observability.md for the span hierarchy and the metric-name
+table (with the paper-figure mapping, e.g. store_block_reads_total <->
+Fig. 9).
+"""
+
+from repro.obs.export import (PeriodicExporter, to_json, to_prometheus,
+                              write_snapshot)
+from repro.obs.metrics import (DEFAULT_MS_BUCKETS, Counter, Gauge,
+                               Histogram, MetricsRegistry, REGISTRY)
+from repro.obs.stats import latency_summary
+from repro.obs.trace import TRACER, SpanCtx, Tracer
+
+__all__ = [
+    "TRACER", "Tracer", "SpanCtx",
+    "REGISTRY", "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "DEFAULT_MS_BUCKETS",
+    "latency_summary",
+    "to_prometheus", "to_json", "write_snapshot", "PeriodicExporter",
+]

@@ -28,6 +28,7 @@ from concurrent.futures import Future
 import numpy as np
 
 from repro.api.types import QueryStats, SearchRequest
+from repro.obs.trace import TRACER
 from repro.serve.queue import PendingQuery, QueryResult, RequestQueue
 
 __all__ = ["DynamicBatcher", "bucket_size", "slice_stats"]
@@ -123,33 +124,48 @@ class DynamicBatcher:
             if b > len(batch):
                 q = np.concatenate(
                     [q, np.zeros((b - len(batch), q.shape[1]), q.dtype)])
+        # the batch span parents on the first sampled request's root; its
+        # ctx rides the SearchRequest so the replica-thread dispatch/search
+        # spans nest under this batch, not under some other thread's state
+        head_ctx = next((p.trace for p in batch
+                         if p.trace is not None and p.trace.sampled), None)
+        batch_ctx = TRACER.child_ctx(head_ctx)
         req = SearchRequest(queries=q, k=max(p.k for p in batch),
                             ef=head.ef, rerank=head.rerank,
-                            with_stats=head.with_stats)
+                            with_stats=head.with_stats, trace=batch_ctx)
         if self.collector is not None:
             self.collector.record_batch(len(batch))
         out = self.dispatch(req, n_queries=len(batch))
         if isinstance(out, Future):
             out.add_done_callback(
-                lambda f, b=batch: self._completed(b, f))
+                lambda f, b=batch, c=batch_ctx: self._completed(b, f, c))
         else:
-            self._scatter(batch, out)
+            self._scatter(batch, out, batch_ctx)
 
-    def _completed(self, batch: list[PendingQuery], fut: Future) -> None:
+    def _completed(self, batch: list[PendingQuery], fut: Future,
+                   batch_ctx=None) -> None:
         try:
             resp = fut.result()
         except Exception as e:
             self._fail(batch, e)
             return
         try:
-            self._scatter(batch, resp)
+            self._scatter(batch, resp, batch_ctx)
         except Exception as e:
             self._fail(batch, e)
 
-    def _scatter(self, batch: list[PendingQuery], resp) -> None:
+    def _scatter(self, batch: list[PendingQuery], resp,
+                 batch_ctx=None) -> None:
         ids = np.asarray(resp.ids)
         dists = np.asarray(resp.dists)
         t_done = time.perf_counter()
+        head = batch[0]
+        if batch_ctx is not None:
+            # retroactive: the batch window (flush -> results back), one
+            # span per batch on a virtual "batch" lane
+            TRACER.record_span("batch", head.t_dispatch, t_done,
+                               ctx=batch_ctx, tid="batch",
+                               size=len(batch), ef=head.ef)
         for i, p in enumerate(batch):
             stats = None
             if p.with_stats and resp.stats is not None:
@@ -159,6 +175,16 @@ class DynamicBatcher:
                               queue_ms=(p.t_dispatch - p.t_enqueue) * 1e3,
                               exec_ms=(t_done - p.t_dispatch) * 1e3,
                               e2e_ms=(t_done - p.t_enqueue) * 1e3)
+            if p.trace is not None and p.trace.sampled:
+                # retroactive per-request spans, on a virtual per-request
+                # lane so Perfetto nests request > queue/exec by containment
+                lane = f"req-{p.seq % 16}"
+                TRACER.record_span("request", p.t_enqueue, t_done,
+                                   ctx=p.trace, tid=lane, seq=p.seq, k=p.k)
+                TRACER.record_span("queue", p.t_enqueue, p.t_dispatch,
+                                   parent=p.trace, tid=lane)
+                TRACER.record_span("exec", p.t_dispatch, t_done,
+                                   parent=p.trace, tid=lane)
             if self.collector is not None:
                 self.collector.record_done(res, t_done)
             p.future.set_result(res)

@@ -31,6 +31,9 @@ from concurrent.futures import Future, ThreadPoolExecutor
 import jax
 import numpy as np
 
+from repro.obs.metrics import REGISTRY, next_uid
+from repro.obs.trace import TRACER
+
 __all__ = ["Replica", "ReplicaPool"]
 
 
@@ -49,9 +52,19 @@ class Replica:
             max_workers=1, thread_name_prefix=f"serve-replica-{rid}")
 
     def _search(self, request, n_queries: int):
+        # this runs on the replica's own thread: parent explicitly on the
+        # batch ctx the batcher stamped (cross-thread handoff); no ctx ->
+        # child_span, which is a no-op unless this thread is already traced
+        ctx = getattr(request, "trace", None)
+        if ctx is not None:
+            sp = TRACER.span("dispatch", parent=ctx, replica=self.rid,
+                             n=n_queries)
+        else:
+            sp = TRACER.child_span("dispatch", replica=self.rid)
         t0 = time.perf_counter()
-        resp = self.service.search(request)
-        jax.block_until_ready((resp.ids, resp.dists))
+        with sp:
+            resp = self.service.search(request)
+            jax.block_until_ready((resp.ids, resp.dists))
         self.busy_s += time.perf_counter() - t0
         self.batches += 1
         self.queries += n_queries
@@ -67,6 +80,8 @@ class Replica:
             demand = snap["hits"] + snap["misses"]
             d.update(block_reads=snap["block_reads"],
                      bytes_read=snap["bytes_read"],
+                     cache_hits=snap["hits"],
+                     cache_misses=snap["misses"],
                      cache_hit_rate=(snap["hits"] / demand if demand
                                      else 0.0))
         return d
@@ -79,6 +94,21 @@ class Replica:
                 reader.close()
 
 
+def _collect_pool(pool: "ReplicaPool"):
+    """Snapshot-time metric samples for every replica of this pool."""
+    out = []
+    for r in pool.replicas:
+        labels = {"pool": pool.uid, "replica": str(r.rid)}
+        out.append(("counter", "serve_replica_batches_total", labels,
+                    r.batches))
+        out.append(("counter", "serve_replica_queries_total", labels,
+                    r.queries))
+        out.append(("counter", "serve_replica_busy_seconds_total", labels,
+                    r.busy_s))
+        out.append(("gauge", "serve_replica_inflight", labels, r.inflight))
+    return out
+
+
 class ReplicaPool:
     """N replicas behind one `submit(request) -> Future[SearchResponse]`."""
 
@@ -88,6 +118,8 @@ class ReplicaPool:
         self.replicas = replicas
         self._lock = threading.Lock()
         self._rr = 0                       # round-robin cursor for ties
+        self.uid = next_uid()
+        REGISTRY.register_collector(self, _collect_pool)
 
     # -- construction --------------------------------------------------------
 

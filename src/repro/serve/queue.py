@@ -26,6 +26,8 @@ from typing import Any
 
 import numpy as np
 
+from repro.obs.trace import TRACER
+
 __all__ = ["ServeClosed", "PendingQuery", "QueryResult", "RequestQueue"]
 
 
@@ -46,6 +48,9 @@ class PendingQuery:
     seq: int                   # arrival order (global, monotonically rising)
     t_enqueue: float
     t_dispatch: float = 0.0    # stamped by the batcher at flush time
+    trace: Any = None          # root SpanCtx (sampling decided at enqueue);
+                               # the request/queue spans are recorded
+                               # retroactively at scatter time
 
     @property
     def batch_key(self) -> tuple:
@@ -95,7 +100,8 @@ class RequestQueue:
                 raise ServeClosed("queue is shut down; no new requests")
             p = PendingQuery(query=q, k=k, ef=ef, rerank=rerank,
                              with_stats=with_stats, future=Future(),
-                             seq=self._seq, t_enqueue=time.perf_counter())
+                             seq=self._seq, t_enqueue=time.perf_counter(),
+                             trace=TRACER.sample_request())
             self._seq += 1
             self._items.append(p)
             self._cond.notify_all()

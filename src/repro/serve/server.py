@@ -31,20 +31,18 @@ from concurrent.futures import Future
 
 import numpy as np
 
+from repro.obs import export as _export
+from repro.obs.metrics import REGISTRY
+from repro.obs.stats import latency_summary
 from repro.serve.batcher import DynamicBatcher
 from repro.serve.dispatch import ReplicaPool
 from repro.serve.queue import QueryResult, RequestQueue, ServeClosed
 
 __all__ = ["SearchServer", "ServeStats"]
 
-
-def _pct(xs: list[float]) -> dict:
-    if not xs:
-        return {"p50": 0.0, "p99": 0.0, "mean": 0.0}
-    a = np.asarray(xs)
-    return {"p50": float(np.percentile(a, 50)),
-            "p99": float(np.percentile(a, 99)),
-            "mean": float(a.mean())}
+# batch sizes are small powers of two (bucket padding) — histogram bounds
+# to match, not the latency default
+_BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,8 +52,8 @@ class ServeStats:
     completed: int                  # requests resolved
     wall_s: float                   # first enqueue -> last completion
     qps: float
-    queue_ms: dict                  # {"p50", "p99", "mean"}
-    exec_ms: dict
+    queue_ms: dict                  # latency_summary dict:
+    exec_ms: dict                   # {"p50","p99","p999","mean","count"}
     e2e_ms: dict
     batch_sizes: dict               # {real batch size: count} (pre-padding)
     mean_batch: float
@@ -82,6 +80,14 @@ class _Collector:
         self.batch_sizes: Counter = Counter()
         self.t_first: float | None = None   # first enqueue (set by server)
         self.t_last: float | None = None    # last completion
+        # registry instruments (process-wide series — servers aggregate)
+        self._m_requests = REGISTRY.counter("serve_requests_total")
+        self._m_batches = REGISTRY.counter("serve_batches_total")
+        self._m_queue = REGISTRY.histogram("serve_queue_ms")
+        self._m_exec = REGISTRY.histogram("serve_exec_ms")
+        self._m_e2e = REGISTRY.histogram("serve_e2e_ms")
+        self._m_bsz = REGISTRY.histogram("serve_batch_size",
+                                         buckets=_BATCH_BUCKETS)
 
     def mark_enqueue(self, t: float) -> None:
         with self._lock:
@@ -91,6 +97,8 @@ class _Collector:
     def record_batch(self, size: int) -> None:
         with self._lock:
             self.batch_sizes[size] += 1
+        self._m_batches.inc()
+        self._m_bsz.observe(size)
 
     def record_done(self, res: QueryResult, t_done: float) -> None:
         with self._lock:
@@ -99,6 +107,10 @@ class _Collector:
             self.e2e_ms.append(res.e2e_ms)
             self.t_last = (t_done if self.t_last is None
                            else max(self.t_last, t_done))
+        self._m_requests.inc()
+        self._m_queue.observe(res.queue_ms)
+        self._m_exec.observe(res.exec_ms)
+        self._m_e2e.observe(res.e2e_ms)
 
     def rollup(self, replica_stats: list[dict]) -> ServeStats:
         with self._lock:
@@ -112,9 +124,9 @@ class _Collector:
                 completed=completed,
                 wall_s=wall,
                 qps=completed / wall if wall > 0 else 0.0,
-                queue_ms=_pct(self.queue_ms),
-                exec_ms=_pct(self.exec_ms),
-                e2e_ms=_pct(self.e2e_ms),
+                queue_ms=latency_summary(self.queue_ms),
+                exec_ms=latency_summary(self.exec_ms),
+                e2e_ms=latency_summary(self.e2e_ms),
                 batch_sizes=sizes,
                 mean_batch=(completed / n_batches) if n_batches else 0.0,
                 replicas=replica_stats,
@@ -233,6 +245,18 @@ class SearchServer:
 
     def stats(self) -> ServeStats:
         return self._collector.rollup(self.pool.stats())
+
+    def metrics(self, fmt: str = "prometheus") -> str:
+        """Process-wide metrics snapshot (this server's series included),
+        rendered for scraping: fmt='prometheus' (text exposition) or
+        'json'."""
+        snap = REGISTRY.snapshot()
+        if fmt == "prometheus":
+            return _export.to_prometheus(snap)
+        if fmt == "json":
+            return _export.to_json(snap)
+        raise ValueError(f"unknown metrics format {fmt!r}; "
+                         f"use 'prometheus' or 'json'")
 
     def __enter__(self) -> "SearchServer":
         return self

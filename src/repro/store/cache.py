@@ -24,9 +24,31 @@ from __future__ import annotations
 import threading
 from collections import OrderedDict
 
+from repro.obs.metrics import REGISTRY, next_uid
 from repro.store.blockfile import BlockFile
 
 __all__ = ["PageCache"]
+
+
+def _collect_cache(cache: "PageCache"):
+    """Collector samples for the metrics registry (repro.obs): read at
+    snapshot time under the cache's own lock — zero hot-path cost. Every
+    live cache publishes one labeled series per counter; summing the
+    `store_block_reads_total` series over `cache` labels is the paper's
+    Fig. 9 P2P-DMA traffic."""
+    snap = cache.snapshot()
+    labels = {"cache": cache.uid}
+    counters = ("hits", "misses", "prefetch_reads", "prefetch_hits",
+                "evictions", "block_reads", "bytes_read")
+    out = [("counter", f"store_cache_{c}_total" if not c.startswith("b")
+            else f"store_{c}_total", labels, snap[c]) for c in counters]
+    out.append(("gauge", "store_cache_resident_bytes", labels,
+                snap["current_bytes"]))
+    out.append(("gauge", "store_cache_peak_bytes", labels,
+                snap["peak_bytes"]))
+    out.append(("gauge", "store_cache_capacity_bytes", labels,
+                cache.capacity_bytes))
+    return out
 
 
 class PageCache:
@@ -38,6 +60,7 @@ class PageCache:
         self.blockfile = blockfile
         self.capacity_bytes = int(capacity_bytes)
         self.block_size = blockfile.block_size
+        self.uid = next_uid()
         self._lru: OrderedDict[int, bytes] = OrderedDict()
         self._inflight: dict[int, threading.Event] = {}
         self._lock = threading.Lock()
@@ -48,6 +71,7 @@ class PageCache:
         self.evictions = 0
         self.current_bytes = 0
         self.peak_bytes = 0
+        REGISTRY.register_collector(self, _collect_cache)
 
     # -- demand path ---------------------------------------------------------
 

@@ -47,6 +47,7 @@ import numpy as np
 from repro.core.partitioned import (build_partitioned_db, merge_topk,
                                     quantize_db_vectors)
 from repro.core.search import SearchParams, merge_sorted, metric_distance
+from repro.obs.trace import TRACER
 from repro.store.layout import StoreReader, open_store, write_store
 
 if typing.TYPE_CHECKING:  # repro.api imports this module to register the
@@ -221,28 +222,36 @@ def _search_one_partition(reader: StoreReader, p: int, q_pad: jnp.ndarray,
     fin_i = jnp.full((B, EF), -1, jnp.int32).at[:, 0].set(cur)
     hops = jnp.zeros((B,), jnp.int32)
 
+    hop_no = 0
     while True:
         cd_h, fd_h = np.asarray(cand_d), np.asarray(fin_d)
         hops_h = np.asarray(hops)
         active = (cd_h[:, 0] < fd_h[:, -1]) & (hops_h < sp.max_hops)
         if not active.any():
             break
-        pops = np.asarray(cand_i)[:, 0]
-        nbrs = np.full((B, reader.m0_pad), -1, np.int32)
-        if active.any():
-            lanes = np.flatnonzero(active)
-            nbrs[lanes] = reader.read_rows(
-                "l0_nbrs", reader.row("l0_nbrs", p, pops[lanes]))
-        valid = (nbrs >= 0) & active[:, None]
-        was = _visited_test_and_set(bitmap, nbrs, valid)
-        act = valid & ~was
-        vecs, sqs = _gather_vec_sq(reader, p, nbrs, act)
-        cand_d, cand_i, fin_d, fin_i, hops, calcs = _layer0_step(
-            jnp.asarray(active), cand_d, cand_i, fin_d, fin_i, hops, calcs,
-            jnp.asarray(nbrs), jnp.asarray(act),
-            jnp.asarray(vecs), jnp.asarray(sqs), q_pad, qsq, metric)
-        # overlap the next hop's fetches with this round-trip
-        reader.prefetch_next_hop(p, np.asarray(cand_i)[:, :2])
+        with TRACER.child_span("hop", hop=hop_no,
+                               active=int(active.sum())):
+            pops = np.asarray(cand_i)[:, 0]
+            nbrs = np.full((B, reader.m0_pad), -1, np.int32)
+            if active.any():
+                lanes = np.flatnonzero(active)
+                nbrs[lanes] = reader.read_rows(
+                    "l0_nbrs", reader.row("l0_nbrs", p, pops[lanes]))
+            valid = (nbrs >= 0) & active[:, None]
+            was = _visited_test_and_set(bitmap, nbrs, valid)
+            act = valid & ~was
+            vecs, sqs = _gather_vec_sq(reader, p, nbrs, act)
+            # hop-kernel covers only the jitted dispatch — the async device
+            # compute itself overlaps the next hop's host work by design,
+            # so the span is the submit cost, not the device time
+            with TRACER.child_span("hop-kernel"):
+                cand_d, cand_i, fin_d, fin_i, hops, calcs = _layer0_step(
+                    jnp.asarray(active), cand_d, cand_i, fin_d, fin_i, hops,
+                    calcs, jnp.asarray(nbrs), jnp.asarray(act),
+                    jnp.asarray(vecs), jnp.asarray(sqs), q_pad, qsq, metric)
+            # overlap the next hop's fetches with this round-trip
+            reader.prefetch_next_hop(p, np.asarray(cand_i)[:, :2])
+        hop_no += 1
 
     k_i = np.asarray(fin_i)[:, :K]
     k_d = np.asarray(fin_d)[:, :K]
@@ -269,7 +278,8 @@ def store_search(reader: StoreReader, queries, params: SearchParams,
     hops = np.zeros(q.shape[0], np.int64)
     calcs = np.zeros(q.shape[0], np.int64)
     for p in range(reader.num_partitions):
-        gi, gd, h, c = _search_one_partition(reader, p, q_pad, params)
+        with TRACER.child_span("traversal", partition=p):
+            gi, gd, h, c = _search_one_partition(reader, p, q_pad, params)
         per_ids.append(gi)
         per_ds.append(gd)
         hops += h
@@ -347,7 +357,8 @@ class CSDBackend:
         p = self.params(k, ef)
         if rerank:
             cand, _, hops, calcs = store_search(r, queries, p, merge=False)
-            ids, dists = self._rerank_from_store(queries, cand, k)
+            with TRACER.child_span("rerank", pool=int(cand.shape[1])):
+                ids, dists = self._rerank_from_store(queries, cand, k)
         else:
             ids, dists, hops, calcs = store_search(r, queries, p)
             if self.quant is not None:   # code-space -> real-space
@@ -367,6 +378,7 @@ class CSDBackend:
                 dist_calcs=jnp.asarray(calcs, jnp.int32),
                 block_reads=after["block_reads"] - before["block_reads"],
                 cache_hits=after["hits"] - before["hits"],
+                cache_misses=after["misses"] - before["misses"],
                 cache_hit_rate=hit_rate,
                 bytes_read=after["bytes_read"] - before["bytes_read"],
             )

@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.core import hnsw_graph as hg
 from repro.core.partitioned import PartitionedDB
+from repro.obs.trace import TRACER
 from repro.store.blockfile import BlockFile, BlockFileWriter
 from repro.store.cache import PageCache
 from repro.store.prefetch import Prefetcher
@@ -117,10 +118,14 @@ class StoreReader:
         cols, bs = t["cols"], self.block_size
         uniq, inv = np.unique(flat, return_inverse=True)
         need = self.blocks_of_rows(table, uniq)
-        if _get is None:
-            blocks = self.cache.get_many(need)
-        else:
-            blocks = {b: _get(b) for b in need}
+        # child_span: only records under an already-sampled span on this
+        # thread — prefetcher-worker calls (and untraced callers) stay free.
+        with TRACER.child_span("store-read", table=table, rows=len(uniq),
+                               blocks=len(need)):
+            if _get is None:
+                blocks = self.cache.get_many(need)
+            else:
+                blocks = {b: _get(b) for b in need}
         out = np.empty((len(uniq), cols), dtype)
         for j, r in enumerate(uniq):
             start, end = self.blockfile.row_span(table, int(r))

@@ -1,0 +1,536 @@
+"""repro.obs: traces, metrics registry, exporters, shared stats helpers.
+
+The acceptance bars (ISSUE 7):
+
+  * search results are BIT-IDENTICAL with tracing enabled vs disabled —
+    observability reads the hot path, it never steers it;
+  * `latency_summary` reproduces the retired `serve._pct` /
+    `cluster.shard` inline-percentile outputs bit-for-bit, and fixes the
+    empty-sample edge exactly once;
+  * the registry's counters/histograms are exact under N-thread hammering
+    (no lost increments);
+  * spans nest correctly across the batcher's thread handoff
+    (request -> batch -> dispatch -> search on different threads);
+  * the ingest rollup's cache_hit_rate is demand-weighted (the serve/
+    dispatch formula), not an average of per-segment rates;
+  * exporters emit parseable Prometheus text and Chrome/Perfetto JSON.
+"""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs import (
+    DEFAULT_MS_BUCKETS,
+    MetricsRegistry,
+    PeriodicExporter,
+    REGISTRY,
+    TRACER,
+    Tracer,
+    latency_summary,
+    to_json,
+    to_prometheus,
+    write_snapshot,
+)
+from repro.obs.trace import SpanCtx
+
+
+@pytest.fixture
+def tracer():
+    """The global TRACER, enabled for one test and always reset after."""
+    TRACER.configure(enabled=True, sample_rate=1.0)
+    TRACER.clear()
+    yield TRACER
+    TRACER.configure(enabled=False, sample_rate=1.0, max_events=1_000_000)
+    TRACER.clear()
+
+
+# ---------------------------------------------------------------------------
+# latency_summary (satellite: the one percentile helper)
+# ---------------------------------------------------------------------------
+
+
+def _old_serve_pct(xs):
+    """The retired serve/server.py `_pct` — the bit-parity golden."""
+    if not xs:
+        return {"p50": 0.0, "p99": 0.0, "mean": 0.0}
+    a = np.asarray(xs)
+    return {"p50": float(np.percentile(a, 50)),
+            "p99": float(np.percentile(a, 99)),
+            "mean": float(a.mean())}
+
+
+def test_latency_summary_matches_old_serve_pct():
+    rng = np.random.default_rng(7)
+    xs = list(rng.gamma(2.0, 3.0, size=257))
+    old = _old_serve_pct(xs)
+    new = latency_summary(xs)
+    for key in ("p50", "p99", "mean"):
+        assert new[key] == old[key]          # bit-identical, not approx
+    assert new["count"] == len(xs)
+
+
+def test_latency_summary_matches_old_shard_percentiles():
+    """cluster/shard.py used to compute np.percentile(lat, 50/99) on a
+    float64 array of its latency deque — same numbers, exactly."""
+    rng = np.random.default_rng(8)
+    lat = rng.gamma(1.5, 2.0, size=512)
+    arr = np.asarray(lat, np.float64)
+    new = latency_summary(lat)
+    assert new["p50"] == float(np.percentile(arr, 50))
+    assert new["p99"] == float(np.percentile(arr, 99))
+
+
+def test_latency_summary_empty_is_zeros_not_raise():
+    """The once-duplicated edge case: np.percentile raises on empty input;
+    both old call sites guarded it separately, now it is fixed here."""
+    out = latency_summary([])
+    assert out == {"p50": 0.0, "p99": 0.0, "p999": 0.0, "mean": 0.0,
+                   "count": 0}
+    out = latency_summary(np.zeros(0))
+    assert out["count"] == 0
+
+
+def test_latency_summary_accepts_any_arraylike():
+    from collections import deque
+    assert latency_summary(deque([3.0, 1.0, 2.0]))["p50"] == 2.0
+    assert latency_summary((5.0,))["p999"] == 5.0
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_exact_under_concurrency():
+    reg = MetricsRegistry()
+    c = reg.counter("test_hammer_total")
+    n_threads, per = 8, 5000
+
+    def hammer():
+        for _ in range(per):
+            c.inc()
+
+    ts = [threading.Thread(target=hammer) for _ in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert c.value == n_threads * per      # not one increment lost
+
+
+def test_histogram_exact_under_concurrency():
+    reg = MetricsRegistry()
+    h = reg.histogram("test_lat_ms")
+    n_threads, per = 8, 2000
+    values = [0.2, 3.0, 40.0, 9000.0]      # spread over distinct buckets
+
+    def hammer(seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(per):
+            h.observe(values[rng.integers(0, len(values))])
+
+    ts = [threading.Thread(target=hammer, args=(i,)) for i in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    snap = h.snapshot()
+    assert snap["count"] == n_threads * per
+    # cumulative buckets are monotone and top out at the total count
+    cums = [c for _, c in snap["buckets"]]
+    assert cums == sorted(cums)
+    assert cums[-1] == n_threads * per
+    assert snap["buckets"][-1][0] == float("inf")
+
+
+def test_registry_get_or_create_by_name_and_labels():
+    reg = MetricsRegistry()
+    a = reg.counter("x_total", shard="a")
+    b = reg.counter("x_total", shard="b")
+    assert a is reg.counter("x_total", shard="a")
+    assert a is not b
+    a.inc(3)
+    snap = reg.snapshot()
+    series = {tuple(sorted(s["labels"].items())): s["value"]
+              for s in snap["counters"]}
+    assert series[(("shard", "a"),)] == 3
+    assert series[(("shard", "b"),)] == 0
+
+
+def test_counter_rejects_negative():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError, match="cannot decrease"):
+        reg.counter("y_total").inc(-1)
+
+
+def test_collector_weakref_lifecycle():
+    """A registered collector publishes while its owner lives and silently
+    drops from the snapshot when the owner is garbage collected."""
+    import gc
+
+    class Owner:
+        hits = 42
+
+    reg = MetricsRegistry()
+    o = Owner()
+    reg.register_collector(
+        o, lambda x: [("counter", "owner_hits_total", {}, x.hits)])
+    names = [s["name"] for s in reg.snapshot()["counters"]]
+    assert "owner_hits_total" in names
+    del o
+    gc.collect()
+    names = [s["name"] for s in reg.snapshot()["counters"]]
+    assert "owner_hits_total" not in names
+
+
+def test_pagecache_publishes_into_registry(tmp_path):
+    """Every live PageCache is one labeled series set in the global
+    REGISTRY snapshot — its counters match `snapshot()` exactly."""
+    from repro.store.blockfile import BlockFileWriter
+    from repro.store.layout import open_store
+
+    path = str(tmp_path / "store")
+    w = BlockFileWriter(path, block_size=512)
+    w.add_table("vectors", np.arange(64 * 8, dtype=np.float32).reshape(64, 8))
+    w.finalize({"num_partitions": 1, "n_pad": 64, "d_pad": 8, "m0_pad": 4,
+                "n_layers": 1, "up_pad": 4, "m_pad": 4, "dim": 8,
+                "entry": 0, "max_level": 0, "n_valid": 64,
+                "partition_starts": [0]})
+    reader = open_store(path, cache_bytes=4096, prefetch=False)
+    reader.read_rows("vectors", np.arange(32))
+    snap = reader.cache.snapshot()
+    uid = reader.cache.uid
+    series = {s["name"]: s["value"]
+              for s in REGISTRY.snapshot()["counters"]
+              if s["labels"].get("cache") == uid}
+    assert series["store_block_reads_total"] == snap["block_reads"]
+    assert series["store_cache_hits_total"] == snap["hits"]
+    assert series["store_cache_misses_total"] == snap["misses"]
+    assert series["store_bytes_read_total"] == snap["bytes_read"]
+    reader.close()
+
+
+# ---------------------------------------------------------------------------
+# tracer mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_tracer_records_nothing():
+    t = Tracer(enabled=False)
+    with t.span("a"):
+        with t.child_span("b"):
+            pass
+    assert t.spans() == []
+    assert t.current_ctx() is None
+    assert t.sample_request() is None
+
+
+def test_disabled_span_is_shared_noop():
+    """span() with tracing off returns one shared object — no per-call
+    allocation on the disabled hot path."""
+    t = Tracer(enabled=False)
+    assert t.span("a") is t.span("b") is t.child_span("c")
+
+
+def test_sample_rate_zero_records_nothing():
+    t = Tracer(enabled=True, sample_rate=0.0)
+    with t.span("root"):
+        with t.span("child"):
+            pass
+    assert t.spans() == []
+    ctx = t.sample_request()
+    assert ctx is not None and not ctx.sampled
+
+
+def test_nesting_same_thread(tracer):
+    with tracer.span("root") as r:
+        with tracer.span("mid") as m:
+            with tracer.child_span("leaf"):
+                pass
+    spans = {s["name"]: s for s in tracer.spans()}
+    assert spans["mid"]["parent"] == r.span_id
+    assert spans["leaf"]["parent"] == m.span_id
+    assert spans["leaf"]["trace"] == spans["root"]["trace"]
+    assert spans["root"]["parent"] == 0
+
+
+def test_child_span_never_roots(tracer):
+    """child_span on a thread with no open span is a no-op — background
+    workers (prefetcher, health probes) cannot create stray traces."""
+    with tracer.child_span("orphan"):
+        pass
+    assert tracer.spans() == []
+
+
+def test_explicit_parent_across_threads(tracer):
+    """The batcher handoff pattern: a ctx minted on one thread parents a
+    span entered on another."""
+    with tracer.span("root") as r:
+        ctx = r.ctx
+    out = {}
+
+    def worker():
+        with tracer.span("remote", parent=ctx) as sp:
+            out["id"] = sp.span_id
+
+    th = threading.Thread(target=worker)
+    th.start()
+    th.join()
+    spans = {s["name"]: s for s in tracer.spans()}
+    assert spans["remote"]["parent"] == r.span_id
+    assert spans["remote"]["trace"] == spans["root"]["trace"]
+
+
+def test_ctx_wire_roundtrip():
+    ctx = SpanCtx(5, 9, 2, True)
+    w = json.loads(json.dumps(ctx.wire()))    # must be JSON-encodable
+    back = SpanCtx.from_wire(w)
+    assert (back.trace_id, back.span_id, back.sampled) == (5, 9, True)
+
+
+def test_retroactive_record_span(tracer):
+    root = tracer.sample_request()
+    tracer.record_span("request", 1.0, 3.0, ctx=root, tid="lane")
+    tracer.record_span("queue", 1.0, 2.0, parent=root, tid="lane")
+    spans = {s["name"]: s for s in tracer.spans()}
+    assert spans["queue"]["parent"] == root.span_id
+    assert spans["request"]["t1"] == 3.0
+    assert spans["request"]["tid"] == "lane"
+
+
+def test_max_events_bounds_memory(tracer):
+    tracer.configure(max_events=5)
+    for i in range(9):
+        with tracer.span(f"s{i}"):
+            pass
+    assert len(tracer.spans()) == 5
+    assert tracer.dropped == 4
+    tracer.configure(max_events=1_000_000)
+
+
+def test_chrome_export_loads(tracer):
+    with tracer.span("a", key="v"):
+        with tracer.child_span("b"):
+            pass
+    doc = json.loads(json.dumps(tracer.export()))
+    events = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    metas = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert {e["name"] for e in events} == {"a", "b"}
+    assert any(m["name"] == "thread_name" for m in metas)
+    for e in events:
+        assert e["dur"] >= 0 and "span_id" in e["args"]
+    a = next(e for e in events if e["name"] == "a")
+    assert a["args"]["key"] == "v"
+
+
+# ---------------------------------------------------------------------------
+# spans across the serve stack (batcher thread handoff)
+# ---------------------------------------------------------------------------
+
+
+def test_spans_nest_across_batcher_handoff(tracer, backend_zoo):
+    """request -> queue/exec (queue thread, retroactive), batch (batcher
+    thread), dispatch (replica thread), search (same) — all one tree."""
+    from repro.serve import SearchServer
+
+    svc = backend_zoo.service("partitioned", "l2")
+    q = backend_zoo.queries()
+    with SearchServer(svc, replicas=2, max_batch=4, max_wait_ms=1.0) as srv:
+        futs = [srv.submit(x, k=5, ef=40) for x in q[:8]]
+        [f.result(timeout=60) for f in futs]
+        srv.drain()
+    spans = tracer.spans()
+    by_id = {s["id"]: s for s in spans}
+    names = {s["name"] for s in spans}
+    assert {"request", "queue", "exec", "batch", "dispatch",
+            "search"} <= names
+    n_request = 0
+    for s in spans:
+        parent = by_id.get(s["parent"])
+        if s["name"] == "request":
+            n_request += 1
+            assert s["parent"] == 0                      # a root
+        elif s["name"] in ("queue", "exec"):
+            assert parent["name"] == "request"
+        elif s["name"] == "batch":
+            assert parent["name"] == "request"
+        elif s["name"] == "dispatch":
+            assert parent["name"] == "batch"
+        elif s["name"] == "search":
+            assert parent["name"] == "dispatch"
+        if s["name"] != "request" and parent is not None:
+            assert s["trace"] == parent["trace"]         # one trace id
+    assert n_request == 8                                # every request
+
+
+def test_csd_results_bit_identical_traced_vs_untraced(backend_zoo):
+    """Tracing must not change a single output bit (csd backend: spans
+    wrap store reads, hops, kernels — the full Fig. 4 dataflow)."""
+    from repro.api import SearchRequest
+
+    svc = backend_zoo.service("csd", "l2")
+    q = backend_zoo.queries()
+    req = SearchRequest(queries=q, k=10, ef=40)
+    TRACER.configure(enabled=False)
+    base = svc.search(req)
+    try:
+        TRACER.configure(enabled=True, sample_rate=1.0)
+        TRACER.clear()
+        traced = svc.search(req)
+        assert len(TRACER.spans()) > 0          # it really traced
+    finally:
+        TRACER.configure(enabled=False)
+        TRACER.clear()
+    np.testing.assert_array_equal(np.asarray(base.ids),
+                                  np.asarray(traced.ids))
+    np.testing.assert_array_equal(np.asarray(base.dists),
+                                  np.asarray(traced.dists))
+
+
+# ---------------------------------------------------------------------------
+# ingest demand-weighted hit rate (satellite regression test)
+# ---------------------------------------------------------------------------
+
+
+def test_ingest_cache_hit_rate_demand_weighted(tmp_path):
+    """The rollup must be hits/(hits+misses) over SUMMED counters — the
+    serve/dispatch formula — not a per-segment average. Regression: the
+    pre-obs rollup never set cache_hit_rate at all."""
+    from repro.api import IndexSpec, MutableSearchService, SearchRequest
+
+    spec = IndexSpec(backend="csd", num_partitions=1,
+                     storage_path=str(tmp_path / "store"),
+                     cache_bytes=1 << 20)
+    svc = MutableSearchService(spec, seal_threshold=400)
+    rng = np.random.default_rng(3)
+    svc.insert(rng.normal(size=(800, 32)).astype(np.float32))
+    svc.flush()                                  # two sealed segments
+    assert svc.num_segments == 2
+    q = rng.normal(size=(4, 32)).astype(np.float32)
+    stats = svc.search(SearchRequest(queries=q, k=5, ef=40,
+                                     with_stats=True)).stats
+    assert stats.cache_hits is not None and stats.cache_misses is not None
+    demand = stats.cache_hits + stats.cache_misses
+    assert demand > 0
+    assert stats.cache_hit_rate == stats.cache_hits / demand
+    # the per-segment rows carry both counters, so the aggregate above is
+    # exactly reconstructible from them
+    seg_rows = [s for s in stats.segments if s["segment"] != "memtable"]
+    assert sum(s["cache_hits"] for s in seg_rows) == stats.cache_hits
+    assert sum(s["cache_misses"] for s in seg_rows) == stats.cache_misses
+    svc.close()
+
+
+def test_cluster_roll_stats_demand_weighted():
+    """Router-side aggregation uses the same summed-counter formula."""
+    from repro.cluster.router import ClusterRouter
+
+    resps = [{"cache_hits": 90, "cache_misses": 10},
+             {"cache_hits": 0, "cache_misses": 100}]
+    stats = ClusterRouter._roll_stats(None, resps)
+    # 90 hits of 200 demand accesses = 0.45; a rate average would say 0.45
+    # only by luck of equal demand — here demand differs: mean of rates
+    # would be (0.9 + 0.0)/2 = 0.45 too, so pick asymmetric demand:
+    resps = [{"cache_hits": 9, "cache_misses": 1},       # 10 demand, 0.9
+             {"cache_hits": 0, "cache_misses": 990}]     # 990 demand, 0.0
+    stats = ClusterRouter._roll_stats(None, resps)
+    assert stats.cache_hit_rate == 9 / 1000              # not (0.9+0)/2
+    assert stats.cache_hits == 9 and stats.cache_misses == 991
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+
+def _tiny_registry():
+    reg = MetricsRegistry()
+    reg.counter("reads_total", table="vectors").inc(7)
+    reg.gauge("resident_bytes").set(123.0)
+    h = reg.histogram("lat_ms", buckets=(1.0, 10.0))
+    h.observe(0.5)
+    h.observe(5.0)
+    h.observe(50.0)
+    return reg
+
+
+def test_prometheus_exposition_parses():
+    text = to_prometheus(_tiny_registry().snapshot())
+    lines = [ln for ln in text.strip().splitlines()]
+    types = {ln.split()[2]: ln.split()[3]
+             for ln in lines if ln.startswith("# TYPE")}
+    assert types == {"reads_total": "counter", "resident_bytes": "gauge",
+                     "lat_ms": "histogram"}
+    samples = {}
+    for ln in lines:
+        if ln.startswith("#"):
+            continue
+        name, value = ln.rsplit(" ", 1)
+        samples[name] = value
+    assert samples['reads_total{table="vectors"}'] == "7"
+    assert samples["resident_bytes"] == "123"
+    assert samples['lat_ms_bucket{le="1"}'] == "1"
+    assert samples['lat_ms_bucket{le="10"}'] == "2"
+    assert samples['lat_ms_bucket{le="+Inf"}'] == "3"
+    assert samples["lat_ms_count"] == "3"
+    assert float(samples["lat_ms_sum"]) == 55.5
+
+
+def test_prometheus_label_escaping():
+    reg = MetricsRegistry()
+    reg.counter("c_total", path='a"b\\c\nd').inc()
+    text = to_prometheus(reg.snapshot())
+    assert '\\"' in text and "\\\\" in text and "\\n" in text
+
+
+def test_json_snapshot_roundtrips():
+    doc = json.loads(to_json(_tiny_registry().snapshot()))
+    assert doc["ts_unix"] > 0
+    assert doc["counters"][0]["value"] == 7
+    assert doc["histograms"][0]["count"] == 3
+
+
+def test_write_snapshot_format_by_extension(tmp_path):
+    reg = _tiny_registry()
+    jp = write_snapshot(str(tmp_path / "m.json"), reg)
+    with open(jp) as f:
+        assert json.load(f)["gauges"][0]["value"] == 123.0
+    pp = write_snapshot(str(tmp_path / "m.prom"), reg)
+    with open(pp) as f:
+        assert "# TYPE reads_total counter" in f.read()
+
+
+def test_periodic_exporter_emits_and_final_snapshot(tmp_path):
+    reg = _tiny_registry()
+    path = str(tmp_path / "metrics.prom")
+    with PeriodicExporter(path, interval_s=0.05, registry=reg) as ex:
+        reg.counter("reads_total", table="vectors").inc(100)
+        deadline = 100
+        while ex.emits < 2 and deadline:
+            threading.Event().wait(0.02)
+            deadline -= 1
+    with open(path) as f:
+        text = f.read()
+    assert 'reads_total{table="vectors"} 107' in text   # final emit on stop
+    assert ex.emits >= 2
+
+
+def test_server_metrics_endpoint(backend_zoo):
+    from repro.serve import SearchServer
+
+    svc = backend_zoo.service("partitioned", "l2")
+    q = backend_zoo.queries()
+    with SearchServer(svc, replicas=1, max_batch=4, max_wait_ms=1.0) as srv:
+        [f.result(timeout=60) for f in
+         [srv.submit(x, k=5, ef=40) for x in q[:4]]]
+        prom = srv.metrics()
+        js = srv.metrics("json")
+    assert "# TYPE serve_requests_total counter" in prom
+    assert "serve_e2e_ms_bucket" in prom
+    doc = json.loads(js)
+    assert any(s["name"] == "serve_batch_size" for s in doc["histograms"])
+    with pytest.raises(ValueError, match="unknown metrics format"):
+        srv.metrics("xml")
