@@ -167,7 +167,8 @@ class PartitionedBackend:
         return cls(spec, pdb, raw=vectors if spec.keep_vectors else None)
 
     def params(self, k: int, ef: int) -> SearchParams:
-        return SearchParams(ef=ef, k=k, metric=self.spec.metric)
+        return SearchParams(ef=ef, k=k, metric=self.spec.metric,
+                            fused_hops=self.spec.fused_hops)
 
     def search(self, queries, k: int, ef: int, rerank: bool,
                with_stats: bool):
@@ -250,6 +251,11 @@ class DistributedBackend(PartitionedBackend):
         pdb = shard_db(pdb, mesh)
         return cls(spec, pdb, mesh,
                    raw=vectors if spec.keep_vectors else None)
+
+    def params(self, k: int, ef: int) -> SearchParams:
+        # the fused Pallas traversal is not wired through shard_map — the
+        # distributed engine always runs the hop-stepped lockstep path
+        return SearchParams(ef=ef, k=k, metric=self.spec.metric)
 
     def _fn(self, k: int, ef: int, merge: bool = True):
         key = (k, ef, merge)

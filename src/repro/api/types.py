@@ -63,6 +63,13 @@ class IndexSpec:
               in front of NAND). Peak resident store memory is bounded by
               this, not by the dataset size.
     prefetch : `csd` only — run the async next-hop prefetcher thread.
+    fused_hops : layer-0 hops per kernel invocation / host superstep
+              (SearchParams.fused_hops). 1 = the legacy hop-stepped path;
+              >1 switches the in-memory graph backends to the fused Pallas
+              traversal kernel and the csd backend to speculative H-hop
+              supersteps (one host sync + one jitted dispatch per
+              superstep). Bit-identical results at every value; rides the
+              manifest so a saved index keeps its tuning.
     """
 
     metric: str = "l2"
@@ -77,6 +84,7 @@ class IndexSpec:
     dtype: str = "float32"
     qscale: float | None = None
     qzero: int | None = None
+    fused_hops: int = 1
 
     def quantizer(self):
         """The fitted VectorQuantizer, or None for the float32 path."""
@@ -149,6 +157,11 @@ class QueryStats:
                                 # (ingest segments, cluster shards) needs
     cache_hit_rate: Any = None  # scalar in [0, 1]
     bytes_read: Any = None      # scalar: block_reads * block_size
+    supersteps: Any = None      # scalar (csd): host-sync'd traversal steps —
+                                # one per hop on the legacy path, one per
+                                # fused_hops-hop superstep on the fused path
+                                # (the per-hop round-trip the fused kernel
+                                # amortizes; compare against sum(hops))
     segments: Any = None        # mutable index only: per-segment stat dicts
                                 # ({segment, n, hops, dist_calcs, ...}) —
                                 # per-request, like the storage counters

@@ -296,8 +296,8 @@ def _stage1_candidates(service, queries, k: int, ef: int):
     p = SearchParams(ef=ef, k=k, metric=service.spec.metric)
     if hasattr(backend, "reader"):                       # csd
         from repro.store.csd import store_search
-        cand, _, hops, calcs = store_search(backend.reader, queries, p,
-                                            merge=False)
+        cand, _, hops, calcs, _ = store_search(backend.reader, queries, p,
+                                               merge=False)
         return (np.asarray(cand),
                 {"hops": np.asarray(hops, np.int64),
                  "dist_calcs": np.asarray(calcs, np.int64)})

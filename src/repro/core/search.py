@@ -45,12 +45,23 @@ from repro.core.hnsw_graph import DeviceDB
 __all__ = [
     "SearchParams",
     "SearchStats",
+    "bitmap_words",
     "merge_sorted",
     "metric_distance",
     "visited_test_and_set",
     "search_one",
     "batch_search",
 ]
+
+
+def bitmap_words(n: int) -> int:
+    """uint32 words needed for an n-bit visited bitmap: ceil(n / 32).
+
+    Floor division here was a real bug: with n % 32 != 0 the last partial
+    word was never allocated, so test-and-set on the tail ids indexed past
+    the bitmap (JAX clamps the gather/scatter to the last word — tail ids
+    silently aliased onto bits 0..31 of the wrong word)."""
+    return (n + 31) // 32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +82,13 @@ class SearchParams:
     max_hops: int = 0         # 0 -> resolved to 4*ef + 16
     upper_hops: int = 32      # per-layer greedy budget in upper layers
     metric: str = "l2"
+    # layer-0 hops executed per kernel invocation / per host superstep.
+    # 1 = the legacy hop-stepped lockstep path; >1 switches the in-memory
+    # backends to the fused Pallas traversal kernel (kernels/traversal.py)
+    # and the csd backend to speculative H-hop supersteps (one host sync
+    # and one batched store read per superstep). Results are bit-identical
+    # at every value — this knob trades work per dispatch for round-trips.
+    fused_hops: int = 1
 
     def resolve(self, maxM0: int) -> "SearchParams":
         cand = self.cand_size or (self.ef + maxM0)
@@ -145,7 +163,13 @@ def _batch_distances(db: DeviceDB, q, qsq, ids, valid, metric: str = "l2"):
     """
     safe = jnp.where(valid, ids, 0)
     vecs = db.vectors[safe].astype(jnp.float32)  # [M, D_pad] (codes -> f32)
-    d = metric_distance(metric, vecs @ q, db.sqnorms[safe], qsq)
+    # mul+sum instead of `vecs @ q`: XLA compiles a matvec with a
+    # context-dependent reduction order (gather-fused vs pre-gathered vs
+    # Pallas-interpreted give last-ulp-different sums), while an explicit
+    # elementwise product + axis reduction is bitwise-stable across every
+    # context we run in — the property the fused-kernel parity matrix pins.
+    d = metric_distance(metric, jnp.sum(vecs * q, axis=-1),
+                        db.sqnorms[safe], qsq)
     return jnp.where(valid, d, jnp.inf), safe
 
 
@@ -158,7 +182,8 @@ def _greedy_upper(db: DeviceDB, q, qsq, p: SearchParams):
     """Descend from db.max_level to layer 1, returning the layer-0 entry."""
     ep = db.entry.astype(jnp.int32)
     ep_vec = db.vectors[ep].astype(jnp.float32)
-    ep_d = metric_distance(p.metric, ep_vec @ q, db.sqnorms[ep], qsq)
+    ep_d = metric_distance(p.metric, jnp.sum(ep_vec * q, axis=-1),
+                           db.sqnorms[ep], qsq)
     n_layers = db.up_nbrs.shape[0]               # static cap - 1
 
     def layer_body(i, carry):
@@ -205,7 +230,7 @@ def _greedy_upper(db: DeviceDB, q, qsq, p: SearchParams):
 
 
 def _search_layer0(db: DeviceDB, q, qsq, ep, ep_d, p: SearchParams):
-    n_words = db.vectors.shape[0] // 32
+    n_words = bitmap_words(db.vectors.shape[0])
     C, EF = p.cand_size, p.ef
 
     visited = jnp.zeros((n_words,), jnp.uint32)
@@ -258,6 +283,51 @@ def _search_layer0(db: DeviceDB, q, qsq, ep, ep_d, p: SearchParams):
 
 
 # ---------------------------------------------------------------------------
+# Layer 0, fused: H hops per kernel invocation (paper §5.2, Fig. 6)
+# ---------------------------------------------------------------------------
+
+
+def _search_layer0_fused(db: DeviceDB, queries, qsq, ep, ep_d,
+                         p: SearchParams):
+    """Batched layer-0 beam search driven by the fused multi-hop Pallas
+    kernel: the `lax.while_loop` body executes `p.fused_hops` hops per
+    invocation with the beam state resident in VMEM (kernels/traversal.py),
+    instead of one hop of small ops. Bit-identical to the vmapped
+    `_search_layer0` — same merge semantics, same per-lane hop guard, same
+    hops/dist_calcs accounting."""
+    from repro.kernels.ops import fused_layer0   # lazy: kernels -> core is
+                                                 # the only allowed direction
+    B = queries.shape[0]
+    n_words = bitmap_words(db.vectors.shape[0])
+    C, EF = p.cand_size, p.ef
+
+    visited = jnp.zeros((B, n_words), jnp.uint32)
+    _, visited = jax.vmap(visited_test_and_set)(
+        visited, ep[:, None], jnp.ones((B, 1), jnp.bool_))
+    cand_d = jnp.full((B, C), jnp.inf).at[:, 0].set(ep_d)
+    cand_i = jnp.full((B, C), -1, jnp.int32).at[:, 0].set(ep)
+    fin_d = jnp.full((B, EF), jnp.inf).at[:, 0].set(ep_d)
+    fin_i = jnp.full((B, EF), -1, jnp.int32).at[:, 0].set(ep)
+
+    def cond(s):
+        cand_d, _, fin_d, _, _, hops, _ = s
+        return jnp.any((cand_d[:, 0] < fin_d[:, -1]) & (hops < p.max_hops))
+
+    def body(s):
+        cand_d, cand_i, fin_d, fin_i, visited, hops, calcs = s
+        return fused_layer0(
+            db.vectors, db.sqnorms, db.l0_nbrs, queries, qsq,
+            cand_d, cand_i, fin_d, fin_i, visited, hops, calcs,
+            fused_hops=p.fused_hops, max_hops=p.max_hops, metric=p.metric)
+
+    s0 = (cand_d, cand_i, fin_d, fin_i, visited,
+          jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32))
+    cand_d, cand_i, fin_d, fin_i, visited, hops, calcs = jax.lax.while_loop(
+        cond, body, s0)
+    return fin_d, fin_i, hops, calcs
+
+
+# ---------------------------------------------------------------------------
 # Public API
 # ---------------------------------------------------------------------------
 
@@ -278,9 +348,26 @@ def search_one(db: DeviceDB, q, p: SearchParams):
 
 @functools.partial(jax.jit, static_argnames=("p",))
 def batch_search(db: DeviceDB, queries, p: SearchParams):
-    """Multi-query search (paper §5.1.3): lockstep-masked vmap."""
+    """Multi-query search (paper §5.1.3): lockstep-masked vmap.
+
+    `p.fused_hops > 1` swaps the layer-0 stage for the fused multi-hop
+    Pallas kernel (H hops per invocation, beam state in VMEM); the upper
+    layers and the k-extraction are shared, and results stay bit-identical
+    to the hop-stepped path."""
     p = p.resolve(db.l0_nbrs.shape[1])
     d_pad = db.vectors.shape[-1]
     if queries.shape[-1] < d_pad:  # zero-pad to the lane-aligned raw-data table
         queries = jnp.pad(queries, ((0, 0), (0, d_pad - queries.shape[-1])))
-    return jax.vmap(lambda q: search_one(db, q, p))(queries)
+    if p.fused_hops <= 1:
+        return jax.vmap(lambda q: search_one(db, q, p))(queries)
+    queries = queries.astype(jnp.float32)
+    # same per-query ops as search_one, vmapped — not an einsum, so the
+    # reduction order (and thus every distance bit) matches the legacy path
+    qsq = jax.vmap(lambda q: q @ q)(queries)
+    ep, ep_d, up_calcs = jax.vmap(
+        lambda q, qs: _greedy_upper(db, q, qs, p))(queries, qsq)
+    fin_d, fin_i, hops, calcs = _search_layer0_fused(
+        db, queries, qsq, ep, ep_d, p)
+    k_d, k_i = fin_d[:, : p.k], fin_i[:, : p.k]
+    k_g = jnp.where(k_i >= 0, db.gids[jnp.maximum(k_i, 0)], -1)
+    return k_g, k_d, SearchStats(hops, calcs + up_calcs)

@@ -21,9 +21,10 @@ from repro.kernels.l2topk import l2topk_pallas
 from repro.kernels.attention import flash_attention_pallas
 from repro.kernels.qdist import l2dist_q_pallas, l2topk_q_pallas
 from repro.kernels.topk import topk_pallas
+from repro.kernels.traversal import fused_traversal_pallas
 
 __all__ = ["l2dist", "topk", "l2topk", "l2dist_q", "l2topk_q",
-           "flash_attention", "default_interpret"]
+           "flash_attention", "fused_layer0", "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -150,6 +151,27 @@ def l2topk_q(queries, xs, xsq=None, *, k=10, block_q=128, block_x=1024,
         interpret=interpret, out_scale=out_scale,
     )
     return v[:bq], i[:bq]
+
+
+def fused_layer0(vectors, sqnorms, l0_nbrs, queries, qsq,
+                 cand_d, cand_i, fin_d, fin_i, visited, hops, calcs, *,
+                 fused_hops: int, max_hops: int, metric="l2",
+                 interpret=None):
+    """One H-hop superstep of the fused layer-0 traversal over the whole
+    query batch (kernels/traversal.py — the paper's Fig. 6 engine).
+
+    Unlike the other wrappers, no padding happens here: the restructured
+    DB's tables (hnsw_graph.restructure) are already lane-aligned, and the
+    beam-state shapes come from SearchParams.resolve. The wrapper exists
+    for the interpret dispatch (CPU containers run the kernel body exactly;
+    TPU runs the Mosaic lowering) and is called from inside batch_search's
+    jit, so it does not re-jit."""
+    interpret = default_interpret() if interpret is None else interpret
+    return fused_traversal_pallas(
+        vectors, sqnorms, l0_nbrs, queries, qsq,
+        cand_d, cand_i, fin_d, fin_i, visited, hops, calcs,
+        fused_hops=fused_hops, max_hops=max_hops, metric=metric,
+        interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",

@@ -46,7 +46,9 @@ import numpy as np
 
 from repro.core.partitioned import (build_partitioned_db, merge_topk,
                                     quantize_db_vectors)
-from repro.core.search import SearchParams, merge_sorted, metric_distance
+from repro.core.search import (SearchParams, bitmap_words, merge_sorted,
+                               metric_distance)
+from repro.obs.metrics import REGISTRY
 from repro.obs.trace import TRACER
 from repro.store.layout import StoreReader, open_store, write_store
 
@@ -69,7 +71,8 @@ def _query_prep(q, ep_vec, ep_sq, metric):
     """qsq per query + distance to the partition entry point."""
     def one(qq):
         qsq = qq @ qq
-        ep_d = metric_distance(metric, ep_vec @ qq, ep_sq, qsq)
+        ep_d = metric_distance(metric, jnp.sum(ep_vec * qq, axis=-1),
+                               ep_sq, qsq)
         return qsq, ep_d
     return jax.vmap(one)(q)
 
@@ -79,7 +82,7 @@ def _upper_step(improved, c, c_d, calcs, nbrs, valid, vecs, sqs, q, qsq,
                 metric):
     """One lockstep greedy hop in an upper layer (cf. _greedy_upper)."""
     def one(improved, c, c_d, calcs, nbrs, valid, vecs, sqs, qq, qsq):
-        d = metric_distance(metric, vecs @ qq, sqs, qsq)
+        d = metric_distance(metric, jnp.sum(vecs * qq, axis=-1), sqs, qsq)
         d = jnp.where(valid, d, jnp.inf)
         safe = jnp.where(valid, nbrs, 0)
         j = jnp.argmin(d)
@@ -110,7 +113,9 @@ def _layer0_step(active, cand_d, cand_i, fin_d, fin_i, hops, calcs,
             nbrs, act, vecs, sqs, qq, qsq):
         ncand_d = jnp.roll(cand_d, -1).at[-1].set(jnp.inf)
         ncand_i = jnp.roll(cand_i, -1).at[-1].set(-1)
-        d = metric_distance(metric, vecs @ qq, sqs, qsq)
+        # mul+sum matches core/search.py's _batch_distances bit for bit —
+        # see the note there on matvec reduction-order instability
+        d = metric_distance(metric, jnp.sum(vecs * qq, axis=-1), sqs, qsq)
         d = jnp.where(act, d, jnp.inf)
         ncalcs = calcs + jnp.sum(act)
         d = jnp.where(d < fin_d[-1], d, jnp.inf)
@@ -129,6 +134,85 @@ def _layer0_step(active, cand_d, cand_i, fin_d, fin_i, hops, calcs,
                          nbrs, act, vecs, sqs, q, qsq)
 
 
+@functools.partial(jax.jit, static_argnames=("metric", "max_hops"))
+def _layer0_superstep(cand_d, cand_i, fin_d, fin_i, hops, calcs,
+                      spec, nbrs, act, vecs, sqs, q, qsq, metric,
+                      max_hops):
+    """Replay up to H speculated beam hops in ONE dispatch (cf. the per-hop
+    `_layer0_step`) — the csd half of the fused traversal (paper Fig. 6).
+
+    The host plans a whole superstep ahead of time: it simulates the pop
+    sequence in numpy, performs the visited test-and-set and the batched
+    store reads for all H hops, and hands the kernel per-hop tiles
+    (`spec[h]` = predicted pop, -1 where the simulation saw the lane
+    terminate; `nbrs/act/vecs/sqs[h]` = that hop's neighbor row, unvisited
+    mask, and gathered rows). The kernel *validates* each hop before
+    applying it: hop h of a lane counts only while every prior hop
+    matched, the lane is live by the device-state termination test, and
+    the device candidate head equals the speculated pop. The visited
+    evolution (hence `act` and the tiles) depends only on the pop
+    sequence, never on distance values, so a validated hop is bit-exact —
+    the arithmetic here is the same mul+sum / stable-argsort /
+    `merge_sorted` as the hop-stepped kernel. Hop 0 is planned from synced
+    device state, so every active lane advances at least one hop per
+    superstep; the rare ulp-level mispredictions (numpy's reduction vs
+    XLA's flipping a near-tie) stop the replay early and the host rolls
+    the speculation back. Returns the per-lane count of applied hops so
+    the host can do exactly that."""
+    H = spec.shape[-1]
+    EF = fin_d.shape[-1]
+    C = cand_d.shape[-1]
+
+    def one(cand_d, cand_i, fin_d, fin_i, hops, calcs,
+            spec, nbrs, act, vecs, sqs, qq, qsq):
+        ok = jnp.bool_(True)
+        applied = jnp.int32(0)
+        for h in range(H):                       # static unroll
+            live = (cand_d[0] < fin_d[-1]) & (hops < max_hops)
+            sim_live = spec[h] >= 0
+            match = live & sim_live & (cand_i[0] == spec[h])
+            app = ok & match
+            # a terminated lane the simulation also saw terminate stays
+            # valid (frozen); any live/spec disagreement ends the replay
+            ok = ok & (match | (~live & ~sim_live))
+            ncand_d = jnp.roll(cand_d, -1).at[-1].set(jnp.inf)
+            ncand_i = jnp.roll(cand_i, -1).at[-1].set(-1)
+            d = metric_distance(metric, jnp.sum(vecs[h] * qq, axis=-1),
+                                sqs[h], qsq)
+            d = jnp.where(act[h], d, jnp.inf)
+            ncalcs = calcs + jnp.sum(act[h])
+            d = jnp.where(d < fin_d[-1], d, jnp.inf)
+            safe = jnp.where(act[h], nbrs[h], 0)
+            ids = jnp.where(jnp.isfinite(d), safe, -1)
+            order = jnp.argsort(d, stable=True)
+            bd, bi = d[order], ids[order]
+            fd, fi = merge_sorted(fin_d, fin_i, bd, bi)
+            cd, ci = merge_sorted(ncand_d, ncand_i, bd, bi)
+            sel = lambda n, o: jnp.where(app, n, o)
+            cand_d, cand_i = sel(cd[:C], cand_d), sel(ci[:C], cand_i)
+            fin_d, fin_i = sel(fd[:EF], fin_d), sel(fi[:EF], fin_i)
+            hops = hops + app.astype(hops.dtype)
+            calcs = sel(ncalcs, calcs)
+            applied = applied + app.astype(jnp.int32)
+        return cand_d, cand_i, fin_d, fin_i, hops, calcs, applied
+    return jax.vmap(one)(cand_d, cand_i, fin_d, fin_i, hops, calcs,
+                         spec, nbrs, act, vecs, sqs, q, qsq)
+
+
+def _metric_dist_np(metric: str, dot, xsq, qsq):
+    """numpy twin of metric_distance — only used to *predict* the pop
+    sequence for superstep planning; every applied decision is re-made on
+    device, so a last-ulp disagreement costs a shorter superstep, never a
+    wrong result."""
+    if metric == "l2":
+        return np.maximum(xsq - 2.0 * dot + qsq, 0.0)
+    if metric == "ip":
+        return -dot
+    if metric == "cosine":
+        return 1.0 - dot
+    raise ValueError(f"unknown metric {metric!r}")
+
+
 # ---------------------------------------------------------------------------
 # Host-driven traversal over store reads
 # ---------------------------------------------------------------------------
@@ -137,13 +221,19 @@ def _layer0_step(active, cand_d, cand_i, fin_d, fin_i, hops, calcs,
 def _gather_vec_sq(reader: StoreReader, p: int, ids: np.ndarray,
                    mask: np.ndarray):
     """Vector + sqnorm tiles for masked neighbor lanes; zeros elsewhere
-    (masked lanes are forced to +inf downstream, so zeros are inert)."""
+    (masked lanes are forced to +inf downstream, so zeros are inert).
+
+    Neighbor ids repeat across lanes whenever two queries expand nodes
+    that share a neighbor, so the store read is issued over the *unique*
+    ids and the rows scattered back — the reader never sees (or pays row
+    bookkeeping for) the duplicates, and the returned tiles are unchanged."""
     vecs = np.zeros(ids.shape + (reader.d_pad,), np.float32)
     sqs = np.zeros(ids.shape, np.float32)
     if mask.any():
-        rows = reader.row("vectors", p, ids[mask])
-        vecs[mask] = reader.read_rows("vectors", rows)
-        sqs[mask] = reader.read_rows("sqnorms", rows)[..., 0]
+        uniq, inv = np.unique(ids[mask], return_inverse=True)
+        rows = reader.row("vectors", p, uniq)
+        vecs[mask] = reader.read_rows("vectors", rows)[inv]
+        sqs[mask] = reader.read_rows("sqnorms", rows)[inv, 0]
     return vecs, sqs
 
 
@@ -163,12 +253,182 @@ def _visited_test_and_set(bitmap: np.ndarray, ids: np.ndarray,
     return was
 
 
+def _layer0_supersteps(reader: StoreReader, p: int, q_pad, qsq, bitmap,
+                       cand_d, cand_i, fin_d, fin_i, hops, calcs,
+                       sp: SearchParams):
+    """Speculative, PIPELINED H-hop supersteps over layer 0
+    (`fused_hops > 1`).
+
+    The host shadows the beam in numpy to *predict* the next H pops —
+    reading neighbor rows and vector/sqnorm tiles as it goes, and applying
+    the visited test-and-set for the whole superstep up front — then
+    `_layer0_superstep` replays the hops on device, validating each
+    against true device state. The two run as a software pipeline: while
+    superstep k executes on device, the host plans superstep k+1 from the
+    shadow (store reads overlap kernel compute, the paper's §5.3 overlap
+    applied to whole supersteps), and only the tiny per-lane `applied`
+    count is synced per superstep. Full beam state crosses the host
+    boundary only at pipeline bubbles: the start, a misprediction (a
+    last-ulp distance tie ordering differently in numpy than in XLA), or
+    the shadow terminating while the device disagrees.
+
+    The shadow only ever influences which hops get *planned* — every
+    applied hop re-derives its pop, guard, and merge on device, so the
+    result is bit-identical to the hop-stepped loop at any H. A lane
+    whose speculation was rejected has its visited bits rolled back and
+    its shadow resynced from device state, after which its next superstep
+    is planned from truth and must apply ≥ 1 hop — no livelock. Returns
+    the updated beam plus the number of supersteps (device dispatches ==
+    host sync points) taken."""
+    B = bitmap.shape[0]
+    H = sp.fused_hops
+    M0, D = reader.m0_pad, reader.d_pad
+    C, EF = sp.cand_size, sp.ef
+    metric = sp.metric
+    qh = np.asarray(q_pad, np.float32)
+    qsqh = np.asarray(qsq, np.float32)
+    steps = 0
+
+    # shadow of the device beam, advanced in place by plan(); resynced
+    # from device arrays only at pipeline bubbles
+    scand_d = np.array(cand_d)
+    scand_i = np.array(cand_i)
+    sfin_d = np.array(fin_d)
+    shops = np.array(hops)
+
+    def plan():
+        """Plan up to H hops from shadow state (store reads + visited
+        test-and-set happen here). Returns None if the shadow sees every
+        lane terminated; otherwise the per-hop tiles for the kernel."""
+        live0 = (scand_d[:, 0] < sfin_d[:, -1]) & (shops < sp.max_hops)
+        if not live0.any():
+            return None
+        snap = bitmap.copy()
+        spec = np.full((B, H), -1, np.int32)
+        nbrs_t = np.full((B, H, M0), -1, np.int32)
+        act_t = np.zeros((B, H, M0), bool)
+        vecs_t = np.zeros((B, H, M0, D), np.float32)
+        sqs_t = np.zeros((B, H, M0), np.float32)
+        planned = np.zeros(B, np.int32)          # shadow-live hops per lane
+        for h in range(H):
+            live = (scand_d[:, 0] < sfin_d[:, -1]) & (shops < sp.max_hops)
+            if not live.any():
+                break
+            pops = np.where(live, scand_i[:, 0], -1).astype(np.int32)
+            spec[:, h] = pops
+            planned += live
+            lanes = np.flatnonzero(live)
+            nbrs = nbrs_t[:, h]
+            nbrs[lanes] = reader.read_rows(
+                "l0_nbrs", reader.row("l0_nbrs", p, pops[lanes]))
+            valid = (nbrs >= 0) & live[:, None]
+            was = _visited_test_and_set(bitmap, nbrs, valid)
+            act = valid & ~was
+            act_t[:, h] = act
+            v, s = _gather_vec_sq(reader, p, nbrs, act)
+            vecs_t[:, h], sqs_t[:, h] = v, s
+            # shadow hop: the same pop/guard/merge, numpy arithmetic
+            d = _metric_dist_np(metric, np.einsum("bmd,bd->bm", v, qh),
+                                s, qsqh[:, None])
+            d = np.where(act, d, np.inf)
+            d = np.where(d < sfin_d[:, -1:], d, np.inf)
+            ids = np.where(np.isfinite(d), np.where(act, nbrs, 0), -1)
+            o = np.argsort(d, axis=1, kind="stable")
+            bd = np.take_along_axis(d, o, axis=1)
+            bi = np.take_along_axis(ids, o, axis=1)
+            pc_d = np.concatenate(
+                [scand_d[:, 1:], np.full((B, 1), np.inf, np.float32)], 1)
+            pc_i = np.concatenate(
+                [scand_i[:, 1:], np.full((B, 1), -1, scand_i.dtype)], 1)
+            o2 = np.argsort(np.concatenate([pc_d, bd], axis=1),
+                            axis=1, kind="stable")
+            sel = live[:, None]
+            scand_d[:] = np.where(sel, np.take_along_axis(
+                np.concatenate([pc_d, bd], 1), o2, 1)[:, :C], scand_d)
+            scand_i[:] = np.where(sel, np.take_along_axis(
+                np.concatenate([pc_i, bi], 1), o2, 1)[:, :C], scand_i)
+            sfin_d[:] = np.where(sel, np.sort(
+                np.concatenate([sfin_d, bd], 1), axis=1)[:, :EF], sfin_d)
+            shops[:] = shops + live
+        return dict(snap=snap, spec=spec, nbrs=nbrs_t, act=act_t,
+                    vecs=vecs_t, sqs=sqs_t, planned=planned)
+
+    def resync(lanes):
+        """Pull true device beam state back into the shadow for `lanes`
+        (boolean mask) — the only full-state host syncs in this driver."""
+        scand_d[lanes] = np.asarray(cand_d)[lanes]
+        scand_i[lanes] = np.asarray(cand_i)[lanes]
+        sfin_d[lanes] = np.asarray(fin_d)[lanes]
+        shops[lanes] = np.asarray(hops)[lanes]
+
+    def settle(prev, applied_h, nxt):
+        """Handle rejected speculation of the just-finished superstep
+        `prev`: per bad lane, restore its visited bits to the pre-`prev`
+        snapshot plus the applied prefix (this also wipes any bits the
+        in-flight plan `nxt` set from that lane's diverged shadow),
+        resync its shadow from device truth, and void its slots in
+        `nxt` so the kernel skips it there."""
+        bad = applied_h < prev["planned"]
+        if not bad.any():
+            return False
+        for b in np.flatnonzero(bad):
+            bitmap[b] = prev["snap"][b]
+            for h in range(int(applied_h[b])):
+                ib = prev["nbrs"][b, h][prev["act"][b, h]]
+                np.bitwise_or.at(
+                    bitmap[b], ib >> 5,
+                    np.left_shift(np.uint32(1),
+                                  (ib & 31).astype(np.uint32)))
+        resync(bad)
+        if nxt is not None:
+            nxt["spec"][bad] = -1
+            nxt["act"][bad] = False
+            nxt["planned"][bad] = 0
+        return True
+
+    pending = None                   # (plan, applied) in flight on device
+    while True:
+        ps = plan()                  # overlaps the in-flight kernel
+        if pending is not None:
+            prev, applied = pending
+            applied_h = np.asarray(applied)       # sync: superstep done
+            pending = None
+            if settle(prev, applied_h, ps) and ps is None:
+                ps = plan()          # resynced lanes may still be live
+        if ps is None:
+            # shadow says done; the device has the final word (a last-ulp
+            # tie can terminate the shadow while the device beam is live)
+            live = ((np.asarray(cand_d)[:, 0] < np.asarray(fin_d)[:, -1])
+                    & (np.asarray(hops) < sp.max_hops))
+            if not live.any():
+                break
+            resync(live)
+            ps = plan()
+            if ps is None:           # cannot happen: resynced == live
+                break
+        with TRACER.child_span("hop_superstep", superstep=steps,
+                               fused_hops=H,
+                               active=int((ps["planned"] > 0).sum())):
+            with TRACER.child_span("hop-kernel"):
+                (cand_d, cand_i, fin_d, fin_i, hops, calcs,
+                 applied) = _layer0_superstep(
+                    cand_d, cand_i, fin_d, fin_i, hops, calcs,
+                    jnp.asarray(ps["spec"]), jnp.asarray(ps["nbrs"]),
+                    jnp.asarray(ps["act"]), jnp.asarray(ps["vecs"]),
+                    jnp.asarray(ps["sqs"]), q_pad, qsq, metric, sp.max_hops)
+        pending = (ps, applied)
+        steps += 1
+    return cand_d, cand_i, fin_d, fin_i, hops, calcs, steps
+
+
 def _search_one_partition(reader: StoreReader, p: int, q_pad: jnp.ndarray,
                           params: SearchParams):
     """Lockstep batched search of one sub-graph, all data via the store.
 
-    Returns (gids [B,k], dists [B,k], hops [B], calcs [B]) — numerically
-    identical to `batch_search` on the resident partition."""
+    Returns (gids [B,k], dists [B,k], hops [B], calcs [B], steps) —
+    numerically identical to `batch_search` on the resident partition.
+    `steps` counts host-sync'd traversal rounds: one per hop on the legacy
+    path, one per `fused_hops`-hop superstep on the fused path."""
     B = int(q_pad.shape[0])
     sp = params.resolve(reader.m0_pad)
     C, EF, K = sp.cand_size, sp.ef, sp.k
@@ -212,7 +472,7 @@ def _search_one_partition(reader: StoreReader, p: int, q_pad: jnp.ndarray,
             hop += 1
 
     # -- layer 0: lockstep beam search (paper §5.2.3) -----------------------
-    n_words = reader.n_pad // 32
+    n_words = bitmap_words(reader.n_pad)
     bitmap = np.zeros((B, n_words), np.uint32)
     ep_ids = np.asarray(cur)[:, None]
     _visited_test_and_set(bitmap, ep_ids, np.ones((B, 1), bool))
@@ -222,36 +482,47 @@ def _search_one_partition(reader: StoreReader, p: int, q_pad: jnp.ndarray,
     fin_i = jnp.full((B, EF), -1, jnp.int32).at[:, 0].set(cur)
     hops = jnp.zeros((B,), jnp.int32)
 
-    hop_no = 0
-    while True:
-        cd_h, fd_h = np.asarray(cand_d), np.asarray(fin_d)
-        hops_h = np.asarray(hops)
-        active = (cd_h[:, 0] < fd_h[:, -1]) & (hops_h < sp.max_hops)
-        if not active.any():
-            break
-        with TRACER.child_span("hop", hop=hop_no,
-                               active=int(active.sum())):
-            pops = np.asarray(cand_i)[:, 0]
-            nbrs = np.full((B, reader.m0_pad), -1, np.int32)
-            if active.any():
-                lanes = np.flatnonzero(active)
-                nbrs[lanes] = reader.read_rows(
-                    "l0_nbrs", reader.row("l0_nbrs", p, pops[lanes]))
-            valid = (nbrs >= 0) & active[:, None]
-            was = _visited_test_and_set(bitmap, nbrs, valid)
-            act = valid & ~was
-            vecs, sqs = _gather_vec_sq(reader, p, nbrs, act)
-            # hop-kernel covers only the jitted dispatch — the async device
-            # compute itself overlaps the next hop's host work by design,
-            # so the span is the submit cost, not the device time
-            with TRACER.child_span("hop-kernel"):
-                cand_d, cand_i, fin_d, fin_i, hops, calcs = _layer0_step(
-                    jnp.asarray(active), cand_d, cand_i, fin_d, fin_i, hops,
-                    calcs, jnp.asarray(nbrs), jnp.asarray(act),
-                    jnp.asarray(vecs), jnp.asarray(sqs), q_pad, qsq, metric)
-            # overlap the next hop's fetches with this round-trip
-            reader.prefetch_next_hop(p, np.asarray(cand_i)[:, :2])
-        hop_no += 1
+    if sp.fused_hops > 1:
+        # fused path: the superstep driver batches its own store reads per
+        # H-hop plan, so the speculative next-hop prefetcher is redundant
+        # traffic — it is deliberately not invoked here
+        (cand_d, cand_i, fin_d, fin_i, hops, calcs,
+         steps) = _layer0_supersteps(reader, p, q_pad, qsq, bitmap,
+                                     cand_d, cand_i, fin_d, fin_i,
+                                     hops, calcs, sp)
+    else:
+        hop_no = 0
+        while True:
+            cd_h, fd_h = np.asarray(cand_d), np.asarray(fin_d)
+            hops_h = np.asarray(hops)
+            active = (cd_h[:, 0] < fd_h[:, -1]) & (hops_h < sp.max_hops)
+            if not active.any():
+                break
+            with TRACER.child_span("hop", hop=hop_no,
+                                   active=int(active.sum())):
+                pops = np.asarray(cand_i)[:, 0]
+                nbrs = np.full((B, reader.m0_pad), -1, np.int32)
+                if active.any():
+                    lanes = np.flatnonzero(active)
+                    nbrs[lanes] = reader.read_rows(
+                        "l0_nbrs", reader.row("l0_nbrs", p, pops[lanes]))
+                valid = (nbrs >= 0) & active[:, None]
+                was = _visited_test_and_set(bitmap, nbrs, valid)
+                act = valid & ~was
+                vecs, sqs = _gather_vec_sq(reader, p, nbrs, act)
+                # hop-kernel covers only the jitted dispatch — the async
+                # device compute itself overlaps the next hop's host work by
+                # design, so the span is the submit cost, not the device time
+                with TRACER.child_span("hop-kernel"):
+                    cand_d, cand_i, fin_d, fin_i, hops, calcs = _layer0_step(
+                        jnp.asarray(active), cand_d, cand_i, fin_d, fin_i,
+                        hops, calcs, jnp.asarray(nbrs), jnp.asarray(act),
+                        jnp.asarray(vecs), jnp.asarray(sqs), q_pad, qsq,
+                        metric)
+                # overlap the next hop's fetches with this round-trip
+                reader.prefetch_next_hop(p, np.asarray(cand_i)[:, :2])
+            hop_no += 1
+        steps = hop_no
 
     k_i = np.asarray(fin_i)[:, :K]
     k_d = np.asarray(fin_d)[:, :K]
@@ -260,16 +531,21 @@ def _search_one_partition(reader: StoreReader, p: int, q_pad: jnp.ndarray,
     if vmask.any():
         k_g[vmask] = reader.read_rows(
             "gids", reader.row("gids", p, k_i[vmask]))[:, 0]
-    return k_g, k_d, np.asarray(hops), np.asarray(calcs)
+    return k_g, k_d, np.asarray(hops), np.asarray(calcs), steps
 
 
 def store_search(reader: StoreReader, queries, params: SearchParams,
                  merge: bool = True):
     """Two-stage search over every partition of the store.
 
-    merge=True  -> (ids [B,k], dists [B,k], hops [B], calcs [B])
+    merge=True  -> (ids [B,k], dists [B,k], hops [B], calcs [B], supersteps)
     merge=False -> the unmerged [B, P*k] stage-1 pool (rerank consumes it).
+
+    `supersteps` is the total host-sync'd traversal rounds across
+    partitions — equal to total layer-0 hop rounds at fused_hops=1,
+    roughly hops/fused_hops on the fused path.
     """
+    REGISTRY.gauge("traversal_fused_hops").set(float(params.fused_hops))
     q = np.asarray(queries, np.float32)
     if q.shape[-1] < reader.d_pad:
         q = np.pad(q, ((0, 0), (0, reader.d_pad - q.shape[-1])))
@@ -277,20 +553,22 @@ def store_search(reader: StoreReader, queries, params: SearchParams,
     per_ids, per_ds = [], []
     hops = np.zeros(q.shape[0], np.int64)
     calcs = np.zeros(q.shape[0], np.int64)
+    supersteps = 0
     for p in range(reader.num_partitions):
         with TRACER.child_span("traversal", partition=p):
-            gi, gd, h, c = _search_one_partition(reader, p, q_pad, params)
+            gi, gd, h, c, s = _search_one_partition(reader, p, q_pad, params)
         per_ids.append(gi)
         per_ds.append(gd)
         hops += h
         calcs += c
+        supersteps += s
     ids = np.stack(per_ids, axis=1)          # [B, P, k]
     ds = np.stack(per_ds, axis=1)
     if not merge:
         b = ids.shape[0]
-        return ids.reshape(b, -1), ds.reshape(b, -1), hops, calcs
+        return ids.reshape(b, -1), ds.reshape(b, -1), hops, calcs, supersteps
     out_i, out_d = merge_topk(jnp.asarray(ids), jnp.asarray(ds), params.k)
-    return out_i, out_d, hops, calcs
+    return out_i, out_d, hops, calcs, supersteps
 
 
 # ---------------------------------------------------------------------------
@@ -344,7 +622,8 @@ class CSDBackend:
                                     prefetch=spec.prefetch))
 
     def params(self, k: int, ef: int) -> SearchParams:
-        return SearchParams(ef=ef, k=k, metric=self.spec.metric)
+        return SearchParams(ef=ef, k=k, metric=self.spec.metric,
+                            fused_hops=self.spec.fused_hops)
 
     def search(self, queries, k: int, ef: int, rerank: bool,
                with_stats: bool):
@@ -356,11 +635,12 @@ class CSDBackend:
             before = r.cache.snapshot()  # request's in-flight reads to us
         p = self.params(k, ef)
         if rerank:
-            cand, _, hops, calcs = store_search(r, queries, p, merge=False)
+            cand, _, hops, calcs, steps = store_search(r, queries, p,
+                                                       merge=False)
             with TRACER.child_span("rerank", pool=int(cand.shape[1])):
                 ids, dists = self._rerank_from_store(queries, cand, k)
         else:
-            ids, dists, hops, calcs = store_search(r, queries, p)
+            ids, dists, hops, calcs, steps = store_search(r, queries, p)
             if self.quant is not None:   # code-space -> real-space
                 dists = dists * jnp.float32(self.quant.dist_scale)
         stats = None
@@ -381,6 +661,7 @@ class CSDBackend:
                 cache_misses=after["misses"] - before["misses"],
                 cache_hit_rate=hit_rate,
                 bytes_read=after["bytes_read"] - before["bytes_read"],
+                supersteps=steps,
             )
         return jnp.asarray(ids), jnp.asarray(dists), stats
 

@@ -238,7 +238,7 @@ def test_prefetcher_overlaps_and_preserves_results(svc_csd, small_dataset):
                         prefetch=True)
     try:
         p = svc_csd.backend.params(10, 40)
-        ids, _, _, _ = store_search(reader, q, p)
+        ids, _, _, _, _ = store_search(reader, q, p)
         np.testing.assert_array_equal(np.asarray(ids), np.asarray(base.ids))
         reader.prefetcher.drain()
         assert reader.cache.prefetch_reads > 0
