@@ -1,0 +1,229 @@
+"""Product-quantization sweep: recall / QPS / cold `bytes_read` vs the
+number of PQ subspaces M in {4, 8, 16}, against the paper's uint8 store.
+
+The paper's SIFT1B configuration fits the platform because rows are ~1
+byte/dim; `dtype="pq"` compresses further to M bytes/row (d/M dims per
+byte). This benchmark measures what that buys on flash: the same graph is
+served from two csd block stores — uint8 rows (the paper's operating
+point) vs M-byte PQ code rows + the float32 `rerank_vectors` stage-2
+table — and every point reports recall@10, warm-cache QPS, and the
+cold-PageCache `bytes_read` of one batch.
+
+Dataset note (and the honesty caveat that goes with it): PQ's recall
+depends on the per-subspace entropy of the data, not its raw
+dimensionality. Real embedding spaces are low-rank / cluster-structured
+(which is why PQ works on SIFT); i.i.d. Gaussian data is adversarial for
+any 256-centroid codebook. We generate block-structured vectors — each
+d/16-dim block drawn from 64 per-block patterns plus small noise — so
+the M=16 subspaces align with the generating blocks and the codebook can
+capture them (the SIFT-like regime), while M=4/8 span several blocks
+(support 64^2..64^4 patterns >> 256 centroids) and show the classic PQ
+fidelity cliff. The headline comparison is therefore the M=16 row:
+recall@10 (rerank on) matched to uint8 within `recall_eps`, at >=
+`min_bytes_ratio` fewer cold bytes — both ASSERTED before the artifact
+is written, not just reported.
+
+Emits schema-validated `BENCH_pq.json` at the repo root.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import recall_of, timeit
+from repro.api import IndexSpec, SearchRequest, SearchService
+from repro.core.hnsw_graph import HNSWConfig
+from repro.store.csd import CSDBackend
+from repro.store.layout import open_store
+
+K = 10
+EF = 120
+SWEEP_M = (4, 8, 16)
+HEADLINE_M = 16
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_pq.json")
+
+
+def _shapes(tiny: bool):
+    if tiny:    # CI smoke: same code path, same asserts at a lower bar
+        return dict(n=1000, dim=1024, nq=8, nblocks=16, patterns=64,
+                    cfg=HNSWConfig(M=12, ef_construction=80, seed=0),
+                    block_size=512, min_bytes_ratio=2.0, recall_eps=0.05)
+    return dict(n=2000, dim=2048, nq=8, nblocks=16, patterns=64,
+                cfg=HNSWConfig(M=12, ef_construction=80, seed=0),
+                block_size=512, min_bytes_ratio=4.0, recall_eps=0.05)
+
+
+def _block_structured(s: dict, seed: int = 0):
+    """Vectors whose d/nblocks-dim blocks are drawn from `patterns`
+    per-block prototypes (+ small noise): low per-subspace entropy, the
+    structure PQ codebooks exist to capture."""
+    rng = np.random.default_rng(seed)
+    dsub = s["dim"] // s["nblocks"]
+    protos = rng.normal(
+        size=(s["nblocks"], s["patterns"], dsub)).astype(np.float32)
+
+    def draw(count):
+        codes = rng.integers(0, s["patterns"], size=(count, s["nblocks"]))
+        out = np.concatenate(
+            [protos[j, codes[:, j]] for j in range(s["nblocks"])], axis=1)
+        return (out + rng.normal(scale=0.01, size=(count, s["dim"]))
+                ).astype(np.float32)
+
+    return draw(s["n"]), draw(s["nq"])
+
+
+def _build_csd(tmp: str, vectors, s: dict, dtype: str, pq_m=None):
+    """One graph on a csd block store (single partition: the out-of-core
+    operating point where row bytes, not merge width, set the traffic)."""
+    kw = dict(pq_m=pq_m) if dtype == "pq" else {}
+    part = SearchService.build(vectors, IndexSpec(
+        backend="partitioned", dtype=dtype, num_partitions=1, hnsw=s["cfg"],
+        keep_vectors=True, block_size=s["block_size"], **kw))
+    spec = dataclasses.replace(
+        part.spec, backend="csd", keep_vectors=False,
+        storage_path=os.path.join(tmp, f"{dtype}{pq_m or ''}"),
+        prefetch=False)
+    raw = part.backend.raw if dtype == "pq" else None
+    return SearchService(spec, CSDBackend.from_partitioned(
+        part.backend.pdb, spec, raw=raw))
+
+
+def _cold_bytes(svc, queries, rerank: bool) -> int:
+    """Store traffic of one batch from a COLD PageCache (the service's
+    own warm cache would report ~0 after the first measurement)."""
+    spec = svc.backend.spec
+    reader = open_store(spec.storage_path, spec.cache_bytes, prefetch=False)
+    try:
+        cold = SearchService(spec, CSDBackend(spec, reader))
+        resp = cold.search(SearchRequest(queries=queries, k=K, ef=EF,
+                                         rerank=rerank, with_stats=True))
+        return int(resp.stats.bytes_read)
+    finally:
+        reader.close()
+
+
+def _measure(svc, queries, gt) -> dict:
+    resp = svc.search(SearchRequest(queries=queries, k=K, ef=EF,
+                                    rerank=True, with_stats=True))
+    us = timeit(lambda: svc.search(SearchRequest(
+        queries=queries, k=K, ef=EF, rerank=True)).ids, iters=2)
+    raw = svc.search(SearchRequest(queries=queries, k=K, ef=EF,
+                                   rerank=False))
+    table = svc.backend.reader.blockfile.tables["vectors"]
+    return {
+        "recall_rerank": round(recall_of(np.asarray(resp.ids), gt), 4),
+        "recall_raw": round(recall_of(np.asarray(raw.ids), gt), 4),
+        "qps": round(len(queries) / (us / 1e6), 1),
+        "us_per_query": round(us / len(queries), 1),
+        "row_bytes": int(table["row_bytes"]),
+        "bytes_read_cold": _cold_bytes(svc, queries, rerank=True),
+        "bytes_read_cold_stage1": _cold_bytes(svc, queries, rerank=False),
+    }
+
+
+def _validate(record: dict, s: dict) -> None:
+    """Fail loudly before writing a malformed artifact."""
+    u8 = record["uint8"]
+    assert [p["pq_m"] for p in record["sweep"]] == list(SWEEP_M)
+    for p in record["sweep"]:
+        assert p["qps"] > 0 and p["us_per_query"] > 0
+        assert 0.0 <= p["recall_raw"] <= p["recall_rerank"] <= 1.0, \
+            f"M={p['pq_m']}: rerank must not lose recall: {p}"
+        assert p["row_bytes"] == p["pq_m"], \
+            f"PQ store row must be M bytes: {p}"
+        assert p["bytes_read_cold"] < u8["bytes_read_cold"], \
+            f"M={p['pq_m']} read more than uint8"
+    by_m = {p["pq_m"]: p for p in record["sweep"]}
+    assert (by_m[4]["recall_rerank"] < by_m[8]["recall_rerank"]
+            < by_m[16]["recall_rerank"]), \
+        "recall must rise with M (codebook fidelity)"
+    h = record["headline"]
+    assert h["recall_gap"] <= s["recall_eps"], \
+        (f"recall not matched: pq={h['recall_pq']} "
+         f"uint8={h['recall_uint8']} (eps={s['recall_eps']})")
+    assert h["bytes_ratio_vs_uint8"] >= s["min_bytes_ratio"], \
+        (f"bytes_read ratio {h['bytes_ratio_vs_uint8']} < "
+         f"{s['min_bytes_ratio']}x at matched recall")
+
+
+def run(tiny: bool = False):
+    import tempfile
+
+    s = _shapes(tiny)
+    tmp = tempfile.mkdtemp(prefix="fig-pq-")
+    vectors, queries = _block_structured(s)
+    d2 = (np.einsum("nd,nd->n", vectors, vectors)[None]
+          - 2 * queries @ vectors.T
+          + np.einsum("qd,qd->q", queries, queries)[:, None])
+    gt = np.argsort(d2, axis=1, kind="stable")[:, :K]
+
+    u8 = _measure(_build_csd(tmp, vectors, s, "uint8"), queries, gt)
+    sweep = []
+    for m in SWEEP_M:
+        svc = _build_csd(tmp, vectors, s, "pq", pq_m=m)
+        sweep.append({"pq_m": m, **_measure(svc, queries, gt)})
+
+    head = next(p for p in sweep if p["pq_m"] == HEADLINE_M)
+    record = {
+        "n": s["n"], "dim": s["dim"], "nq": s["nq"], "k": K, "ef": EF,
+        "tiny": tiny, "sweep_m": list(SWEEP_M),
+        "note": ("block-structured data (d/16-dim blocks, 64 patterns "
+                 "each): M=16 subspaces align with the generating blocks "
+                 "(codebook-capturable, the SIFT-like regime); M=4/8 "
+                 "span several blocks and show the PQ fidelity cliff. "
+                 "bytes_read_cold includes stage-2 float32 rerank reads; "
+                 "_stage1 is the same batch with rerank off."),
+        "uint8": u8,
+        "sweep": sweep,
+        "headline": {
+            "pq_m": HEADLINE_M,
+            "recall_pq": head["recall_rerank"],
+            "recall_uint8": u8["recall_rerank"],
+            "recall_gap": round(abs(u8["recall_rerank"]
+                                    - head["recall_rerank"]), 4),
+            "bytes_ratio_vs_uint8": round(u8["bytes_read_cold"]
+                                          / head["bytes_read_cold"], 2),
+            "row_bytes_ratio_vs_uint8": round(u8["row_bytes"]
+                                              / head["row_bytes"], 2),
+        },
+    }
+    _validate(record, s)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=1, sort_keys=True)
+
+    rows = [("fig_pq_uint8", u8["us_per_query"],
+             f"qps={u8['qps']};recall={u8['recall_rerank']};"
+             f"row_bytes={u8['row_bytes']};"
+             f"bytes_read_cold={u8['bytes_read_cold']}")]
+    for p in sweep:
+        rows.append((f"fig_pq_m{p['pq_m']}", p["us_per_query"],
+                     f"qps={p['qps']};recall={p['recall_rerank']};"
+                     f"recall_raw={p['recall_raw']};"
+                     f"row_bytes={p['row_bytes']};"
+                     f"bytes_read_cold={p['bytes_read_cold']}"))
+    h = record["headline"]
+    rows.append(("fig_pq_json", 0.0,
+                 f"wrote={BENCH_JSON};headline_m={h['pq_m']};"
+                 f"bytes_ratio={h['bytes_ratio_vs_uint8']};"
+                 f"recall_gap={h['recall_gap']}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke shapes (seconds, same code path)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, extra in run(tiny=args.tiny):
+        print(f"{name},{us:.1f},{extra}")
+
+
+if __name__ == "__main__":
+    main()

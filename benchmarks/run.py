@@ -22,6 +22,7 @@ MODULES = [
     "fig_ingest",
     "fig_cluster",
     "fig_obs",
+    "fig_pq",
     "fig_traversal",
     "table2_kernels",
     "lm_substrate",

@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""CI pq-smoke: the product-quantized path end to end on tiny data.
+
+Builds one PQ (M=8) partitioned index, restructures it onto a tiny csd
+block store (M-byte code rows + the float32 `rerank_vectors` table), and
+ASSERTS the acceptance bounds in-process:
+
+  * csd == partitioned BIT-IDENTICALLY (ids, dists, hops, dist_calcs),
+    with and without the true-float32 rerank, at fused_hops 1 and 4;
+  * the stored vector table is pq_m bytes/row — 16x under the uint8
+    store's lane-padded rows here — and a cold-cache search moves fewer
+    `bytes_read` than the same search on the uint8 store;
+  * the manifest round-trips as format_version 3.
+
+  PYTHONPATH=src python scripts/pq_smoke.py
+"""
+
+import dataclasses
+import json
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.api import IndexSpec, SearchRequest, SearchService  # noqa: E402
+from repro.core.hnsw_graph import HNSWConfig  # noqa: E402
+from repro.data import clustered_vectors  # noqa: E402
+from repro.store.csd import CSDBackend  # noqa: E402
+from repro.store.layout import open_store  # noqa: E402
+
+N, DIM, NQ, K, EF = 1500, 64, 12, 10, 40
+PQ_M = 8
+
+
+def _build_csd(part, tag):
+    store = tempfile.mkdtemp(prefix=f"pq-smoke-{tag}-") + "/store"
+    spec = dataclasses.replace(part.spec, backend="csd",
+                               keep_vectors=False, storage_path=store,
+                               prefetch=False)
+    raw = part.backend.raw if part.spec.dtype == "pq" else None
+    return SearchService(spec, CSDBackend.from_partitioned(
+        part.backend.pdb, spec, raw=raw))
+
+
+def _respond(svc, queries, rerank, fused_hops):
+    svc.backend.spec = dataclasses.replace(svc.backend.spec,
+                                           fused_hops=fused_hops)
+    r = svc.search(SearchRequest(queries=queries, k=K, ef=EF, rerank=rerank,
+                                 with_stats=True))
+    return (np.asarray(r.ids), np.asarray(r.dists),
+            np.asarray(r.stats.hops), np.asarray(r.stats.dist_calcs))
+
+
+def _cold_bytes(svc, queries):
+    reader = open_store(svc.backend.reader.path, svc.spec.cache_bytes,
+                        prefetch=False)
+    try:
+        cold = SearchService(svc.spec, CSDBackend(svc.spec, reader))
+        r = cold.search(SearchRequest(queries=queries, k=K, ef=EF,
+                                      with_stats=True))
+        return float(r.stats.bytes_read)
+    finally:
+        reader.close()
+
+
+def main():
+    vecs = clustered_vectors(N, DIM, k=16, seed=0)
+    rng = np.random.default_rng(1)
+    queries = (vecs[rng.integers(0, N, NQ)]
+               + rng.normal(scale=1.5, size=(NQ, DIM))).astype(np.float32)
+    cfg = HNSWConfig(M=12, ef_construction=80, seed=0)
+
+    pq = SearchService.build(vecs, IndexSpec(
+        backend="partitioned", dtype="pq", pq_m=PQ_M, num_partitions=2,
+        hnsw=cfg, keep_vectors=True))
+    pq_csd = _build_csd(pq, "pq")
+    u8 = SearchService.build(vecs, IndexSpec(
+        backend="partitioned", dtype="uint8", num_partitions=2, hnsw=cfg,
+        keep_vectors=True))
+    u8_csd = _build_csd(u8, "u8")
+
+    # 1) bit-parity: csd == partitioned on every counter, every mode
+    for fh in (1, 4):
+        for rerank in (False, True):
+            want = _respond(pq, queries, rerank, fh)
+            got = _respond(pq_csd, queries, rerank, fh)
+            for g, w, what in zip(got, want,
+                                  ("ids", "dists", "hops", "dist_calcs")):
+                assert np.array_equal(g, w), (
+                    f"pq csd != partitioned on {what} "
+                    f"(fused_hops={fh}, rerank={rerank})")
+
+    # 2) storage: M-byte rows, strictly fewer cold bytes than uint8
+    t_pq = pq_csd.backend.reader.blockfile.tables["vectors"]
+    t_u8 = u8_csd.backend.reader.blockfile.tables["vectors"]
+    assert t_pq["dtype"] == "uint8" and t_pq["row_bytes"] == PQ_M, t_pq
+    assert t_u8["row_bytes"] == 16 * t_pq["row_bytes"], (t_u8, t_pq)
+    assert "rerank_vectors" in pq_csd.backend.reader.blockfile.tables
+    b_pq, b_u8 = _cold_bytes(pq_csd, queries), _cold_bytes(u8_csd, queries)
+    assert b_pq < b_u8, (
+        f"pq store read MORE than uint8: {b_pq:.0f} vs {b_u8:.0f} B")
+
+    # 3) manifest v3 round-trip
+    path = tempfile.mkdtemp(prefix="pq-smoke-manifest-")
+    pq.save(path)
+    with open(os.path.join(path, "index_manifest.json")) as f:
+        assert json.load(f)["format_version"] == 3
+    back = SearchService.load(path)
+    r1 = pq.search(SearchRequest(queries=queries, k=K, ef=EF))
+    r2 = back.search(SearchRequest(queries=queries, k=K, ef=EF))
+    assert np.array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+    assert np.array_equal(np.asarray(r1.dists), np.asarray(r2.dists))
+
+    print(f"[pq-smoke] OK: n={N} d={DIM} M={PQ_M} — csd==partitioned "
+          f"bitwise (fused_hops 1/4, rerank on/off); rows "
+          f"{t_u8['row_bytes']}B->{t_pq['row_bytes']}B; cold bytes_read "
+          f"{b_u8:.0f}->{b_pq:.0f} ({b_u8 / b_pq:.2f}x); manifest v3 ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -86,6 +86,20 @@ class ExactBackend:
     def __init__(self, spec: IndexSpec, raw: np.ndarray):
         self.spec = spec
         self.quant = spec.quantizer()
+        self.is_pq = spec.dtype == "pq"
+        if self.is_pq:
+            # raw is either the original float32 rows (build) or the
+            # checkpointed [n, m] uint8 code table (from_state) — the scan
+            # runs the fused Pallas ADC top-k over the codes either way
+            raw = np.asarray(raw)
+            if raw.dtype != np.uint8 or raw.shape[-1] != self.quant.m:
+                raw = self.quant.encode(np.asarray(raw, np.float32))
+            self.raw = raw
+            self.codes = jnp.asarray(raw)
+            self._cbs = jnp.asarray(self.quant.codebooks)
+            self.n = raw.shape[0]
+            self.vectors = self.sqnorms = None
+            return
         # quantized: raw IS the code table (uint8/int8); scan it as-is
         self.raw = (np.asarray(raw) if self.quant is not None
                     else np.asarray(raw, np.float32))
@@ -106,11 +120,18 @@ class ExactBackend:
 
     def search(self, queries, k: int, ef: int, rerank: bool,
                with_stats: bool):
-        ids, dists = bruteforce_topk(
-            self.vectors, self.sqnorms, jnp.asarray(queries), k=k,
-            chunk=self.CHUNK, metric=self.spec.metric)
-        if self.quant is not None:   # code-space -> real-space distances
-            dists = dists * jnp.float32(self.quant.dist_scale)
+        if self.is_pq:
+            from repro.kernels.ops import pq_topk
+            from repro.optim.compression import build_pq_lut
+            luts = build_pq_lut(jnp.asarray(queries, jnp.float32),
+                                self._cbs)
+            dists, ids = pq_topk(luts, self.codes, k=k)
+        else:
+            ids, dists = bruteforce_topk(
+                self.vectors, self.sqnorms, jnp.asarray(queries), k=k,
+                chunk=self.CHUNK, metric=self.spec.metric)
+            if self.quant is not None:  # code-space -> real-space distances
+                dists = dists * jnp.float32(self.quant.dist_scale)
         stats = None
         if with_stats:
             b = ids.shape[0]
@@ -145,13 +166,23 @@ class PartitionedBackend:
         self.spec = spec
         self.pdb = pdb
         self.quant = spec.quantizer()
+        self.is_pq = spec.dtype == "pq"
+        self._cbs = (jnp.asarray(self.quant.codebooks)
+                     if self.is_pq else None)
         # quantized: `raw` holds the codes; rerank re-scores over the
-        # DEQUANTIZED rows (stage 2 stays float32, paper Fig. 4)
-        self.raw = (None if raw is None else
-                    np.asarray(raw) if self.quant is not None else
-                    np.asarray(raw, np.float32))
+        # DEQUANTIZED rows (stage 2 stays float32, paper Fig. 4). PQ is
+        # different: `raw` holds the TRUE float32 rows — reranking over
+        # decoded PQ rows would be a no-op (ADC already IS the distance to
+        # the reconstruction), so stage 2 needs the real vectors to
+        # recover recall.
+        if self.is_pq:
+            self.raw = None if raw is None else np.asarray(raw, np.float32)
+        else:
+            self.raw = (None if raw is None else
+                        np.asarray(raw) if self.quant is not None else
+                        np.asarray(raw, np.float32))
         if self.raw is not None:
-            flt = (self.raw if self.quant is None
+            flt = (self.raw if (self.quant is None or self.is_pq)
                    else self.quant.decode(self.raw))
             self.dev_vectors, self.dev_sqnorms = _device_vectors(flt)
         else:
@@ -160,8 +191,14 @@ class PartitionedBackend:
     @classmethod
     def build(cls, vectors: np.ndarray, spec: IndexSpec, mesh=None):
         p = cls.forced_partitions or spec.num_partitions
+        # dtype="pq": `vectors` are the ORIGINAL float32 rows — the graphs
+        # are built full-precision and quantize_db_vectors re-encodes the
+        # raw-data leaf to M-byte code rows afterwards (DiskANN-style:
+        # full-precision graph, PQ traversal)
         pdb = build_partitioned_db(vectors, p, spec.hnsw)
-        pdb = quantize_db_vectors(pdb, spec.dtype)
+        pdb = quantize_db_vectors(
+            pdb, spec.dtype,
+            spec.quantizer() if spec.dtype == "pq" else None)
         pdb = PartitionedDB(db=jax.tree.map(jnp.asarray, pdb.db),
                             num_partitions=pdb.num_partitions, dim=pdb.dim)
         return cls(spec, pdb, raw=vectors if spec.keep_vectors else None)
@@ -170,23 +207,33 @@ class PartitionedBackend:
         return SearchParams(ef=ef, k=k, metric=self.spec.metric,
                             fused_hops=self.spec.fused_hops)
 
+    def _lut(self, q):
+        """Per-query ADC tables for dtype='pq' (None otherwise)."""
+        if not self.is_pq:
+            return None
+        from repro.optim.compression import build_pq_lut
+        return build_pq_lut(q.astype(jnp.float32), self._cbs)
+
     def search(self, queries, k: int, ef: int, rerank: bool,
                with_stats: bool):
         p = self.params(k, ef)
         q = jnp.asarray(queries)
+        lut = self._lut(q)
         if rerank:
             if self.dev_vectors is None:
                 raise ValueError(
                     "rerank=True needs the raw vectors: build the index "
                     "with IndexSpec(keep_vectors=True)")
-            cand, _, st = search_partitioned_candidates(self.pdb, q, p)
-            rq = q if self.quant is None else self.quant.decode(q)
+            cand, _, st = search_partitioned_candidates(self.pdb, q, p, lut)
+            rq = (q if (self.quant is None or self.is_pq)
+                  else self.quant.decode(q))
             ids, dists = batched_rerank(
                 self.dev_vectors, self.dev_sqnorms, rq, cand, k,
                 self.spec.metric)
         else:
-            ids, dists, st = search_partitioned(self.pdb, q, p)
-            if self.quant is not None:   # code-space -> real-space
+            ids, dists, st = search_partitioned(self.pdb, q, p, lut)
+            if self.quant is not None and not self.is_pq:
+                # code-space -> real-space (PQ is already real-space)
                 dists = dists * jnp.float32(self.quant.dist_scale)
         stats = None
         if with_stats:
@@ -247,7 +294,9 @@ class DistributedBackend(PartitionedBackend):
                 f"num_partitions={spec.num_partitions} must divide over "
                 f"the mesh model axis ({n_model})")
         pdb = build_partitioned_db(vectors, spec.num_partitions, spec.hnsw)
-        pdb = quantize_db_vectors(pdb, spec.dtype)
+        pdb = quantize_db_vectors(
+            pdb, spec.dtype,
+            spec.quantizer() if spec.dtype == "pq" else None)
         pdb = shard_db(pdb, mesh)
         return cls(spec, pdb, mesh,
                    raw=vectors if spec.keep_vectors else None)
@@ -266,7 +315,7 @@ class DistributedBackend(PartitionedBackend):
             self._fns[key] = make_distributed_search(
                 self.mesh, self.params(k, ef), maxM0,
                 graph_axes=("model",), query_axes=dp_axes(self.mesh),
-                merge=merge)
+                merge=merge, pq=self.is_pq)
         return self._fns[key]
 
     def search(self, queries, k: int, ef: int, rerank: bool,
@@ -277,22 +326,31 @@ class DistributedBackend(PartitionedBackend):
         q = jax.device_put(
             jnp.asarray(queries),
             NamedSharding(self.mesh, P(dp if dp else None, None)))
+        extra = ()
+        if self.is_pq:
+            # LUTs shard exactly like the query rows they belong to
+            extra = (jax.device_put(
+                self._lut(jnp.asarray(queries)),
+                NamedSharding(self.mesh, P(dp if dp else None, None,
+                                           None))),)
         if rerank:
             if self.dev_vectors is None:
                 raise ValueError(
                     "rerank=True needs the raw vectors: build the index "
                     "with IndexSpec(keep_vectors=True)")
             # unmerged P*k candidate pool, exactly re-scored (stage 2)
-            cand, _, calcs = self._fn(k, ef, merge=False)(self.pdb.db, q)
+            cand, _, calcs = self._fn(k, ef, merge=False)(
+                self.pdb.db, q, *extra)
             rq = jnp.asarray(queries)
-            if self.quant is not None:
+            if self.quant is not None and not self.is_pq:
                 rq = self.quant.decode(rq)
             ids, dists = batched_rerank(
                 self.dev_vectors, self.dev_sqnorms, rq,
                 cand, k, self.spec.metric)
         else:
-            ids, dists, calcs = self._fn(k, ef)(self.pdb.db, q)
-            if self.quant is not None:   # code-space -> real-space
+            ids, dists, calcs = self._fn(k, ef)(self.pdb.db, q, *extra)
+            if self.quant is not None and not self.is_pq:
+                # code-space -> real-space (PQ is already real-space)
                 dists = dists * jnp.float32(self.quant.dist_scale)
         stats = None
         if with_stats:

@@ -29,6 +29,7 @@ from repro.api import metrics as _metrics
 from repro.api.backends import get_backend
 from repro.api.types import (
     FORMAT_VERSION,
+    PQ_FORMAT_VERSION,
     IndexSpec,
     SearchRequest,
     SearchResponse,
@@ -88,11 +89,24 @@ class SearchService:
                     f"paper's metric): code-space squared-L2 is a pure "
                     f"rescaling of real-space squared-L2, which does not "
                     f"hold for {spec.metric!r}")
-            from repro.optim.compression import VectorQuantizer
-            quant = VectorQuantizer.fit(prepared, spec.dtype)
-            spec = dataclasses.replace(spec, qscale=quant.scale,
-                                       qzero=quant.zero_point)
-            prepared = quant.encode(prepared)
+            if spec.dtype == "pq":
+                # PQ: fit codebooks (or REUSE pre-fitted ones riding the
+                # spec — that's how cluster shards share one code space),
+                # then hand backends the ORIGINAL float32 vectors: graphs
+                # are built full-precision (DiskANN-style) and the backend
+                # swaps code rows in afterwards.
+                from repro.optim.compression import PQQuantizer
+                if spec.pq_codebooks is None:
+                    quant = PQQuantizer.fit(prepared, spec.pq_m,
+                                            seed=spec.hnsw.seed)
+                    spec = dataclasses.replace(
+                        spec, pq_codebooks=quant.to_json()["codebooks"])
+            else:
+                from repro.optim.compression import VectorQuantizer
+                quant = VectorQuantizer.fit(prepared, spec.dtype)
+                spec = dataclasses.replace(spec, qscale=quant.scale,
+                                           qzero=quant.zero_point)
+                prepared = quant.encode(prepared)
         return cls(spec, backend_cls.build(prepared, spec, mesh=mesh))
 
     # -- serving ------------------------------------------------------------
@@ -117,9 +131,12 @@ class SearchService:
                 q = self.metric.prepare_queries(np.asarray(q))
             # else: leave device arrays on device — the kernels cast to f32
             # themselves, so no host round-trip on the hot path
-            if self.quantizer is not None:
+            if self.quantizer is not None and self.spec.dtype != "pq":
                 # one edge quantization feeds every backend the same codes —
-                # this is what keeps quantized partitioned/csd bit-identical
+                # this is what keeps quantized partitioned/csd bit-identical.
+                # PQ queries stay float32 (asymmetric distance): each
+                # backend builds the per-query LUT from the spec's
+                # codebooks through the one shared jitted builder.
                 q = self.quantizer.encode_f32(np.asarray(q))
             ids, dists, stats = self.backend.search(
                 q, k=request.k, ef=request.ef, rerank=request.rerank,
@@ -143,7 +160,9 @@ class SearchService:
             prev = latest_step(path)
             step = 0 if prev is None else prev + 1
         out = save_checkpoint(path, step, self.backend.state_tree())
-        manifest = {"format_version": FORMAT_VERSION,
+        version = (PQ_FORMAT_VERSION if self.spec.dtype == "pq"
+                   else FORMAT_VERSION)
+        manifest = {"format_version": version,
                     "spec": self.spec.to_json(),
                     "latest_saved_step": step}
         with open(os.path.join(path, MANIFEST_NAME), "w") as f:
@@ -174,13 +193,14 @@ class SearchService:
         with open(manifest_path) as f:
             manifest = json.load(f)
         version = manifest.get("format_version")
-        if version != FORMAT_VERSION:
+        if version not in (FORMAT_VERSION, PQ_FORMAT_VERSION):
             hint = (" (a mutable segmented index — open it with "
                     "repro.api.MutableSearchService.load)"
                     if version == 2 else "")
             raise ValueError(
                 f"index at {path!r} has format_version={version}; "
-                f"this build reads version {FORMAT_VERSION}{hint}")
+                f"this build reads versions {FORMAT_VERSION} and "
+                f"{PQ_FORMAT_VERSION}{hint}")
         spec = IndexSpec.from_json(manifest["spec"])
         if step is None:
             raise FileNotFoundError(

@@ -19,11 +19,16 @@ from typing import Any
 from repro.core.hnsw_graph import HNSWConfig
 
 __all__ = ["IndexSpec", "SearchRequest", "SearchResponse", "QueryStats",
-           "FORMAT_VERSION"]
+           "FORMAT_VERSION", "PQ_FORMAT_VERSION"]
 
 # Version of the on-disk index layout (manifest + checkpoint step dirs).
 # Bump when the backend state trees change incompatibly.
 FORMAT_VERSION = 1
+# Product-quantized indexes (dtype="pq"): same layout as version 1 plus
+# fitted PQ codebooks riding the spec (and an extra f32 rerank table in csd
+# stores). Written only when spec.dtype == "pq"; SearchService.load reads
+# both. (Version 2 is the mutable/ingest layout — see repro.ingest.)
+PQ_FORMAT_VERSION = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +52,21 @@ class IndexSpec:
               SearchService.build — never set them by hand; they ride the
               spec into the index manifest so a saved quantized index is
               self-describing.
+              dtype="pq" is product quantization (m subspaces x 256
+              centroids, 1 byte per subspace — the 16-64x that fits
+              SIFT1B-class data): codes are stored everywhere vectors
+              live, traversal computes asymmetric distances through a
+              per-query [m, 256] LUT, and stage-2 rerank uses true
+              float32 rows. l2 metric only; saved with manifest
+              format_version 3.
+    pq_m    : dtype="pq" only — number of subspaces (must divide the
+              vector dim). Row size becomes pq_m bytes.
+    pq_codebooks : the fitted PQ codebooks as nested lists
+              ([pq_m][256][dsub], JSON-ready). Fitted by
+              SearchService.build (or reused verbatim when pre-set, which
+              is how cluster shards share one code space) — they ride the
+              spec into the manifest so a saved PQ index is
+              self-describing and bit-reproducible.
     hnsw    : graph construction knobs (ignored by the exact backend)
     keep_vectors : retain the raw vectors alongside the graph — required
               for `SearchRequest.rerank` on the in-memory graph backends and
@@ -85,11 +105,24 @@ class IndexSpec:
     qscale: float | None = None
     qzero: int | None = None
     fused_hops: int = 1
+    pq_m: int = 8
+    pq_codebooks: Any = None  # nested lists [pq_m][256][dsub], JSON-ready
 
     def quantizer(self):
-        """The fitted VectorQuantizer, or None for the float32 path."""
+        """The fitted quantizer (VectorQuantizer or PQQuantizer), or None
+        for the float32 path."""
         if self.dtype == "float32":
             return None
+        if self.dtype == "pq":
+            from repro.optim.compression import PQQuantizer
+            if self.pq_codebooks is None:
+                raise ValueError(
+                    "dtype='pq' spec has no fitted pq_codebooks — build PQ "
+                    "indexes through SearchService.build")
+            cb = self.pq_codebooks
+            dsub = len(cb[0][0])
+            return PQQuantizer.from_json(
+                {"m": self.pq_m, "dsub": dsub, "codebooks": cb})
         from repro.optim.compression import VectorQuantizer
         if self.qscale is None or self.qzero is None:
             raise ValueError(

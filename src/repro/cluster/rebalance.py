@@ -66,8 +66,23 @@ def build_cluster(vectors, spec, n_shards: int, *, replicas: int = 1,
     The returned router's results are bit-identical to a single
     `SearchService` built over `vectors` with
     `num_partitions = n_shards * spec.num_partitions`.
+
+    dtype="pq": the codebooks are fit ONCE here, over the union, and ride
+    the spec into every shard (SearchService.build reuses pre-fitted
+    codebooks instead of fitting per shard) — one code space cluster-wide.
+    The deterministic fit makes them bitwise equal to what the equivalent
+    single index would fit over the same rows and seed, which is what
+    extends the bit-parity contract to PQ.
     """
     vectors = np.ascontiguousarray(np.asarray(vectors, np.float32))
+    if getattr(spec, "dtype", "float32") == "pq" \
+            and spec.pq_codebooks is None:
+        import dataclasses
+
+        from repro.optim.compression import PQQuantizer
+        quant = PQQuantizer.fit(vectors, spec.pq_m, seed=spec.hnsw.seed)
+        spec = dataclasses.replace(
+            spec, pq_codebooks=quant.to_json()["codebooks"])
     bounds = shard_bounds(vectors.shape[0], n_shards)
     storage_root = None
     if spec.backend == "csd":

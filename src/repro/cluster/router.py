@@ -191,11 +191,24 @@ class ClusterRouter:
 
     def __init__(self, spec, shards, *, path: str | None = None,
                  version: int = 0, publish: bool = True):
-        if getattr(spec, "dtype", "float32") != "float32":
+        dtype = getattr(spec, "dtype", "float32")
+        if dtype == "pq":
+            # PQ is the one quantized dtype clusters support: the fitted
+            # codebooks ride the IndexSpec (build_cluster fits them ONCE
+            # over the union), so every shard shares a single code space
+            # and the gathered merge stays comparable — and bit-identical
+            # to the equivalent single index, whose deterministic fit over
+            # the same rows/seed yields the same codebooks.
+            if getattr(spec, "pq_codebooks", None) is None:
+                raise ValueError(
+                    "a pq cluster needs pre-fitted codebooks riding the "
+                    "spec (build_cluster fits them over the union); "
+                    "per-shard fits would not share one code space")
+        elif dtype != "float32":
             raise ValueError(
-                "clusters are float32-only: quantizer codebooks are fit "
-                "per build, so per-shard quantized code spaces would not "
-                "be comparable across shards")
+                "clusters are float32 or pq only: scalar quantizer scales "
+                "are fit per build, so per-shard quantized code spaces "
+                "would not be comparable across shards")
         self.spec = spec
         self.path = path
         self._shards: list[ShardClient] = list(shards)

@@ -294,18 +294,21 @@ def _stage1_candidates(service, queries, k: int, ef: int):
     from repro.core.search import SearchParams
     backend = service.backend
     p = SearchParams(ef=ef, k=k, metric=service.spec.metric)
+    is_pq = service.spec.dtype == "pq"
     if hasattr(backend, "reader"):                       # csd
         from repro.store.csd import store_search
-        cand, _, hops, calcs, _ = store_search(backend.reader, queries, p,
-                                               merge=False)
+        cand, _, hops, calcs, _ = store_search(
+            backend.reader, queries, p, merge=False,
+            pq_quant=backend.quant if is_pq else None)
         return (np.asarray(cand),
                 {"hops": np.asarray(hops, np.int64),
                  "dist_calcs": np.asarray(calcs, np.int64)})
     if hasattr(backend, "pdb"):                          # partitioned/hnsw
         import jax.numpy as jnp
         from repro.core.partitioned import search_partitioned_candidates
+        q = jnp.asarray(queries)
         cand, _, st = search_partitioned_candidates(
-            backend.pdb, jnp.asarray(queries), p)
+            backend.pdb, q, p, backend._lut(q))
         return (np.asarray(cand),
                 {"hops": np.asarray(st.hops.sum(axis=0), np.int64),
                  "dist_calcs": np.asarray(st.dist_calcs.sum(axis=0),
@@ -328,6 +331,10 @@ def _rows_f32(service, local_ids: np.ndarray) -> np.ndarray:
                                side="right") - 1
         local = local_ids - r.partition_starts[part]
         rows = part * r.n_pad + local
+        if service.spec.dtype == "pq":
+            # TRUE float32 rows for the router's global stage 2 — the
+            # code rows would just reproduce the ADC distances
+            return r.read_rows("rerank_vectors", rows).astype(np.float32)
         return r.read_rows("vectors", rows)[:, : r.dim].astype(np.float32)
     if getattr(backend, "dev_vectors", None) is not None:  # keep_vectors
         return np.asarray(backend.dev_vectors)[local_ids]

@@ -43,7 +43,7 @@ def shard_db(pdb: PartitionedDB, mesh) -> PartitionedDB:
 
 def make_distributed_search(mesh, p: SearchParams, maxM0: int,
                             graph_axes=("model",), query_axes=None,
-                            merge: bool = True):
+                            merge: bool = True, pq: bool = False):
     """Builds the jitted two-stage distributed search for a mesh.
 
     graph_axes : mesh axes the partitions shard over. For the SIFT1B-scale
@@ -54,25 +54,33 @@ def make_distributed_search(mesh, p: SearchParams, maxM0: int,
     merge : True -> (ids[B, k], dists[B, k], calcs[B, 1]) after the stage-2
         rank merge. False -> the gathered unmerged candidate pool
         (ids[B, P*k], dists[B, P*k], calcs[B, 1]) for an external rerank.
+    pq : dtype="pq" — the returned function takes a third argument, the
+        per-query [B, M, 256] ADC LUT, sharded like the queries (codebooks
+        are global, so the tables replicate over the graph axes exactly
+        like the query rows they belong to).
     calcs is the per-query distance-evaluation count summed over every
     partition on every device (the Fig. 9 "vector reads").
     """
     p = p.resolve(maxM0)
     query_axes = tuple(query_axes or ())
+    qspec = P(query_axes if query_axes else None, None)
     in_specs = (
         DeviceDB(*(P(graph_axes) for _ in DeviceDB._fields)),
-        P(query_axes if query_axes else None, None),
+        qspec,
     )
-    qspec = P(query_axes if query_axes else None, None)
+    if pq:
+        in_specs = in_specs + (
+            P(query_axes if query_axes else None, None, None),)
     out_specs = (qspec, qspec, qspec)
 
     @functools.partial(
         shard_map, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_rep=False)
-    def _search(db_local: DeviceDB, queries):
+    def _search(db_local: DeviceDB, queries, *lut):
+        lut = lut[0] if lut else None
         # stage 1: every local partition searches the local query shard.
         ids, ds, stats = jax.vmap(
-            lambda db: batch_search(db, queries, p))(db_local)
+            lambda db: batch_search(db, queries, p, lut))(db_local)
         # [P_loc, B_loc, k] -> [B_loc, P_loc * k]
         ids = jnp.swapaxes(ids, 0, 1).reshape(queries.shape[0], -1)
         ds = jnp.swapaxes(ds, 0, 1).reshape(queries.shape[0], -1)

@@ -74,19 +74,36 @@ def build_partitioned_db(
     return PartitionedDB(db=stacked, num_partitions=num_partitions, dim=vectors.shape[1])
 
 
-def quantize_db_vectors(pdb: PartitionedDB, dtype: str) -> PartitionedDB:
-    """Swap the stacked DB's raw-data leaf to stored codes (uint8/int8).
+def quantize_db_vectors(pdb: PartitionedDB, dtype: str,
+                        quant=None) -> PartitionedDB:
+    """Swap the stacked DB's raw-data leaf to stored codes.
 
     The single source of the codes-swap invariant for BOTH the in-memory
-    backends and the block store (csd): the graphs were built over
-    code-valued float32, so the integer cast is exact; only the storage
-    representation shrinks (4x for uint8). No-op for dtype="float32" or a
-    leaf that already holds codes."""
+    backends and the block store (csd): for uint8/int8 the graphs were
+    built over code-valued float32, so the integer cast is exact; only the
+    storage representation shrinks (4x for uint8). For dtype="pq" pass the
+    fitted PQQuantizer: the graphs were built over the ORIGINAL float32
+    vectors (full-precision graph, PQ traversal — DiskANN-style) and each
+    [n_pad, d] row is re-encoded to an [n_pad, pq_m] uint8 code row (pad
+    rows encode garbage but stay unreachable: neighbor lists never point
+    at them and sqnorms keep their +inf markers). No-op for
+    dtype="float32" or a leaf that already holds codes."""
     if dtype == "float32":
         return pdb
     from repro.optim.compression import code_dtype
-    db = pdb.db._replace(
-        vectors=np.asarray(pdb.db.vectors).astype(code_dtype(dtype)))
+    vecs = np.asarray(pdb.db.vectors)
+    if vecs.dtype == code_dtype(dtype) and (
+            dtype != "pq" or vecs.shape[-1] == quant.m):
+        return pdb
+    if dtype == "pq":
+        if quant is None:
+            raise ValueError("dtype='pq' needs the fitted PQQuantizer")
+        p_ax, n_pad, _ = vecs.shape
+        flat = vecs.reshape(p_ax * n_pad, -1)[:, :pdb.dim]
+        codes = quant.encode(np.ascontiguousarray(flat, np.float32))
+        db = pdb.db._replace(vectors=codes.reshape(p_ax, n_pad, quant.m))
+        return pdb._replace(db=db)
+    db = pdb.db._replace(vectors=vecs.astype(code_dtype(dtype)))
     return pdb._replace(db=db)
 
 
@@ -109,12 +126,16 @@ def merge_topk(ids, dists, k: int):
 
 
 @functools.partial(jax.jit, static_argnames=("p",))
-def search_partitioned(pdb: PartitionedDB, queries, p: SearchParams):
+def search_partitioned(pdb: PartitionedDB, queries, p: SearchParams,
+                       lut=None):
     """Single-host two-stage search: vmap stage 1 over partitions + merge.
 
-    Returns (ids[B, k], dists[B, k], stats) with global ids.
+    Returns (ids[B, k], dists[B, k], stats) with global ids. `lut`
+    ([B, M, 256]) is the per-query ADC table for dtype="pq" — shared
+    across partitions (one code space per index).
     """
-    ids, ds, stats = jax.vmap(lambda db: batch_search(db, queries, p))(pdb.db)
+    ids, ds, stats = jax.vmap(
+        lambda db: batch_search(db, queries, p, lut))(pdb.db)
     # ids: [P, B, k] -> [B, P, k]
     ids = jnp.swapaxes(ids, 0, 1)
     ds = jnp.swapaxes(ds, 0, 1)
@@ -123,13 +144,15 @@ def search_partitioned(pdb: PartitionedDB, queries, p: SearchParams):
 
 
 @functools.partial(jax.jit, static_argnames=("p",))
-def search_partitioned_candidates(pdb: PartitionedDB, queries, p: SearchParams):
+def search_partitioned_candidates(pdb: PartitionedDB, queries,
+                                  p: SearchParams, lut=None):
     """Stage 1 only: the P*K intermediate candidates, unmerged.
 
     Returns (ids[B, P*k], dists[B, P*k], stats) — the pool the paper's
     stage-2 brute force re-scores (api.rerank.batched_rerank consumes it).
     """
-    ids, ds, stats = jax.vmap(lambda db: batch_search(db, queries, p))(pdb.db)
+    ids, ds, stats = jax.vmap(
+        lambda db: batch_search(db, queries, p, lut))(pdb.db)
     b = queries.shape[0]
     ids = jnp.swapaxes(ids, 0, 1).reshape(b, -1)
     ds = jnp.swapaxes(ds, 0, 1).reshape(b, -1)

@@ -29,6 +29,17 @@ f32 and accumulates in f32 (exact for 8-bit codes up to ~256 dims, since
 all partial dot products are integers < 2^24), so the traversal is the
 same kernel in code space. ``db.sqnorms`` stays float32 (code norms; +inf
 pad markers). The caller rescales distances by ``scale**2`` at the edge.
+
+Product-quantized databases (IndexSpec.dtype "pq"): ``db.vectors`` holds
+[n_pad, M] uint8 PQ codes and the caller passes ``lut`` — the per-query
+[M, 256] asymmetric-distance table (optim.compression.build_pq_lut).
+Every distance evaluation becomes `pq_lut_distances`: a table gather
+followed by `jnp.sum(..., axis=-1)` over subspaces — the LUT extension of
+the mul+sum reduction-order rule below. Queries are NOT padded to the
+code width (the LUT is the per-query operand), and layer 0 always runs
+the hop-stepped path (the in-memory fused traversal kernel has no PQ
+variant; bit-identity across `fused_hops` then holds trivially — the csd
+backend's PQ supersteps replay these exact semantics).
 """
 
 from __future__ import annotations
@@ -48,6 +59,7 @@ __all__ = [
     "bitmap_words",
     "merge_sorted",
     "metric_distance",
+    "pq_lut_distances",
     "visited_test_and_set",
     "search_one",
     "batch_search",
@@ -154,14 +166,33 @@ def metric_distance(metric: str, dot, xsq, qsq):
     raise ValueError(f"unknown metric {metric!r}")
 
 
-def _batch_distances(db: DeviceDB, q, qsq, ids, valid, metric: str = "l2"):
+def pq_lut_distances(lut, codes):
+    """ADC distances for PQ code rows: lut [M, 256] x codes [N, M] -> [N].
+
+    `jnp.take_along_axis(lut.T, codes, axis=0)` then `jnp.sum(..., -1)` is
+    the ONE accumulation every engine path uses (in-memory traversal, csd
+    hop kernels and supersteps, rerank candidate pools) — the PQ analogue
+    of the mul+sum rule in `_batch_distances`. Re-deriving it with a
+    different gather shape or reduction order gives last-ulp-different
+    sums and breaks the partitioned==csd==cluster bit-identity contract.
+    """
+    vals = jnp.take_along_axis(lut.T, codes.astype(jnp.int32), axis=0)
+    return jnp.sum(vals, axis=-1)
+
+
+def _batch_distances(db: DeviceDB, q, qsq, ids, valid, metric: str = "l2",
+                     lut=None):
     """Distances from q to db.vectors[ids]; invalid lanes -> +inf.
 
     One fused gather + matvec: the whole (padded) neighbor list is evaluated
     at once — the analogue of the paper's 8x16-PE distance array consuming a
-    full 128-dim vector per cycle.
+    full 128-dim vector per cycle. With `lut` set (dtype="pq"), the gather
+    pulls M-byte code rows and the matvec becomes a LUT gather + sum.
     """
     safe = jnp.where(valid, ids, 0)
+    if lut is not None:
+        d = pq_lut_distances(lut, db.vectors[safe])
+        return jnp.where(valid, d, jnp.inf), safe
     vecs = db.vectors[safe].astype(jnp.float32)  # [M, D_pad] (codes -> f32)
     # mul+sum instead of `vecs @ q`: XLA compiles a matvec with a
     # context-dependent reduction order (gather-fused vs pre-gathered vs
@@ -178,12 +209,15 @@ def _batch_distances(db: DeviceDB, q, qsq, ids, valid, metric: str = "l2"):
 # ---------------------------------------------------------------------------
 
 
-def _greedy_upper(db: DeviceDB, q, qsq, p: SearchParams):
+def _greedy_upper(db: DeviceDB, q, qsq, p: SearchParams, lut=None):
     """Descend from db.max_level to layer 1, returning the layer-0 entry."""
     ep = db.entry.astype(jnp.int32)
-    ep_vec = db.vectors[ep].astype(jnp.float32)
-    ep_d = metric_distance(p.metric, jnp.sum(ep_vec * q, axis=-1),
-                           db.sqnorms[ep], qsq)
+    if lut is not None:
+        ep_d = pq_lut_distances(lut, db.vectors[ep][None])[0]
+    else:
+        ep_vec = db.vectors[ep].astype(jnp.float32)
+        ep_d = metric_distance(p.metric, jnp.sum(ep_vec * q, axis=-1),
+                               db.sqnorms[ep], qsq)
     n_layers = db.up_nbrs.shape[0]               # static cap - 1
 
     def layer_body(i, carry):
@@ -200,7 +234,8 @@ def _greedy_upper(db: DeviceDB, q, qsq, p: SearchParams):
             row = db.up_ptr[c]
             nbrs = db.up_nbrs[layer - 1, jnp.maximum(row, 0)]
             valid = (nbrs >= 0) & (row >= 0)
-            d, safe = _batch_distances(db, q, qsq, nbrs, valid, p.metric)
+            d, safe = _batch_distances(db, q, qsq, nbrs, valid, p.metric,
+                                       lut)
             j = jnp.argmin(d)
             best_d, best = d[j], safe[j]
             improved = best_d < c_d
@@ -229,7 +264,8 @@ def _greedy_upper(db: DeviceDB, q, qsq, p: SearchParams):
 # ---------------------------------------------------------------------------
 
 
-def _search_layer0(db: DeviceDB, q, qsq, ep, ep_d, p: SearchParams):
+def _search_layer0(db: DeviceDB, q, qsq, ep, ep_d, p: SearchParams,
+                   lut=None):
     n_words = bitmap_words(db.vectors.shape[0])
     C, EF = p.cand_size, p.ef
 
@@ -260,7 +296,7 @@ def _search_layer0(db: DeviceDB, q, qsq, ep, ep_d, p: SearchParams):
         valid = nbrs >= 0
         was, visited = visited_test_and_set(visited, jnp.where(valid, nbrs, 0), valid)
         active = valid & ~was
-        d, safe = _batch_distances(db, q, qsq, nbrs, active, p.metric)
+        d, safe = _batch_distances(db, q, qsq, nbrs, active, p.metric, lut)
         calcs = calcs + jnp.sum(active)
         # line 11 guard: only candidates that can enter the final list.
         d = jnp.where(d < fin_d[-1], d, jnp.inf)
@@ -332,29 +368,41 @@ def _search_layer0_fused(db: DeviceDB, queries, qsq, ep, ep_d,
 # ---------------------------------------------------------------------------
 
 
-def search_one(db: DeviceDB, q, p: SearchParams):
+def search_one(db: DeviceDB, q, p: SearchParams, lut=None):
     """Full multi-layer search for one query. Returns (ids[k], dists[k], stats).
 
     Returned ids are *global* ids (db.gids applied); -1 marks empty slots.
+    `lut` is the per-query [M, 256] ADC table for dtype="pq" databases.
     """
     q = q.astype(jnp.float32)
     qsq = q @ q
-    ep, ep_d, up_calcs = _greedy_upper(db, q, qsq, p)
-    fin_d, fin_i, hops, calcs = _search_layer0(db, q, qsq, ep, ep_d, p)
+    ep, ep_d, up_calcs = _greedy_upper(db, q, qsq, p, lut)
+    fin_d, fin_i, hops, calcs = _search_layer0(db, q, qsq, ep, ep_d, p, lut)
     k_d, k_i = fin_d[: p.k], fin_i[: p.k]
     k_g = jnp.where(k_i >= 0, db.gids[jnp.maximum(k_i, 0)], -1)
     return k_g, k_d, SearchStats(hops, calcs + up_calcs)
 
 
 @functools.partial(jax.jit, static_argnames=("p",))
-def batch_search(db: DeviceDB, queries, p: SearchParams):
+def batch_search(db: DeviceDB, queries, p: SearchParams, lut=None):
     """Multi-query search (paper §5.1.3): lockstep-masked vmap.
 
     `p.fused_hops > 1` swaps the layer-0 stage for the fused multi-hop
     Pallas kernel (H hops per invocation, beam state in VMEM); the upper
     layers and the k-extraction are shared, and results stay bit-identical
-    to the hop-stepped path."""
+    to the hop-stepped path.
+
+    `lut` ([B, M, 256]) switches distances to PQ asymmetric lookups. PQ
+    always runs the hop-stepped layer 0 (no PQ variant of the fused
+    in-memory kernel), so results are trivially identical at every
+    `fused_hops` — matching the csd backend, whose PQ supersteps replay
+    these semantics. Queries are not padded: db.vectors holds M-byte code
+    rows and the LUT is the per-query operand.
+    """
     p = p.resolve(db.l0_nbrs.shape[1])
+    if lut is not None:
+        return jax.vmap(lambda q, t: search_one(db, q, p, t))(
+            queries.astype(jnp.float32), lut)
     d_pad = db.vectors.shape[-1]
     if queries.shape[-1] < d_pad:  # zero-pad to the lane-aligned raw-data table
         queries = jnp.pad(queries, ((0, 0), (0, d_pad - queries.shape[-1])))

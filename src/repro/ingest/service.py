@@ -511,7 +511,8 @@ class MutableSearchService:
             raise ValueError(
                 f"index at {path!r} has format_version={version}; mutable "
                 f"indexes are version {MUTABLE_FORMAT_VERSION} "
-                f"(SearchService.load reads version 1)")
+                f"(SearchService.load reads version 1, and version 3 — "
+                f"a product-quantized immutable index)")
         spec = IndexSpec.from_json(manifest["spec"])
         svc = cls(spec, seal_threshold=int(manifest["seal_threshold"]))
         svc._dim = manifest["dim"]

@@ -19,11 +19,17 @@ import jax.numpy as jnp
 from repro.kernels.l2dist import l2dist_pallas
 from repro.kernels.l2topk import l2topk_pallas
 from repro.kernels.attention import flash_attention_pallas
-from repro.kernels.qdist import l2dist_q_pallas, l2topk_q_pallas
+from repro.kernels.qdist import (
+    l2dist_q_pallas,
+    l2topk_q_pallas,
+    pq_adc_pallas,
+    pq_topk_pallas,
+)
 from repro.kernels.topk import topk_pallas
 from repro.kernels.traversal import fused_traversal_pallas
 
 __all__ = ["l2dist", "topk", "l2topk", "l2dist_q", "l2topk_q",
+           "pq_adc", "pq_topk",
            "flash_attention", "fused_layer0", "default_interpret"]
 
 
@@ -150,6 +156,51 @@ def l2topk_q(queries, xs, xsq=None, *, k=10, block_q=128, block_x=1024,
         q, x, xsq=xsq, k=k, block_q=block_q, block_x=block_x,
         interpret=interpret, out_scale=out_scale,
     )
+    return v[:bq], i[:bq]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_x",
+                                             "interpret"))
+def pq_adc(luts, codes, xpad=None, *, block_q=8, block_x=512,
+           interpret=None):
+    """PQ asymmetric distances for arbitrary shapes -> [Bq, Bx] f32.
+
+    luts are the per-query [M, 256] tables (optim.compression.build_pq_lut);
+    codes are [Bx, M] uint8 rows. Optional xpad carries +inf markers for
+    database padding rows (padding added here also gets +inf)."""
+    interpret = default_interpret() if interpret is None else interpret
+    bq = luts.shape[0]
+    bx = codes.shape[0]
+    bq_p, bx_p = _round_up(bq, block_q), _round_up(bx, block_x)
+    lp = _pad_rows(luts, bq_p)
+    cp = _pad_rows(codes, bx_p)
+    if xpad is None:
+        xpad = jnp.zeros((bx,), jnp.float32)
+    xp = jnp.pad(xpad, (0, bx_p - bx), constant_values=jnp.inf)
+    out = pq_adc_pallas(lp, cp, xp, block_q=block_q, block_x=block_x,
+                        interpret=interpret)
+    return out[:bq, :bx]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_x",
+                                             "interpret"))
+def pq_topk(luts, codes, xpad=None, *, k=10, block_q=8, block_x=1024,
+            interpret=None):
+    """Fused PQ k-NN over codes: (dists [Bq, k] ascending, ids [Bq, k]).
+
+    The streamed database stays M bytes/row end to end (16x less traffic
+    than uint8 at M=8/d=128); padding rows are masked out via +inf."""
+    interpret = default_interpret() if interpret is None else interpret
+    bq = luts.shape[0]
+    bx = codes.shape[0]
+    bq_p, bx_p = _round_up(bq, block_q), _round_up(bx, block_x)
+    lp = _pad_rows(luts, bq_p)
+    cp = _pad_rows(codes, bx_p)
+    if xpad is None:
+        xpad = jnp.zeros((bx,), jnp.float32)
+    xp = jnp.pad(xpad, (0, bx_p - bx), constant_values=jnp.inf)
+    v, i = pq_topk_pallas(lp, cp, xp, k=k, block_q=block_q,
+                          block_x=block_x, interpret=interpret)
     return v[:bq], i[:bq]
 
 

@@ -19,6 +19,14 @@ the running per-row top-k (same "never spill the matrix" argument as
 `l2topk.py` — now with the streamed database 4x smaller again).
 References live in `kernels/ref.py` (`l2dist_q_ref` / `l2topk_q_ref`);
 `kernels/ops.py` wraps both with padding for arbitrary shapes.
+
+`pq_adc_pallas` / `pq_topk_pallas` are the product-quantization analogue
+(dtype="pq"): the database streams M uint8 codes per row (16x less than
+uint8 at M=8/d=128), the per-query [M, 256] LUT lives in VMEM, and the
+inner loop is a table-gather + accumulate over the codes — one add per
+subspace, in subspace order, which the numpy refs reproduce exactly
+(bitwise parity). The LUT itself is built once per query on-device by
+`optim.compression.build_pq_lut` and passed in.
 """
 
 from __future__ import annotations
@@ -33,7 +41,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels._compat import COMPILER_PARAMS as _COMPILER_PARAMS
 from repro.kernels.topk import _select_k
 
-__all__ = ["l2dist_q_pallas", "l2topk_q_pallas"]
+__all__ = ["l2dist_q_pallas", "l2topk_q_pallas",
+           "pq_adc_pallas", "pq_topk_pallas"]
 
 
 def _code_sqnorms(x):
@@ -193,3 +202,151 @@ def l2topk_q_pallas(
         ),
         interpret=interpret,
     )(qsq, xsq, queries, xs)
+
+
+# ---------------------------------------------------------------------------
+# Product quantization: asymmetric distance (ADC) over uint8 codes
+# ---------------------------------------------------------------------------
+
+
+def _pq_block_dists(lut, codes, xpad):
+    """[bq, m, 256] LUT x [bx, m] codes -> [bq, bx] ADC distances.
+
+    One gather + one add PER SUBSPACE, in subspace order m=0..M-1 — the
+    PQ extension of core.search's mul+sum reduction-order rule. The numpy
+    refs accumulate in the same order, so kernel == ref bitwise; every
+    engine path gathers from the same `build_pq_lut` tables, so changing
+    this order (tree reduction, einsum) breaks cross-backend parity.
+    `xpad` is +inf on database padding rows (inf + finite stays inf, the
+    same marker trick as the xsq pad in the integer kernels).
+    """
+    m = lut.shape[1]
+    codes = codes.astype(jnp.int32)
+    acc = jnp.zeros((lut.shape[0], codes.shape[0]), jnp.float32)
+    acc = acc + xpad.astype(jnp.float32)[None, :]
+    for mi in range(m):
+        # lut[:, mi, :] is [bq, 256]; codes[:, mi] is [bx] -> [bq, bx]
+        acc = acc + jnp.take(lut[:, mi, :], codes[:, mi], axis=1)
+    return acc
+
+
+def _pq_adc_kernel(lut_ref, codes_ref, xpad_ref, out_ref):
+    out_ref[...] = _pq_block_dists(lut_ref[...], codes_ref[...],
+                                   xpad_ref[...])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_x", "interpret"))
+def pq_adc_pallas(
+    luts,             # [Bq, M, 256] f32 per-query LUTs (build_pq_lut)
+    codes,            # [Bx, M] uint8 PQ codes
+    xpad=None,        # [Bx] f32, +inf marks database padding rows
+    *,
+    block_q: int = 8,
+    block_x: int = 512,
+    interpret: bool = True,
+):
+    """ADC distance matrix D2[Bq, Bx] = sum_m lut[q, m, codes[x, m]].
+
+    The streamed database is M bytes/row; each program holds block_q LUTs
+    (block_q * M * 1KB of VMEM) and a block_x x M code tile. Dims must
+    divide the block sizes (ops.pq_adc pads arbitrary shapes). Note the
+    code tile's last dim is M (not lane-padded): fine in interpret mode
+    and exactly the point of PQ — on a real TPU lowering the codes would
+    ride an int8-tiled layout.
+    """
+    bq, m, k256 = luts.shape
+    bx = codes.shape[0]
+    assert bq % block_q == 0 and bx % block_x == 0 and k256 == 256
+    if xpad is None:
+        xpad = jnp.zeros((bx,), jnp.float32)
+    grid = (bq // block_q, bx // block_x)
+    return pl.pallas_call(
+        _pq_adc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, m, 256), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_x, m), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_x,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_x), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bq, bx), jnp.float32),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        interpret=interpret,
+    )(luts, codes, xpad)
+
+
+def _pq_topk_kernel(k: int, block_x: int):
+    def _kernel(lut_ref, codes_ref, xpad_ref, out_v_ref, out_i_ref,
+                run_v, run_i):
+        j = pl.program_id(1)
+
+        @pl.when(j == 0)
+        def _init():
+            run_v[...] = jnp.full_like(run_v, jnp.inf)
+            run_i[...] = jnp.full_like(run_i, -1)
+
+        d2 = _pq_block_dists(lut_ref[...], codes_ref[...], xpad_ref[...])
+        cols = jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1) + j * block_x
+        bv, bi = _select_k(d2, cols, k)
+        cat_v = jnp.concatenate([run_v[...], bv], axis=1)
+        cat_i = jnp.concatenate([run_i[...], bi], axis=1)
+        mv, mi = _select_k(cat_v, cat_i, k)
+        run_v[...] = mv
+        run_i[...] = mi
+
+        @pl.when(j == pl.num_programs(1) - 1)
+        def _flush():
+            out_v_ref[...] = run_v[...]
+            out_i_ref[...] = run_i[...]
+
+    return _kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_q", "block_x", "interpret"))
+def pq_topk_pallas(
+    luts,                 # [Bq, M, 256] f32 per-query LUTs
+    codes,                # [Bx, M] uint8 PQ codes
+    xpad=None,            # [Bx] f32, +inf marks padding rows
+    *,
+    k: int = 10,
+    block_q: int = 8,
+    block_x: int = 1024,
+    interpret: bool = True,
+):
+    """Fused PQ k-NN: (dists [Bq, k] ascending, ids). The top-k never
+    leaves VMEM; the database streams at M bytes/row."""
+    bq, m, k256 = luts.shape
+    bx = codes.shape[0]
+    assert bq % block_q == 0 and bx % block_x == 0 and k256 == 256
+    if xpad is None:
+        xpad = jnp.zeros((bx,), jnp.float32)
+    grid = (bq // block_q, bx // block_x)
+    return pl.pallas_call(
+        _pq_topk_kernel(k, block_x),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, m, 256), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_x, m), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_x,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bq, k), jnp.float32),
+            jax.ShapeDtypeStruct((bq, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k), jnp.float32),
+            pltpu.VMEM((block_q, k), jnp.int32),
+        ],
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(luts, codes, xpad)

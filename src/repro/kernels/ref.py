@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import jax
 
 __all__ = ["l2dist_ref", "topk_ref", "l2topk_ref",
-           "l2dist_q_ref", "l2topk_q_ref"]
+           "l2dist_q_ref", "l2topk_q_ref", "pq_adc_ref", "pq_topk_ref"]
 
 
 def l2dist_ref(queries, xs, qsq=None, xsq=None):
@@ -42,6 +42,25 @@ def l2topk_q_ref(queries, xs, qsq=None, xsq=None, *, k: int = 10,
                  out_scale: float = 1.0):
     v, i = topk_ref(jnp.maximum(l2dist_ref(queries, xs, qsq, xsq), 0.0), k)
     return v * jnp.float32(out_scale), i
+
+
+def pq_adc_ref(luts, codes, xpad=None):
+    """PQ asymmetric-distance oracle: [Bq, M, 256] LUTs x [Bx, M] codes ->
+    [Bq, Bx] f32. One gather + one add per subspace, in subspace order —
+    the same accumulation the Pallas kernel performs, so parity is
+    bitwise. `xpad` is +inf on database padding rows."""
+    luts = luts.astype(jnp.float32)
+    codes = codes.astype(jnp.int32)
+    acc = jnp.zeros((luts.shape[0], codes.shape[0]), jnp.float32)
+    if xpad is not None:
+        acc = acc + xpad.astype(jnp.float32)[None, :]
+    for mi in range(luts.shape[1]):
+        acc = acc + jnp.take(luts[:, mi, :], codes[:, mi], axis=1)
+    return acc
+
+
+def pq_topk_ref(luts, codes, xpad=None, *, k: int = 10):
+    return topk_ref(pq_adc_ref(luts, codes, xpad), k)
 
 
 def flash_attention_ref(q, k, v, *, causal=True):

@@ -86,11 +86,13 @@ def main():
     # paper's storage-bound analysis (§6.5 / Fig. 12). SIFT1B itself is
     # uint8 (IndexSpec.dtype): rows shrink 4x, and because the SSD link is
     # byte-limited the effective blocks-per-read shrink with them — the
-    # uint8 entry is the paper's actual operating point.
+    # uint8 entry is the paper's actual operating point. The pq entry
+    # (M=8 codes, 16x below uint8 at d=128) shows how far LUT-based ADC
+    # pushes the same storage-bound roofline.
     from repro.launch.costmodel import storage_cost, vector_row_bytes
     block_size = 4096
     storage = {}
-    for dtype in ("float32", "uint8"):
+    for dtype in ("float32", "uint8", "pq"):
         row_b = vector_row_bytes(128, dtype)
         # row_bytes/block_size of a block per vector read: the byte-limited
         # SSD-link view (block-packing locality at 8..32 rows per block)
@@ -119,7 +121,7 @@ def main():
     n_daily = 10_000_000
     seal_threshold = 1_000_000
     compact_every = 8
-    for dtype in ("float32", "uint8"):
+    for dtype in ("float32", "uint8", "pq"):
         row_b = vector_row_bytes(128, dtype)
         cc = compaction_cost(n_daily, row_b, seal_threshold, compact_every,
                              delete_frac=0.05, ssd_bw=hw.ssd_bw)

@@ -241,24 +241,34 @@ class StorageCost:
 # Bytes per stored vector component, per IndexSpec.dtype. The paper's
 # SIFT1B tables are uint8 — 1 byte/dim is the operating point that fits a
 # billion rows on the SmartSSD and feeds the integer distance units.
+# (dtype="pq" is priced per ROW, not per component — see vector_row_bytes.)
 VECTOR_DTYPE_BYTES = {"float32": 4, "uint8": 1, "int8": 1}
 
 
 def vector_row_bytes(dim: int, dtype: str = "float32",
-                     lane: int = 128) -> int:
+                     lane: int = 128, pq_m: int = 8) -> int:
     """Bytes of one raw-data-table row (lane-padded, paper Fig. 5).
 
     This is the per-vector-read unit of the storage term: a quantized
     store (dtype uint8/int8) moves 4x fewer bytes per hop than float32 at
     identical traversal behavior — the `csd` backend's measured
     `QueryStats.bytes_read` reflects the same shrink (modulo unchanged
-    neighbor-table traffic and block-granularity rounding)."""
+    neighbor-table traffic and block-granularity rounding).
+
+    dtype="pq" breaks the bytes-per-component mold: a row is `pq_m` uint8
+    subspace codes regardless of `dim` and is NOT lane-padded (the code
+    row IS the stored unit — reader.d_pad == M for a PQ store), so at
+    M=8, d=128 each hop moves 16x fewer raw-data bytes than uint8."""
+    if dtype == "pq":
+        if pq_m < 1:
+            raise ValueError(f"pq_m must be >= 1, got {pq_m}")
+        return int(pq_m)
     try:
         itemsize = VECTOR_DTYPE_BYTES[dtype]
     except KeyError:
         raise ValueError(
             f"unknown vector dtype {dtype!r}; "
-            f"available: {sorted(VECTOR_DTYPE_BYTES)}") from None
+            f"available: {sorted(VECTOR_DTYPE_BYTES) + ['pq']}") from None
     d_pad = ((dim + lane - 1) // lane) * lane
     return d_pad * itemsize
 

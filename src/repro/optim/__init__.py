@@ -1,7 +1,15 @@
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_lr
-from repro.optim.compression import CompressionConfig, compress_grads, decompress_grads
+from repro.optim.compression import (
+    CompressionConfig,
+    PQQuantizer,
+    VectorQuantizer,
+    build_pq_lut,
+    compress_grads,
+    decompress_grads,
+)
 
 __all__ = [
     "AdamWConfig", "adamw_init", "adamw_update", "cosine_lr",
     "CompressionConfig", "compress_grads", "decompress_grads",
+    "VectorQuantizer", "PQQuantizer", "build_pq_lut",
 ]

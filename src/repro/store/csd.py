@@ -32,6 +32,18 @@ paper's billion-point database fits the SmartSSD. The traversal runs in
 code space (gathered tiles cast to f32, same as the resident kernel),
 stage-1 distances are rescaled by `scale**2` at the edge, and stage-2
 rerank dequantizes the gathered rows back to float32.
+
+Product-quantized stores (IndexSpec.dtype "pq"): the raw-data table holds
+M-byte PQ code rows (16x smaller than uint8 at M=8/d=128) and every hop
+kernel takes the per-query [M, 256] ADC LUT instead of (q, qsq) — each
+distance is the `core.search.pq_lut_distances` gather + sum, so the csd
+traversal stays bit-identical to the in-memory PQ backends. Stage 1 skips
+the sqnorm reads entirely (ADC needs no norms), the superstep shadow
+predicts pops with a numpy twin of the same LUT (prediction-only:
+mispredictions roll back exactly like the f32 path), and stage-2 rerank
+reads TRUE float32 rows back from the extra `rerank_vectors` table —
+reranking over decoded PQ rows would recover nothing, since ADC already
+IS the distance to the reconstruction.
 """
 
 from __future__ import annotations
@@ -47,7 +59,8 @@ import numpy as np
 from repro.core.partitioned import (build_partitioned_db, merge_topk,
                                     quantize_db_vectors)
 from repro.core.search import (SearchParams, bitmap_words, merge_sorted,
-                               metric_distance)
+                               metric_distance, pq_lut_distances)
+from repro.optim.compression import build_pq_lut
 from repro.obs.metrics import REGISTRY
 from repro.obs.trace import TRACER
 from repro.store.layout import StoreReader, open_store, write_store
@@ -77,12 +90,29 @@ def _query_prep(q, ep_vec, ep_sq, metric):
     return jax.vmap(one)(q)
 
 
+@jax.jit
+def _query_prep_pq(luts, ep_code):
+    """ADC distance to the partition entry point, per query (dtype="pq").
+    Same expression as `_greedy_upper`'s PQ entry distance, so the bits
+    match the in-memory backends."""
+    return jax.vmap(lambda lut: pq_lut_distances(lut, ep_code[None])[0])(luts)
+
+
 @functools.partial(jax.jit, static_argnames=("metric",))
 def _upper_step(improved, c, c_d, calcs, nbrs, valid, vecs, sqs, q, qsq,
-                metric):
-    """One lockstep greedy hop in an upper layer (cf. _greedy_upper)."""
-    def one(improved, c, c_d, calcs, nbrs, valid, vecs, sqs, qq, qsq):
-        d = metric_distance(metric, jnp.sum(vecs * qq, axis=-1), sqs, qsq)
+                metric, lut=None):
+    """One lockstep greedy hop in an upper layer (cf. _greedy_upper).
+
+    With `lut` set (dtype="pq") `vecs` holds the gathered [M0, M] uint8
+    code tiles and the distance is the LUT gather + sum; sqs/q/qsq ride
+    along unused."""
+    def one(improved, c, c_d, calcs, nbrs, valid, vecs, sqs, qq, qsq,
+            *lut):
+        if lut:
+            d = pq_lut_distances(lut[0], vecs)
+        else:
+            d = metric_distance(metric, jnp.sum(vecs * qq, axis=-1), sqs,
+                                qsq)
         d = jnp.where(valid, d, jnp.inf)
         safe = jnp.where(valid, nbrs, 0)
         j = jnp.argmin(d)
@@ -93,29 +123,37 @@ def _upper_step(improved, c, c_d, calcs, nbrs, valid, vecs, sqs, q, qsq,
                 sel(jnp.where(imp, best_d, c_d), c_d),
                 improved & imp,
                 sel(calcs + jnp.sum(valid), calcs))
+    extra = () if lut is None else (lut,)
     return jax.vmap(one)(improved, c, c_d, calcs, nbrs, valid, vecs, sqs,
-                         q, qsq)
+                         q, qsq, *extra)
 
 
 @functools.partial(jax.jit, static_argnames=("metric",))
 def _layer0_step(active, cand_d, cand_i, fin_d, fin_i, hops, calcs,
-                 nbrs, act, vecs, sqs, q, qsq, metric):
+                 nbrs, act, vecs, sqs, q, qsq, metric, lut=None):
     """One lockstep beam hop at layer 0 (cf. _search_layer0's body).
 
     `act` = neighbor lanes that are valid AND unvisited — the visited
     bitmap is tested/updated on the host so only unvisited neighbors'
     vectors were read from the store (the paper's single-bit visited list
-    as a flash-read filter)."""
+    as a flash-read filter). With `lut` set (dtype="pq"), `vecs` holds
+    uint8 code tiles and the distance is the LUT gather + sum."""
     EF = fin_d.shape[-1]
     C = cand_d.shape[-1]
 
     def one(active, cand_d, cand_i, fin_d, fin_i, hops, calcs,
-            nbrs, act, vecs, sqs, qq, qsq):
+            nbrs, act, vecs, sqs, qq, qsq, *lut):
         ncand_d = jnp.roll(cand_d, -1).at[-1].set(jnp.inf)
         ncand_i = jnp.roll(cand_i, -1).at[-1].set(-1)
         # mul+sum matches core/search.py's _batch_distances bit for bit —
-        # see the note there on matvec reduction-order instability
-        d = metric_distance(metric, jnp.sum(vecs * qq, axis=-1), sqs, qsq)
+        # see the note there on matvec reduction-order instability; the PQ
+        # branch is the one pq_lut_distances accumulation for the same
+        # reason
+        if lut:
+            d = pq_lut_distances(lut[0], vecs)
+        else:
+            d = metric_distance(metric, jnp.sum(vecs * qq, axis=-1), sqs,
+                                qsq)
         d = jnp.where(act, d, jnp.inf)
         ncalcs = calcs + jnp.sum(act)
         d = jnp.where(d < fin_d[-1], d, jnp.inf)
@@ -130,14 +168,15 @@ def _layer0_step(active, cand_d, cand_i, fin_d, fin_i, hops, calcs,
                 sel(fd[:EF], fin_d), sel(fi[:EF], fin_i),
                 hops + active.astype(hops.dtype),
                 sel(ncalcs, calcs))
+    extra = () if lut is None else (lut,)
     return jax.vmap(one)(active, cand_d, cand_i, fin_d, fin_i, hops, calcs,
-                         nbrs, act, vecs, sqs, q, qsq)
+                         nbrs, act, vecs, sqs, q, qsq, *extra)
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "max_hops"))
 def _layer0_superstep(cand_d, cand_i, fin_d, fin_i, hops, calcs,
                       spec, nbrs, act, vecs, sqs, q, qsq, metric,
-                      max_hops):
+                      max_hops, lut=None):
     """Replay up to H speculated beam hops in ONE dispatch (cf. the per-hop
     `_layer0_step`) — the csd half of the fused traversal (paper Fig. 6).
 
@@ -164,7 +203,7 @@ def _layer0_superstep(cand_d, cand_i, fin_d, fin_i, hops, calcs,
     C = cand_d.shape[-1]
 
     def one(cand_d, cand_i, fin_d, fin_i, hops, calcs,
-            spec, nbrs, act, vecs, sqs, qq, qsq):
+            spec, nbrs, act, vecs, sqs, qq, qsq, *lut):
         ok = jnp.bool_(True)
         applied = jnp.int32(0)
         for h in range(H):                       # static unroll
@@ -177,8 +216,11 @@ def _layer0_superstep(cand_d, cand_i, fin_d, fin_i, hops, calcs,
             ok = ok & (match | (~live & ~sim_live))
             ncand_d = jnp.roll(cand_d, -1).at[-1].set(jnp.inf)
             ncand_i = jnp.roll(cand_i, -1).at[-1].set(-1)
-            d = metric_distance(metric, jnp.sum(vecs[h] * qq, axis=-1),
-                                sqs[h], qsq)
+            if lut:
+                d = pq_lut_distances(lut[0], vecs[h])
+            else:
+                d = metric_distance(metric, jnp.sum(vecs[h] * qq, axis=-1),
+                                    sqs[h], qsq)
             d = jnp.where(act[h], d, jnp.inf)
             ncalcs = calcs + jnp.sum(act[h])
             d = jnp.where(d < fin_d[-1], d, jnp.inf)
@@ -195,8 +237,9 @@ def _layer0_superstep(cand_d, cand_i, fin_d, fin_i, hops, calcs,
             calcs = sel(ncalcs, calcs)
             applied = applied + app.astype(jnp.int32)
         return cand_d, cand_i, fin_d, fin_i, hops, calcs, applied
+    extra = () if lut is None else (lut,)
     return jax.vmap(one)(cand_d, cand_i, fin_d, fin_i, hops, calcs,
-                         spec, nbrs, act, vecs, sqs, q, qsq)
+                         spec, nbrs, act, vecs, sqs, q, qsq, *extra)
 
 
 def _metric_dist_np(metric: str, dot, xsq, qsq):
@@ -211,6 +254,16 @@ def _metric_dist_np(metric: str, dot, xsq, qsq):
     if metric == "cosine":
         return 1.0 - dot
     raise ValueError(f"unknown metric {metric!r}")
+
+
+def _adc_np(lut_h: np.ndarray, codes: np.ndarray) -> np.ndarray:
+    """numpy twin of pq_lut_distances over [B, M0, M] code tiles —
+    prediction-only (superstep planning), same rollback safety as
+    `_metric_dist_np`: a last-ulp disagreement with the device LUT sum
+    costs a shorter superstep, never a wrong result."""
+    b_ix = np.arange(lut_h.shape[0])[:, None, None]
+    m_ix = np.arange(lut_h.shape[1])[None, None, :]
+    return lut_h[b_ix, m_ix, codes.astype(np.int64)].sum(-1)
 
 
 # ---------------------------------------------------------------------------
@@ -237,6 +290,21 @@ def _gather_vec_sq(reader: StoreReader, p: int, ids: np.ndarray,
     return vecs, sqs
 
 
+def _gather_codes(reader: StoreReader, p: int, ids: np.ndarray,
+                  mask: np.ndarray) -> np.ndarray:
+    """PQ variant of `_gather_vec_sq`: M-byte uint8 code tiles only
+    (reader.d_pad == M for a PQ store). ADC needs no norms, so the sqnorm
+    table is never read in stage 1 — code rows + graph rows are the whole
+    per-hop flash traffic. Masked lanes stay zero (inert: forced to +inf
+    downstream)."""
+    codes = np.zeros(ids.shape + (reader.d_pad,), np.uint8)
+    if mask.any():
+        uniq, inv = np.unique(ids[mask], return_inverse=True)
+        rows = reader.row("vectors", p, uniq)
+        codes[mask] = reader.read_rows("vectors", rows)[inv]
+    return codes
+
+
 def _visited_test_and_set(bitmap: np.ndarray, ids: np.ndarray,
                           valid: np.ndarray) -> np.ndarray:
     """Host mirror of core.search.visited_test_and_set over [B, M] lanes.
@@ -255,7 +323,7 @@ def _visited_test_and_set(bitmap: np.ndarray, ids: np.ndarray,
 
 def _layer0_supersteps(reader: StoreReader, p: int, q_pad, qsq, bitmap,
                        cand_d, cand_i, fin_d, fin_i, hops, calcs,
-                       sp: SearchParams):
+                       sp: SearchParams, luts=None, lut_h=None):
     """Speculative, PIPELINED H-hop supersteps over layer 0
     (`fused_hops > 1`).
 
@@ -279,7 +347,12 @@ def _layer0_supersteps(reader: StoreReader, p: int, q_pad, qsq, bitmap,
     its shadow resynced from device state, after which its next superstep
     is planned from truth and must apply ≥ 1 hop — no livelock. Returns
     the updated beam plus the number of supersteps (device dispatches ==
-    host sync points) taken."""
+    host sync points) taken.
+
+    dtype="pq": `luts` is the device [B, M, 256] ADC table (the kernel's
+    distance operand) and `lut_h` its host copy — the shadow predicts
+    with `_adc_np` over the same table values, so the only divergence
+    source left is the accumulation order, exactly like the f32 path."""
     B = bitmap.shape[0]
     H = sp.fused_hops
     M0, D = reader.m0_pad, reader.d_pad
@@ -307,7 +380,8 @@ def _layer0_supersteps(reader: StoreReader, p: int, q_pad, qsq, bitmap,
         spec = np.full((B, H), -1, np.int32)
         nbrs_t = np.full((B, H, M0), -1, np.int32)
         act_t = np.zeros((B, H, M0), bool)
-        vecs_t = np.zeros((B, H, M0, D), np.float32)
+        vecs_t = np.zeros((B, H, M0, D),
+                          np.uint8 if lut_h is not None else np.float32)
         sqs_t = np.zeros((B, H, M0), np.float32)
         planned = np.zeros(B, np.int32)          # shadow-live hops per lane
         for h in range(H):
@@ -325,11 +399,17 @@ def _layer0_supersteps(reader: StoreReader, p: int, q_pad, qsq, bitmap,
             was = _visited_test_and_set(bitmap, nbrs, valid)
             act = valid & ~was
             act_t[:, h] = act
-            v, s = _gather_vec_sq(reader, p, nbrs, act)
-            vecs_t[:, h], sqs_t[:, h] = v, s
-            # shadow hop: the same pop/guard/merge, numpy arithmetic
-            d = _metric_dist_np(metric, np.einsum("bmd,bd->bm", v, qh),
-                                s, qsqh[:, None])
+            if lut_h is not None:
+                v = _gather_codes(reader, p, nbrs, act)
+                vecs_t[:, h] = v
+                d = _adc_np(lut_h, v)
+            else:
+                v, s = _gather_vec_sq(reader, p, nbrs, act)
+                vecs_t[:, h], sqs_t[:, h] = v, s
+                # shadow hop: the same pop/guard/merge, numpy arithmetic
+                d = _metric_dist_np(metric,
+                                    np.einsum("bmd,bd->bm", v, qh),
+                                    s, qsqh[:, None])
             d = np.where(act, d, np.inf)
             d = np.where(d < sfin_d[:, -1:], d, np.inf)
             ids = np.where(np.isfinite(d), np.where(act, nbrs, 0), -1)
@@ -415,21 +495,26 @@ def _layer0_supersteps(reader: StoreReader, p: int, q_pad, qsq, bitmap,
                     cand_d, cand_i, fin_d, fin_i, hops, calcs,
                     jnp.asarray(ps["spec"]), jnp.asarray(ps["nbrs"]),
                     jnp.asarray(ps["act"]), jnp.asarray(ps["vecs"]),
-                    jnp.asarray(ps["sqs"]), q_pad, qsq, metric, sp.max_hops)
+                    jnp.asarray(ps["sqs"]), q_pad, qsq, metric, sp.max_hops,
+                    lut=luts)
         pending = (ps, applied)
         steps += 1
     return cand_d, cand_i, fin_d, fin_i, hops, calcs, steps
 
 
 def _search_one_partition(reader: StoreReader, p: int, q_pad: jnp.ndarray,
-                          params: SearchParams):
+                          params: SearchParams, luts=None, lut_h=None):
     """Lockstep batched search of one sub-graph, all data via the store.
 
     Returns (gids [B,k], dists [B,k], hops [B], calcs [B], steps) —
     numerically identical to `batch_search` on the resident partition.
     `steps` counts host-sync'd traversal rounds: one per hop on the legacy
-    path, one per `fused_hops`-hop superstep on the fused path."""
+    path, one per `fused_hops`-hop superstep on the fused path.
+    `luts`/`lut_h` are the device/host per-query ADC tables for dtype="pq"
+    (store_search builds them once per batch; one code space per index,
+    shared across partitions)."""
     B = int(q_pad.shape[0])
+    pq = luts is not None
     sp = params.resolve(reader.m0_pad)
     C, EF, K = sp.cand_size, sp.ef, sp.k
     metric = sp.metric
@@ -438,10 +523,15 @@ def _search_one_partition(reader: StoreReader, p: int, q_pad: jnp.ndarray,
     max_level = int(reader.max_level[p] if reader.max_level.ndim
                     else reader.max_level)
     ep_row = reader.row("vectors", p, [ep])
-    ep_vec = jnp.asarray(
-        reader.read_rows("vectors", ep_row)[0].astype(np.float32))
-    ep_sq = jnp.asarray(reader.read_rows("sqnorms", ep_row)[0, 0])
-    qsq, ep_d = _query_prep(q_pad, ep_vec, ep_sq, metric)
+    if pq:
+        ep_code = jnp.asarray(reader.read_rows("vectors", ep_row)[0])
+        qsq = jnp.zeros((B,), jnp.float32)       # unused by ADC
+        ep_d = _query_prep_pq(luts, ep_code)
+    else:
+        ep_vec = jnp.asarray(
+            reader.read_rows("vectors", ep_row)[0].astype(np.float32))
+        ep_sq = jnp.asarray(reader.read_rows("sqnorms", ep_row)[0, 0])
+        qsq, ep_d = _query_prep(q_pad, ep_vec, ep_sq, metric)
 
     # -- upper layers: lockstep greedy descent (paper §5.2.2) ---------------
     cur = jnp.full((B,), ep, jnp.int32)
@@ -464,11 +554,16 @@ def _search_one_partition(reader: StoreReader, p: int, q_pad: jnp.ndarray,
                     lanes = np.flatnonzero(imp_h)[has]
                     nbrs[lanes] = reader.read_rows("up_nbrs", urows)
             valid = (nbrs >= 0) & imp_h[:, None]
-            vecs, sqs = _gather_vec_sq(reader, p, nbrs, valid)
+            if pq:
+                vecs = _gather_codes(reader, p, nbrs, valid)
+                sqs = np.zeros(nbrs.shape, np.float32)
+            else:
+                vecs, sqs = _gather_vec_sq(reader, p, nbrs, valid)
             cur, cur_d, improved, calcs = _upper_step(
                 improved, cur, cur_d, calcs,
                 jnp.asarray(nbrs), jnp.asarray(valid),
-                jnp.asarray(vecs), jnp.asarray(sqs), q_pad, qsq, metric)
+                jnp.asarray(vecs), jnp.asarray(sqs), q_pad, qsq, metric,
+                lut=luts)
             hop += 1
 
     # -- layer 0: lockstep beam search (paper §5.2.3) -----------------------
@@ -489,7 +584,8 @@ def _search_one_partition(reader: StoreReader, p: int, q_pad: jnp.ndarray,
         (cand_d, cand_i, fin_d, fin_i, hops, calcs,
          steps) = _layer0_supersteps(reader, p, q_pad, qsq, bitmap,
                                      cand_d, cand_i, fin_d, fin_i,
-                                     hops, calcs, sp)
+                                     hops, calcs, sp, luts=luts,
+                                     lut_h=lut_h)
     else:
         hop_no = 0
         while True:
@@ -509,7 +605,11 @@ def _search_one_partition(reader: StoreReader, p: int, q_pad: jnp.ndarray,
                 valid = (nbrs >= 0) & active[:, None]
                 was = _visited_test_and_set(bitmap, nbrs, valid)
                 act = valid & ~was
-                vecs, sqs = _gather_vec_sq(reader, p, nbrs, act)
+                if pq:
+                    vecs = _gather_codes(reader, p, nbrs, act)
+                    sqs = np.zeros(nbrs.shape, np.float32)
+                else:
+                    vecs, sqs = _gather_vec_sq(reader, p, nbrs, act)
                 # hop-kernel covers only the jitted dispatch — the async
                 # device compute itself overlaps the next hop's host work by
                 # design, so the span is the submit cost, not the device time
@@ -518,7 +618,7 @@ def _search_one_partition(reader: StoreReader, p: int, q_pad: jnp.ndarray,
                         jnp.asarray(active), cand_d, cand_i, fin_d, fin_i,
                         hops, calcs, jnp.asarray(nbrs), jnp.asarray(act),
                         jnp.asarray(vecs), jnp.asarray(sqs), q_pad, qsq,
-                        metric)
+                        metric, lut=luts)
                 # overlap the next hop's fetches with this round-trip
                 reader.prefetch_next_hop(p, np.asarray(cand_i)[:, :2])
             hop_no += 1
@@ -535,7 +635,7 @@ def _search_one_partition(reader: StoreReader, p: int, q_pad: jnp.ndarray,
 
 
 def store_search(reader: StoreReader, queries, params: SearchParams,
-                 merge: bool = True):
+                 merge: bool = True, pq_quant=None):
     """Two-stage search over every partition of the store.
 
     merge=True  -> (ids [B,k], dists [B,k], hops [B], calcs [B], supersteps)
@@ -544,10 +644,20 @@ def store_search(reader: StoreReader, queries, params: SearchParams,
     `supersteps` is the total host-sync'd traversal rounds across
     partitions — equal to total layer-0 hop rounds at fused_hops=1,
     roughly hops/fused_hops on the fused path.
+
+    `pq_quant` is the index's fitted PQQuantizer for dtype="pq" stores:
+    queries stay float32 (NOT padded to the store's d_pad, which is the
+    code width M) and the per-query ADC LUT is built once here through
+    the one shared jitted builder, then reused by every partition.
     """
     REGISTRY.gauge("traversal_fused_hops").set(float(params.fused_hops))
     q = np.asarray(queries, np.float32)
-    if q.shape[-1] < reader.d_pad:
+    luts = lut_h = None
+    if pq_quant is not None:
+        luts = build_pq_lut(jnp.asarray(q),
+                            jnp.asarray(pq_quant.codebooks))
+        lut_h = np.asarray(luts)      # shadow planner's prediction twin
+    elif q.shape[-1] < reader.d_pad:
         q = np.pad(q, ((0, 0), (0, reader.d_pad - q.shape[-1])))
     q_pad = jnp.asarray(q)
     per_ids, per_ds = [], []
@@ -556,7 +666,8 @@ def store_search(reader: StoreReader, queries, params: SearchParams,
     supersteps = 0
     for p in range(reader.num_partitions):
         with TRACER.child_span("traversal", partition=p):
-            gi, gd, h, c, s = _search_one_partition(reader, p, q_pad, params)
+            gi, gd, h, c, s = _search_one_partition(reader, p, q_pad, params,
+                                                    luts=luts, lut_h=lut_h)
         per_ids.append(gi)
         per_ds.append(gd)
         hops += h
@@ -591,6 +702,7 @@ class CSDBackend:
         self.spec = spec
         self.reader = reader
         self.quant = spec.quantizer()
+        self.is_pq = spec.dtype == "pq"
 
     @staticmethod
     def _storage_path(spec: IndexSpec) -> str:
@@ -604,20 +716,54 @@ class CSDBackend:
     def build(cls, vectors: np.ndarray, spec: IndexSpec, mesh=None):
         path = cls._storage_path(spec)
         pdb = build_partitioned_db(vectors, spec.num_partitions, spec.hnsw)
-        # quantized spec: the on-flash vector rows shrink to 1 byte/dim
-        pdb = quantize_db_vectors(pdb, spec.dtype)
-        write_store(path, pdb, block_size=spec.block_size)
-        del pdb                     # from here on, the store is the database
-        return cls(spec, open_store(path, spec.cache_bytes,
-                                    prefetch=spec.prefetch))
+        return cls._write(path, pdb, spec)
 
     @classmethod
-    def from_partitioned(cls, pdb, spec: IndexSpec):
+    def from_partitioned(cls, pdb, spec: IndexSpec, raw=None):
         """Convert an already-built resident PartitionedDB into an
-        out-of-core service (benchmarks reuse one graph build)."""
-        path = cls._storage_path(spec)
-        write_store(path, quantize_db_vectors(pdb, spec.dtype),
-                    block_size=spec.block_size)
+        out-of-core service (benchmarks reuse one graph build).
+
+        For a dtype="pq" pdb whose vectors leaf already holds code rows
+        (PartitionedBackend.build swaps them in), pass `raw` — the
+        ORIGINAL [n, d] float32 rows — so the store still gets its
+        `rerank_vectors` table."""
+        return cls._write(cls._storage_path(spec), pdb, spec, raw=raw)
+
+    @classmethod
+    def _write(cls, path: str, pdb, spec: IndexSpec, raw=None):
+        """Quantize the raw-data leaf and commit the block store.
+
+        dtype="pq": the vectors leaf shrinks to M-byte code rows AND the
+        TRUE float32 rows are persisted as an extra `rerank_vectors` table
+        (same p * n_pad + i row addressing) — stage-2 rerank reads real
+        vectors back from flash, because re-scoring decoded PQ rows would
+        reproduce the ADC distances exactly and recover no recall."""
+        extra = None
+        if spec.dtype == "pq":
+            quant = spec.quantizer()
+            vecs = np.asarray(pdb.db.vectors)
+            if vecs.dtype != np.uint8:     # true rows still in hand
+                extra = {"rerank_vectors": np.ascontiguousarray(
+                    vecs.reshape(-1, vecs.shape[-1]), np.float32)}
+            elif raw is not None:          # scatter raw rows to pad layout
+                raw = np.asarray(raw, np.float32)
+                gids = np.asarray(pdb.db.gids)
+                n_valid = np.atleast_1d(np.asarray(pdb.db.n_valid))
+                n_pad = gids.shape[-1]
+                p_ax = gids.shape[0] if gids.ndim == 2 else 1
+                table = np.zeros((p_ax * n_pad, raw.shape[1]), np.float32)
+                for pi in range(p_ax):
+                    nv = int(n_valid[pi])
+                    g = gids[pi, :nv] if gids.ndim == 2 else gids[:nv]
+                    table[pi * n_pad: pi * n_pad + nv] = raw[g]
+                extra = {"rerank_vectors": table}
+            pdb = quantize_db_vectors(pdb, "pq", quant)
+        else:
+            # quantized spec: on-flash vector rows shrink to 1 byte/dim
+            pdb = quantize_db_vectors(pdb, spec.dtype)
+        write_store(path, pdb, block_size=spec.block_size,
+                    extra_tables=extra)
+        del pdb                     # from here on, the store is the database
         return cls(spec, open_store(path, spec.cache_bytes,
                                     prefetch=spec.prefetch))
 
@@ -634,14 +780,17 @@ class CSDBackend:
                 r.prefetcher.drain()     # don't attribute a previous
             before = r.cache.snapshot()  # request's in-flight reads to us
         p = self.params(k, ef)
+        pq_quant = self.quant if self.is_pq else None
         if rerank:
-            cand, _, hops, calcs, steps = store_search(r, queries, p,
-                                                       merge=False)
+            cand, _, hops, calcs, steps = store_search(
+                r, queries, p, merge=False, pq_quant=pq_quant)
             with TRACER.child_span("rerank", pool=int(cand.shape[1])):
                 ids, dists = self._rerank_from_store(queries, cand, k)
         else:
-            ids, dists, hops, calcs, steps = store_search(r, queries, p)
-            if self.quant is not None:   # code-space -> real-space
+            ids, dists, hops, calcs, steps = store_search(
+                r, queries, p, pq_quant=pq_quant)
+            if self.quant is not None and not self.is_pq:
+                # code-space -> real-space (ADC is already real-space)
                 dists = dists * jnp.float32(self.quant.dist_scale)
         stats = None
         if with_stats:
@@ -686,17 +835,29 @@ class CSDBackend:
         part = np.searchsorted(r.partition_starts, uniq, side="right") - 1
         local = uniq - r.partition_starts[part]
         rows = part * r.n_pad + local
-        rows_f = r.read_rows("vectors", rows)[:, :r.dim].astype(np.float32)
-        if self.quant is not None:
-            # stage 2 stays float32: dequantize the gathered code rows
-            rows_f = self.quant.decode(rows_f)
+        if self.is_pq:
+            # stage 2 over TRUE float32 rows from the extra table — the
+            # code rows carry no information beyond their ADC distance
+            if "rerank_vectors" not in r.blockfile.tables:
+                raise ValueError(
+                    "this PQ store has no 'rerank_vectors' table, so "
+                    "stage-2 rerank cannot read true float32 rows: "
+                    "rebuild it with CSDBackend.build/from_partitioned "
+                    "over the original vectors")
+            rows_f = r.read_rows("rerank_vectors", rows).astype(np.float32)
+        else:
+            rows_f = r.read_rows("vectors", rows)[:, :r.dim].astype(
+                np.float32)
+            if self.quant is not None:
+                # stage 2 stays float32: dequantize the gathered code rows
+                rows_f = self.quant.decode(rows_f)
         vecs = jnp.asarray(rows_f)
         sqs = jnp.einsum("nd,nd->n", vecs, vecs)
         compact = np.where(valid,
                            np.searchsorted(uniq, np.where(valid, cand, 0)),
                            -1).astype(np.int32)
         q = jnp.asarray(np.asarray(queries, np.float32))
-        if self.quant is not None:
+        if self.quant is not None and not self.is_pq:
             q = self.quant.decode(q)     # code-valued queries -> f32 values
         ids_c, dists = batched_rerank(vecs, sqs, q, jnp.asarray(compact), k,
                                       self.spec.metric)

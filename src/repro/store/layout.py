@@ -41,8 +41,14 @@ def _partition_starts(db: hg.DeviceDB) -> list[int] | None:
     return starts
 
 
-def write_store(path: str, pdb: PartitionedDB, block_size: int = 4096) -> None:
-    """Persist the stacked DeviceDB as a committed block store."""
+def write_store(path: str, pdb: PartitionedDB, block_size: int = 4096,
+                extra_tables: dict | None = None) -> None:
+    """Persist the stacked DeviceDB as a committed block store.
+
+    `extra_tables` appends additional fixed-stride row tables after the
+    canonical set (e.g. the PQ store's `rerank_vectors` float32 table).
+    `load_db` ignores them; they are only reachable through
+    `StoreReader.read_rows`."""
     db = jax_to_host(pdb.db)
     tables, meta = hg.db_to_tables(db)
     meta.update({
@@ -53,6 +59,8 @@ def write_store(path: str, pdb: PartitionedDB, block_size: int = 4096) -> None:
     try:
         for name in hg.TABLE_ORDER:
             w.add_table(name, tables[name])
+        for name, rows in (extra_tables or {}).items():
+            w.add_table(name, np.ascontiguousarray(rows))
     except BaseException:
         w.abort()
         raise

@@ -75,6 +75,23 @@ class BackendZoo:
                                        storage_path=store, prefetch=False)
             return SearchService(
                 spec, CSDBackend.from_partitioned(part.backend.pdb, spec))
+        if backend == "pq":
+            # product-quantized engine: M=8 byte codes per row, LUT ADC
+            spec = IndexSpec(metric=metric, backend="partitioned",
+                             dtype="pq", pq_m=8, num_partitions=2,
+                             hnsw=ZOO_CFG, keep_vectors=True)
+            return SearchService.build(vecs, spec)
+        if backend == "pq_csd":
+            # same PQ graph + codebooks, served out-of-core (M-byte rows);
+            # `raw` supplies the true float32 rows for the rerank table
+            part = self.service("pq", metric, normalized=normalized)
+            store = str(self._tmp.mktemp("zoo-csd-pq") / "store")
+            spec = dataclasses.replace(part.spec, backend="csd",
+                                       keep_vectors=False,
+                                       storage_path=store, prefetch=False)
+            return SearchService(
+                spec, CSDBackend.from_partitioned(part.backend.pdb, spec,
+                                                  raw=part.backend.raw))
         if backend == "csd":
             # same graph as the partitioned service, restructured on "flash"
             part = self.service("partitioned", metric, normalized=normalized)

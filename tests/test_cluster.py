@@ -301,7 +301,7 @@ def test_shard_spec_seed_schedule():
 
 def test_cluster_rejects_quantized_spec():
     spec = dataclasses.replace(_spec("partitioned"), dtype="uint8")
-    with pytest.raises(ValueError, match="float32-only"):
+    with pytest.raises(ValueError, match="float32 or pq only"):
         ClusterRouter(spec, [])
 
 

@@ -68,6 +68,18 @@ def test_cosine_equals_l2_over_normalized(backend, backend_zoo):
     np.testing.assert_array_equal(ids_cos, ids_l2n)
 
 
+@pytest.mark.parametrize("rerank", [False, True])
+def test_pq_backends_answer_identically(rerank, backend_zoo):
+    """The PQ column of the matrix: the in-memory and the csd PQ engine
+    serve ONE graph and ONE code space (the csd store is written from the
+    partitioned backend's own DB and codebooks), so they must return
+    identical ids with and without the true-float32 rerank. l2 only — PQ
+    rejects other metrics at build time, mirroring the uint8 column."""
+    golden = backend_zoo.ids("pq", "l2", k=K, ef=EF, rerank=rerank)
+    got = backend_zoo.ids("pq_csd", "l2", k=K, ef=EF, rerank=rerank)
+    np.testing.assert_array_equal(got, golden)
+
+
 def test_hnsw_is_partitioned_with_one_partition(backend_zoo):
     np.testing.assert_array_equal(
         backend_zoo.ids("hnsw", "l2", k=K, ef=EF),

@@ -1,0 +1,390 @@
+"""The product-quantized vector path (IndexSpec.dtype="pq").
+
+Five contracts, extending the paper's storage-bound operating point past
+uint8 (1 byte/dim) to M bytes/ROW:
+
+  * quantizer: k-means codebook fit is deterministic under a pinned seed;
+    reconstruction error shrinks monotonically as M grows; ADC == squared
+    L2 to the reconstruction (which is why stage-2 reranks over TRUE
+    float32 rows — re-scoring decoded PQ rows would recover nothing).
+  * kernels: the Pallas LUT-gather ADC / fused top-k kernels equal the
+    numpy references BITWISE (one gather + one add per subspace, in
+    subspace order — the PQ extension of the mul+sum reduction-order
+    rule).
+  * engines: PQ `csd` == PQ `partitioned` == PQ cluster bit-identically
+    (ids, dists, hops, dist_calcs) at every fused_hops, with and without
+    rerank; stage-1 distances are ADC, stage-2 re-scores true rows.
+  * manifest: codebooks ride format_version 3; save/load round-trips to
+    bit-identical answers; the mutable (v2) loader refuses v3 with a
+    pointer.
+  * storage: code rows are pq_m bytes — 16x below uint8 at the paper's
+    d=128 (and at the zoo's d=64, where uint8 rows lane-pad to 128 B) —
+    and measured cold-cache `bytes_read` drops accordingly.
+"""
+
+import contextlib
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import SearchRequest
+from repro.optim.compression import PQQuantizer, VectorQuantizer
+
+K, EF = 10, 40
+
+
+# ---------------------------------------------------------------------------
+# quantizer
+# ---------------------------------------------------------------------------
+
+
+def test_fit_deterministic_under_pinned_seed(backend_zoo):
+    vecs = backend_zoo.data["vectors"]
+    a = PQQuantizer.fit(vecs, 8, seed=0)
+    b = PQQuantizer.fit(vecs, 8, seed=0)
+    np.testing.assert_array_equal(a.codebooks, b.codebooks)
+    assert a.codebooks.dtype == np.float32 and a.codebooks.shape == (8, 256, 8)
+    c = PQQuantizer.fit(vecs, 8, seed=1)
+    assert not np.array_equal(a.codebooks, c.codebooks), (
+        "different seeds must explore different centroid inits")
+
+
+def test_fit_rejects_non_divisor_m():
+    x = np.zeros((32, 64), np.float32)
+    with pytest.raises(ValueError, match="divisor"):
+        PQQuantizer.fit(x, 7)
+    with pytest.raises(ValueError, match="divisor"):
+        PQQuantizer.fit(x, 0)
+
+
+def test_roundtrip_error_monotone_in_m_and_vs_scalar(backend_zoo):
+    """More code bytes -> strictly better reconstruction on the pinned
+    dataset; and at the operating point (M=8, 8 bytes/row) PQ is far
+    lossier than the scalar uint8 quantizer (64 bytes/row here) — the
+    measured gap is what justifies reranking over TRUE float32 rows
+    instead of decoded codes."""
+    vecs = backend_zoo.data["vectors"]
+    mse = {}
+    for m in (4, 8, 16):
+        q = PQQuantizer.fit(vecs, m, seed=0)
+        mse[m] = float(np.mean((vecs - q.decode(q.encode(vecs))) ** 2))
+    assert mse[4] > mse[8] > mse[16] > 0.0, f"not monotone: {mse}"
+    sq = VectorQuantizer.fit(vecs, "uint8")
+    mse_scalar = float(np.mean((vecs - sq.decode(sq.encode(vecs))) ** 2))
+    assert mse[8] > 10 * mse_scalar, (
+        f"PQ@M=8 ({mse[8]:.3g}) should be much lossier than scalar uint8 "
+        f"({mse_scalar:.3g}); if not, the true-row rerank rationale is off")
+
+
+def test_adc_is_distance_to_reconstruction(backend_zoo):
+    """The ADC identity: LUT-gather-sum == ||q - decode(codes)||^2."""
+    import jax.numpy as jnp
+
+    from repro.optim.compression import build_pq_lut
+
+    vecs = backend_zoo.data["vectors"][:256]
+    q = backend_zoo.queries()[:4]
+    quant = PQQuantizer.fit(vecs, 8, seed=0)
+    codes = quant.encode(vecs)
+    lut = np.asarray(build_pq_lut(jnp.asarray(q),
+                                  jnp.asarray(quant.codebooks)))
+    b_ix = np.arange(len(q))[:, None, None]
+    m_ix = np.arange(quant.m)[None, None, :]
+    adc = lut[b_ix, m_ix, codes[None].astype(np.int64)].sum(-1)
+    rec = quant.decode(codes)
+    direct = ((q[:, None] - rec[None]) ** 2).sum(-1)
+    np.testing.assert_allclose(adc, direct, rtol=1e-5)
+
+
+def test_codebooks_json_roundtrip_bitwise():
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((300, 32)).astype(np.float32)
+    quant = PQQuantizer.fit(x, 4, seed=3)
+    back = PQQuantizer.from_json(json.loads(json.dumps(quant.to_json())))
+    np.testing.assert_array_equal(back.codebooks, quant.codebooks)
+    assert (back.m, back.dsub) == (quant.m, quant.dsub)
+
+
+# ---------------------------------------------------------------------------
+# Pallas LUT kernels vs numpy references
+# ---------------------------------------------------------------------------
+
+
+def _random_luts_codes(bq, bx, m, seed):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    luts = jnp.asarray(rng.uniform(0, 50, size=(bq, m, 256))
+                       .astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, 256, size=(bx, m)).astype(np.uint8))
+    return luts, codes
+
+
+@pytest.mark.parametrize("bq,bx,m", [(3, 100, 8), (9, 600, 4), (1, 1024, 16)])
+def test_pq_adc_matches_ref_bitwise(bq, bx, m):
+    from repro.kernels import ops
+    from repro.kernels.ref import pq_adc_ref
+
+    luts, codes = _random_luts_codes(bq, bx, m, seed=11)
+    got = ops.pq_adc(luts, codes)
+    want = pq_adc_ref(luts, codes)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pq_topk_matches_ref_bitwise():
+    from repro.kernels import ops
+    from repro.kernels.ref import pq_topk_ref
+
+    luts, codes = _random_luts_codes(5, 1500, 8, seed=12)
+    gv, gi = ops.pq_topk(luts, codes, k=K)
+    wv, wi = pq_topk_ref(luts, codes, k=K)
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    # continuous f32 ADC sums tie with negligible probability -> ids too
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_pq_topk_padding_rows_excluded():
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    luts, codes = _random_luts_codes(4, 700, 8, seed=13)
+    xpad = jnp.zeros(700, jnp.float32).at[100:].set(jnp.inf)
+    _, gi = ops.pq_topk(luts, codes, xpad, k=K)
+    assert np.asarray(gi).max() < 100
+
+
+# ---------------------------------------------------------------------------
+# engines: PQ csd == PQ partitioned == PQ cluster, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def _fused(svc, h):
+    be = svc.backend
+    old = be.spec
+    be.spec = dataclasses.replace(old, fused_hops=h)
+    try:
+        yield svc
+    finally:
+        be.spec = old
+
+
+def _respond(svc, q, rerank):
+    r = svc.search(SearchRequest(queries=q, k=K, ef=EF, rerank=rerank,
+                                 with_stats=True))
+    return (np.asarray(r.ids), np.asarray(r.dists),
+            np.asarray(r.stats.hops), np.asarray(r.stats.dist_calcs))
+
+
+@pytest.mark.parametrize("fused_hops", [1, 2, 4])
+@pytest.mark.parametrize("rerank", [False, True])
+def test_pq_csd_bit_identical_to_partitioned(rerank, fused_hops,
+                                             backend_zoo):
+    """Acceptance: the PQ csd engine answers from M-byte code rows on
+    "flash" yet matches the in-memory partitioned engine bit for bit —
+    ids, dists, hops, AND dist_calcs — at every fused_hops, because both
+    gather from the same `build_pq_lut` tables and accumulate in subspace
+    order."""
+    sp = backend_zoo.service("pq", "l2")
+    sc = backend_zoo.service("pq_csd", "l2")
+    q = backend_zoo.queries()
+    with _fused(sp, fused_hops):
+        want = _respond(sp, q, rerank)
+    with _fused(sc, fused_hops):
+        got = _respond(sc, q, rerank)
+    for g, w, what in zip(got, want, ("ids", "dists", "hops", "dist_calcs")):
+        np.testing.assert_array_equal(g, w, err_msg=(
+            f"pq csd vs partitioned diverges on {what} "
+            f"(fused_hops={fused_hops}, rerank={rerank})"))
+
+
+@pytest.fixture(scope="module")
+def pq_cluster(backend_zoo, tmp_path_factory):
+    """A 2-shard PQ cluster over the zoo vectors: codebooks are fit once
+    over the union by build_cluster and ride the spec into every shard, so
+    it answers in the same code space as the zoo's 2-partition index."""
+    from repro.api import IndexSpec
+    from repro.cluster.rebalance import build_cluster
+    from conftest import ZOO_CFG
+
+    spec = IndexSpec(backend="partitioned", dtype="pq", pq_m=8,
+                     num_partitions=1, hnsw=ZOO_CFG, keep_vectors=True)
+    router = build_cluster(backend_zoo.data["vectors"], spec, n_shards=2)
+    yield router
+    router.close()
+
+
+@pytest.mark.parametrize("rerank", [False, True])
+def test_pq_cluster_bit_identical_to_single_index(rerank, pq_cluster,
+                                                  backend_zoo):
+    """2 shards x 1 partition == 1 index x 2 partitions, bit for bit: the
+    union-fit codebooks and the deterministic fit extend the cluster's
+    scatter-gather parity contract to PQ."""
+    svc = backend_zoo.service("pq", "l2")
+    q = backend_zoo.queries()
+    rr = pq_cluster.search(SearchRequest(queries=q, k=K, ef=EF,
+                                         rerank=rerank))
+    rs = svc.search(SearchRequest(queries=q, k=K, ef=EF, rerank=rerank))
+    np.testing.assert_array_equal(np.asarray(rr.ids), np.asarray(rs.ids))
+    np.testing.assert_array_equal(np.asarray(rr.dists, np.float32),
+                                  np.asarray(rs.dists, np.float32))
+
+
+def test_pq_cluster_router_requires_union_codebooks(backend_zoo):
+    """A PQ spec without pre-fitted codebooks must be refused at the
+    router (per-shard fits would give incompatible code spaces)."""
+    from repro.api import IndexSpec
+    from repro.cluster.router import ClusterRouter
+    from conftest import ZOO_CFG
+
+    spec = IndexSpec(backend="partitioned", dtype="pq", pq_m=8,
+                     num_partitions=1, hnsw=ZOO_CFG)
+    with pytest.raises(ValueError, match="build_cluster"):
+        ClusterRouter(spec, [])
+
+
+def test_pq_stage1_dists_are_adc(backend_zoo):
+    """Non-rerank distances == ADC (distance to the reconstruction)."""
+    svc = backend_zoo.service("pq", "l2")
+    quant = svc.quantizer
+    resp = svc.search(SearchRequest(queries=backend_zoo.queries(), k=K,
+                                    ef=EF))
+    ids = np.asarray(resp.ids)
+    rec = quant.decode(quant.encode(backend_zoo.data["vectors"]))
+    q = backend_zoo.queries()
+    want = np.einsum("bkd,bkd->bk", rec[ids] - q[:, None],
+                     rec[ids] - q[:, None])
+    np.testing.assert_allclose(np.asarray(resp.dists), want, rtol=1e-3,
+                               atol=0.1)
+
+
+def test_pq_rerank_rescoresover_true_float32_rows(backend_zoo):
+    """Stage 2 re-scores the candidate pool against the ORIGINAL float32
+    rows (not decoded codes): reranked distances equal a numpy recompute
+    over the raw vectors, for the in-memory and the csd engine alike."""
+    q = backend_zoo.queries()
+    vecs = backend_zoo.data["vectors"]
+    for backend in ("pq", "pq_csd"):
+        svc = backend_zoo.service(backend, "l2")
+        resp = svc.search(SearchRequest(queries=q, k=K, ef=EF, rerank=True))
+        ids = np.asarray(resp.ids)
+        want = np.einsum("bkd,bkd->bk", vecs[ids] - q[:, None],
+                         vecs[ids] - q[:, None])
+        # the engine evaluates the dot-product form (xsq - 2 x.q + qsq);
+        # the direct-difference recompute differs by f32 cancellation noise
+        # that scales with the squared norms, not the distance
+        np.testing.assert_allclose(np.asarray(resp.dists), want, rtol=1e-2,
+                                   atol=1.0, err_msg=backend)
+
+
+def test_pq_rejects_non_l2_metrics(backend_zoo):
+    from repro.api import IndexSpec, SearchService
+
+    with pytest.raises(ValueError, match="l2"):
+        SearchService.build(backend_zoo.data["vectors"],
+                            IndexSpec(metric="cosine", dtype="pq", pq_m=8,
+                                      backend="partitioned"))
+
+
+# ---------------------------------------------------------------------------
+# manifest: codebooks ride format_version 3
+# ---------------------------------------------------------------------------
+
+
+def test_pq_manifest_v3_roundtrip(backend_zoo, tmp_path):
+    from repro.api import SearchService
+    from repro.api.service import MANIFEST_NAME
+    from repro.api.types import PQ_FORMAT_VERSION
+
+    svc = backend_zoo.service("pq", "l2")
+    path = str(tmp_path / "pq-index")
+    svc.save(path)
+    with open(os.path.join(path, MANIFEST_NAME)) as f:
+        manifest = json.load(f)
+    assert manifest["format_version"] == PQ_FORMAT_VERSION == 3
+    spec_json = manifest["spec"]
+    assert spec_json["dtype"] == "pq" and spec_json["pq_m"] == 8
+    # codebooks survive JSON: float32 -> repr -> float32 is exact
+    cb = np.asarray(spec_json["pq_codebooks"], np.float32)
+    np.testing.assert_array_equal(cb, svc.quantizer.codebooks)
+
+    svc2 = SearchService.load(path)
+    q = backend_zoo.queries()
+    r1 = svc.search(SearchRequest(queries=q, k=K, ef=EF))
+    r2 = svc2.search(SearchRequest(queries=q, k=K, ef=EF))
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+    np.testing.assert_array_equal(np.asarray(r1.dists),
+                                  np.asarray(r2.dists))
+
+
+def test_pq_manifest_refused_by_mutable_loader(backend_zoo, tmp_path):
+    """The v2 (mutable) loader must refuse a v3 index and point at the
+    right entry point instead of misreading it."""
+    from repro.api import MutableSearchService
+
+    svc = backend_zoo.service("pq", "l2")
+    path = str(tmp_path / "pq-index-v3")
+    svc.save(path)
+    with pytest.raises(ValueError, match="format_version=3"):
+        MutableSearchService.load(path)
+
+
+# ---------------------------------------------------------------------------
+# storage: M bytes/row (16x under uint8), fewer bytes over the "flash" link
+# ---------------------------------------------------------------------------
+
+
+def test_pq_row_bytes_16x_below_uint8():
+    """The cost model prices a PQ row at pq_m bytes — the code row IS the
+    stored unit, not lane-padded — 16x under uint8 at the paper's d=128."""
+    from repro.launch.costmodel import vector_row_bytes
+
+    assert vector_row_bytes(128, "pq") == 8
+    assert vector_row_bytes(128, "pq", pq_m=16) == 16
+    assert vector_row_bytes(128, "uint8") == 16 * vector_row_bytes(128, "pq")
+    assert vector_row_bytes(128, "float32") == 64 * vector_row_bytes(
+        128, "pq")
+
+
+def test_pq_store_rows_shrink_and_read_fewer_bytes(backend_zoo):
+    """The pq store's vector table holds pq_m-byte uint8 rows (16x under
+    the lane-padded uint8 rows at the zoo's d=64), plus a separate
+    float32 `rerank_vectors` table; measured cold-cache bytes_read drops
+    vs the uint8 store (stage-1 reads only code rows and graph rows — PQ
+    needs no sqnorms)."""
+    svc_pq = backend_zoo.service("pq_csd", "l2")
+    svc_u8 = backend_zoo.service("uint8_csd", "l2")
+
+    t_pq = svc_pq.backend.reader.blockfile.tables["vectors"]
+    t_u8 = svc_u8.backend.reader.blockfile.tables["vectors"]
+    assert t_pq["dtype"] == "uint8" and t_pq["row_bytes"] == 8
+    assert t_u8["row_bytes"] == 16 * t_pq["row_bytes"]
+    t_rr = svc_pq.backend.reader.blockfile.tables["rerank_vectors"]
+    assert t_rr["dtype"] == "float32"
+
+    from repro.api import SearchService
+    from repro.store.csd import CSDBackend
+    from repro.store.layout import open_store
+
+    def cold_bytes(svc):
+        reader = open_store(svc.backend.reader.path, svc.spec.cache_bytes,
+                            prefetch=False)
+        try:
+            cold = SearchService(svc.spec, CSDBackend(svc.spec, reader))
+            resp = cold.search(SearchRequest(queries=backend_zoo.queries(),
+                                             k=K, ef=EF, with_stats=True))
+            return float(resp.stats.bytes_read)
+        finally:
+            reader.close()
+
+    b_u8, b_pq = cold_bytes(svc_u8), cold_bytes(svc_pq)
+    assert b_pq < b_u8, f"pq read MORE than uint8: {b_pq} vs {b_u8}"
+    # at this scale neighbor-table traffic dominates what's left, so the
+    # end-to-end ratio sits well under the 16x row ratio — but the vector
+    # rows really shrinking (and the sqnorm reads disappearing) must show
+    assert b_u8 / b_pq >= 1.5, (
+        f"pq store should cut storage bytes (rows 16x smaller, no sqnorm "
+        f"reads) — measured {b_u8 / b_pq:.2f}x ({int(b_u8)} vs {int(b_pq)})")

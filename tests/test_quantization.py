@@ -17,6 +17,7 @@ integer distance units, float32 stage-2):
     at test scale).
 """
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -222,6 +223,51 @@ def test_quantized_rejects_non_l2_metrics(backend_zoo):
 
 
 # ---------------------------------------------------------------------------
+# fused traversal: quantized backends were missing from the fused parity
+# matrix (test_traversal_fused covers float32 only) — pin uint8 and pq here
+# ---------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def _fused(svc, h):
+    be = svc.backend
+    old = be.spec
+    be.spec = dataclasses.replace(old, fused_hops=h)
+    try:
+        yield svc
+    finally:
+        be.spec = old
+
+
+@pytest.mark.parametrize("fused_hops", [2, 4])
+@pytest.mark.parametrize("rerank", [False, True])
+@pytest.mark.parametrize("backend", ["uint8", "uint8_csd", "pq", "pq_csd"])
+def test_quantized_fused_matches_lockstep_bitwise(backend, rerank,
+                                                  fused_hops, backend_zoo):
+    """fused_hops is a pure batching knob on the quantized paths too: the
+    integer-distance kernels and the PQ LUT supersteps replay the exact
+    hop-stepped visit order, so ids/dists/hops/dist_calcs all match the
+    fused_hops=1 golden bit for bit."""
+    svc = backend_zoo.service(backend, "l2")
+    q = backend_zoo.queries()
+
+    def respond():
+        r = svc.search(SearchRequest(queries=q, k=K, ef=EF, rerank=rerank,
+                                     with_stats=True))
+        return (np.asarray(r.ids), np.asarray(r.dists),
+                np.asarray(r.stats.hops), np.asarray(r.stats.dist_calcs))
+
+    with _fused(svc, 1):
+        golden = respond()
+    with _fused(svc, fused_hops):
+        got = respond()
+    for g, w, what in zip(got, golden, ("ids", "dists", "hops",
+                                        "dist_calcs")):
+        np.testing.assert_array_equal(g, w, err_msg=(
+            f"{backend} fused_hops={fused_hops} diverges on {what}"))
+
+
+# ---------------------------------------------------------------------------
 # storage: 4x smaller rows, fewer bytes over the "flash" link
 # ---------------------------------------------------------------------------
 
@@ -259,8 +305,8 @@ def test_uint8_store_reads_fewer_bytes(backend_zoo):
         finally:
             reader.close()
 
-    ratio = cold_bytes(svc_f32) / cold_bytes(svc_u8)
+    b_f32, b_u8 = cold_bytes(svc_f32), cold_bytes(svc_u8)
+    ratio = b_f32 / b_u8
     assert ratio >= 2.0, (
         f"uint8 store should cut storage bytes ~4x (vectors) — measured "
-        f"total ratio {ratio:.2f}x "
-        f"({int(r_f32.stats.bytes_read)} vs {int(r_u8.stats.bytes_read)})")
+        f"total ratio {ratio:.2f}x ({int(b_f32)} vs {int(b_u8)})")
