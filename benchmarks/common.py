@@ -9,6 +9,8 @@ v5e constants from launch/roofline.py and are labeled `modeled_*`.
 from __future__ import annotations
 
 import dataclasses
+import os
+import platform
 import time
 
 import jax
@@ -20,6 +22,33 @@ from repro.data import VectorDataset
 
 N, DIM, NQ = 8000, 128, 256
 K, EF = 10, 40
+
+# bump when the shape of any BENCH_*.json record changes incompatibly;
+# scripts/bench_compare.py refuses to diff records from different versions
+BENCH_SCHEMA_VERSION = 2
+
+
+def bench_stamp(variant: str = "full") -> dict:
+    """Provenance block every BENCH_*.json emitter embeds as `bench_meta`.
+
+    `variant` distinguishes full-shape runs from `--tiny` CI smoke runs so
+    bench_compare never diffs a tiny baseline against a full fresh run (the
+    numbers differ by orders of magnitude, not by regressions). The host
+    block records what the wall-times were measured ON — two snapshots from
+    different machines are comparable in recall but not in QPS."""
+    return {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "variant": variant,
+        "generated_unix": int(time.time()),
+        "host": {
+            "platform": platform.platform(),
+            "machine": platform.machine(),
+            "python": platform.python_version(),
+            "cpu_count": os.cpu_count(),
+            "jax": jax.__version__,
+            "default_backend": jax.default_backend(),
+        },
+    }
 
 
 @dataclasses.dataclass

@@ -23,6 +23,7 @@ ROADMAP item 2) in addition to the usual CSV rows.
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -30,23 +31,33 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
-from benchmarks.common import recall_of
+from benchmarks.common import bench_stamp, recall_of
 from repro.api import IndexSpec, SearchRequest, SearchService
 from repro.cluster import build_cluster
 from repro.core.hnsw_graph import HNSWConfig
 from repro.data import VectorDataset
 
-N, DIM, NQ = 4000, 64, 64
 K, EF = 10, 40
-CFG = HNSWConfig(M=12, ef_construction=80, seed=0)
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_cluster.json")
 
 
-def _workload():
-    ds = VectorDataset(N, DIM, n_clusters=32, seed=0)
+def _shapes(tiny: bool):
+    if tiny:    # CI smoke: same code path, minutes -> seconds
+        return {"n": 1200, "dim": 64, "nq": 32, "rounds": 3,
+                "cfg": HNSWConfig(M=8, ef_construction=60, seed=0),
+                "shards": (1, 2), "replicas": (1, 2),
+                "failover": (2, 2)}
+    return {"n": 4000, "dim": 64, "nq": 64, "rounds": 6,
+            "cfg": HNSWConfig(M=12, ef_construction=80, seed=0),
+            "shards": (1, 2, 3, 4), "replicas": (1, 2),
+            "failover": (3, 2)}
+
+
+def _workload(s):
+    ds = VectorDataset(s["n"], s["dim"], n_clusters=32, seed=0)
     vectors = ds.vectors()
-    queries = ds.queries(NQ)
+    queries = ds.queries(s["nq"])
     d2 = (np.einsum("nd,nd->n", vectors, vectors)[None]
           - 2 * queries @ vectors.T
           + np.einsum("qd,qd->q", queries, queries)[:, None])
@@ -83,18 +94,23 @@ def _throughput(search, queries, *, lanes: int = 4, rounds: int = 6):
             "us_per_query": wall / n_queries * 1e6}
 
 
-def run():
-    vectors, queries, gt = _workload()
-    spec = IndexSpec(backend="partitioned", num_partitions=1, hnsw=CFG,
+def run(tiny: bool = False):
+    s = _shapes(tiny)
+    cfg, rounds = s["cfg"], s["rounds"]
+    vectors, queries, gt = _workload(s)
+    spec = IndexSpec(backend="partitioned", num_partitions=1, hnsw=cfg,
                      keep_vectors=True)
-    rows, record = [], {"n": N, "dim": DIM, "k": K, "ef": EF,
-                        "sweeps": {}}
+    rows = []
+    record = {"n": s["n"], "dim": s["dim"], "k": K, "ef": EF,
+              "tiny": tiny,
+              "bench_meta": bench_stamp("tiny" if tiny else "full"),
+              "sweeps": {}}
 
     # single-index baseline: what shards==1 must tie with
     single = SearchService.build(
         vectors, IndexSpec(backend="partitioned", num_partitions=1,
-                           hnsw=CFG, keep_vectors=True))
-    base = _throughput(single.search, queries)
+                           hnsw=cfg, keep_vectors=True))
+    base = _throughput(single.search, queries, rounds=rounds)
     base_ids = np.asarray(single.search(
         SearchRequest(queries=queries, k=K, ef=EF)).ids)
     rec0 = recall_of(base_ids, gt)
@@ -103,14 +119,14 @@ def run():
     record["sweeps"]["single_index"] = {**base, "recall": round(rec0, 4)}
 
     # -- sweep: shards x replicas --------------------------------------------
-    for n_shards in (1, 2, 3, 4):
-        for replicas in (1, 2):
+    for n_shards in s["shards"]:
+        for replicas in s["replicas"]:
             cluster = build_cluster(vectors, spec, n_shards,
                                     replicas=replicas)
             ids = np.asarray(cluster.search(
                 SearchRequest(queries=queries, k=K, ef=EF)).ids)
             rec = recall_of(ids, gt)
-            m = _throughput(cluster.search, queries)
+            m = _throughput(cluster.search, queries, rounds=rounds)
             cluster.close()
             rows.append((f"fig_cluster_{n_shards}shards_x{replicas}",
                          m["us_per_query"],
@@ -121,13 +137,14 @@ def run():
                 **m, "recall": round(rec, 4)}
 
     # -- failover under load: kill one replica of every shard mid-stream ----
-    cluster = build_cluster(vectors, spec, 3, replicas=2)
+    fo_shards, fo_reps = s["failover"]
+    cluster = build_cluster(vectors, spec, fo_shards, replicas=fo_reps)
     want = np.asarray(cluster.search(
         SearchRequest(queries=queries, k=K, ef=EF)).ids)
-    healthy = _throughput(cluster.search, queries)
+    healthy = _throughput(cluster.search, queries, rounds=rounds)
     for client in cluster.shards:
         client.replicas[0].kill()
-    degraded = _throughput(cluster.search, queries)
+    degraded = _throughput(cluster.search, queries, rounds=rounds)
     got = np.asarray(cluster.search(
         SearchRequest(queries=queries, k=K, ef=EF)).ids)
     correct = bool(np.array_equal(want, got))
@@ -138,7 +155,7 @@ def run():
                  f"qps_degraded={degraded['qps']:.0f};"
                  f"p99_healthy_ms={healthy['p99_ms']:.1f};"
                  f"p99_degraded_ms={degraded['p99_ms']:.1f}"))
-    record["sweeps"]["failover_3x2_kill_one_each"] = {
+    record["sweeps"][f"failover_{fo_shards}x{fo_reps}_kill_one_each"] = {
         "healthy": healthy, "degraded": degraded,
         "answers_identical": correct}
 
@@ -146,3 +163,17 @@ def run():
         json.dump(record, f, indent=1, sort_keys=True)
     rows.append(("fig_cluster_json", 0.0, f"wrote={BENCH_JSON}"))
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke shapes (seconds, same code path)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, extra in run(tiny=args.tiny):
+        print(f"{name},{us:.1f},{extra}")
+
+
+if __name__ == "__main__":
+    main()

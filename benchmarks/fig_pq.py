@@ -35,7 +35,7 @@ import os
 
 import numpy as np
 
-from benchmarks.common import recall_of, timeit
+from benchmarks.common import bench_stamp, recall_of, timeit
 from repro.api import IndexSpec, SearchRequest, SearchService
 from repro.core.hnsw_graph import HNSWConfig
 from repro.store.csd import CSDBackend
@@ -173,6 +173,7 @@ def run(tiny: bool = False):
     record = {
         "n": s["n"], "dim": s["dim"], "nq": s["nq"], "k": K, "ef": EF,
         "tiny": tiny, "sweep_m": list(SWEEP_M),
+        "bench_meta": bench_stamp("tiny" if tiny else "full"),
         "note": ("block-structured data (d/16-dim blocks, 64 patterns "
                  "each): M=16 subspaces align with the generating blocks "
                  "(codebook-capturable, the SIFT-like regime); M=4/8 "

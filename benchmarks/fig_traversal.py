@@ -30,7 +30,7 @@ import os
 
 import numpy as np
 
-from benchmarks.common import recall_of
+from benchmarks.common import bench_stamp, recall_of
 from benchmarks.fig_cluster import _throughput
 from repro.api import IndexSpec, SearchRequest, SearchService
 from repro.core.hnsw_graph import HNSWConfig
@@ -199,6 +199,7 @@ def run(tiny: bool = False):
     part, csd, queries, gt = _build(tmp, s)
     record = {"n": s["n"], "dim": s["dim"], "nq": s["nq"], "k": K, "ef": EF,
               "tiny": tiny, "sweep": list(SWEEP),
+              "bench_meta": bench_stamp("tiny" if tiny else "full"),
               "note": ("in_memory runs Pallas in interpret mode on CPU — "
                        "dispatch-count scaling only; csd QPS is the "
                        "host-round-trip amortization the paper targets"),

@@ -1,0 +1,181 @@
+#!/usr/bin/env python
+"""Perf-regression gate over the BENCH_*.json trajectory (ISSUE 10).
+
+Diffs a fresh benchmark record against a committed baseline with
+noise-aware thresholds:
+
+  * QPS: any `qps` leaf that drops more than --qps-drop-pct (default 15 %,
+    well above the fig_obs run-to-run noise floor) fails the gate;
+  * recall: thresholds are ABSOLUTE floors, not diffs — recall on these
+    seeded workloads is deterministic, so the gate only fires when a
+    fresh value lands below the pinned floor for its artifact (a baseline
+    that itself regressed can never grandfather a bad recall in);
+  * provenance: records must carry the same `bench_meta.schema_version`
+    and the same variant (tiny vs full) — a tiny baseline is never
+    diffed against a full run, their wall-times differ by shape, not by
+    regression. Hosts are reported but not enforced (recall comparisons
+    are host-independent; QPS across hosts prints a warning).
+
+Usage (two positional files, or directory mode):
+
+  python scripts/bench_compare.py BENCH_cluster.json fresh/BENCH_cluster.json
+  python scripts/bench_compare.py --baseline-dir . --fresh-dir /tmp/fresh \
+      --names cluster,traversal,pq
+
+Exit status: 0 clean, 1 on any regression (CI gate), 2 on usage errors.
+Stdlib only — runs before any environment setup.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+QPS_DROP_PCT = 15.0
+
+# absolute recall floors per artifact, keyed by BENCH file stem then by
+# leaf key: a floor applies to EVERY leaf with that key in the record.
+# Measured 2026-08: cluster/traversal tiny and full shapes sit at
+# recall 1.0, so 0.90 leaves generous determinism margin. pq's sweep
+# spans M in {4,8,16} and the M=4 point is intentionally lossy
+# (recall 0.125 full / 0.2125 tiny), so the per-sweep floors are low;
+# the headline (M=16 + rerank) and uint8 reference get real floors.
+RECALL_FLOORS = {
+    "cluster": {"recall": 0.90},
+    "traversal": {"recall": 0.90},
+    "pq": {"recall_rerank": 0.10, "recall_raw": 0.10,
+           "recall_pq": 0.90, "recall_uint8": 0.90},
+    "obs": {},
+}
+
+
+def _walk(node, path=""):
+    """Yield (dotted_path, leaf_key, value) for every numeric leaf."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            yield from _walk(v, f"{path}.{k}" if path else k)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from _walk(v, f"{path}[{i}]")
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        yield path, path.rsplit(".", 1)[-1], float(node)
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _meta(rec):
+    m = rec.get("bench_meta", {})
+    return (m.get("schema_version"), m.get("variant"),
+            m.get("host", {}).get("platform"))
+
+
+def compare(name, base, fresh, qps_drop_pct=QPS_DROP_PCT):
+    """Returns (problems, warnings) comparing one artifact pair."""
+    problems, warnings = [], []
+    b_ver, b_var, b_host = _meta(base)
+    f_ver, f_var, f_host = _meta(fresh)
+    if b_ver != f_ver:
+        problems.append(
+            f"{name}: schema_version mismatch baseline={b_ver} "
+            f"fresh={f_ver} — regenerate the baseline")
+        return problems, warnings
+    if b_var != f_var:
+        problems.append(
+            f"{name}: variant mismatch baseline={b_var!r} fresh={f_var!r} "
+            f"— tiny and full runs are not comparable")
+        return problems, warnings
+    qps_comparable = True
+    if b_host and f_host and b_host != f_host:
+        warnings.append(
+            f"{name}: hosts differ ({b_host} vs {f_host}) — QPS skipped, "
+            f"recall floors still enforced")
+        qps_comparable = False
+
+    base_leaves = {p: v for p, _k, v in _walk(base)}
+    for path, key, v in _walk(fresh):
+        floor = RECALL_FLOORS.get(name, {}).get(key)
+        if floor is not None:
+            if v < floor:
+                problems.append(
+                    f"{name}: {path} = {v:.4f} below pinned floor {floor}")
+            continue
+        if key == "qps" and qps_comparable:
+            bv = base_leaves.get(path)
+            if bv is None:
+                warnings.append(f"{name}: {path} has no baseline (new leaf)")
+            elif bv > 0 and v < bv * (1.0 - qps_drop_pct / 100.0):
+                problems.append(
+                    f"{name}: {path} dropped {100 * (1 - v / bv):.1f}% "
+                    f"({bv:.1f} -> {v:.1f} QPS, threshold "
+                    f"{qps_drop_pct:.0f}%)")
+    return problems, warnings
+
+
+def _pairs_from_dirs(baseline_dir, fresh_dir, names):
+    pairs = []
+    for name in names:
+        fn = f"BENCH_{name}.json"
+        b, f = os.path.join(baseline_dir, fn), os.path.join(fresh_dir, fn)
+        if not os.path.exists(b):
+            print(f"[bench-compare] no baseline {b}; skipping {name}")
+            continue
+        if not os.path.exists(f):
+            print(f"[bench-compare] ERROR: fresh run missing {f}")
+            sys.exit(2)
+        pairs.append((name, b, f))
+    return pairs
+
+
+def _stem(path):
+    base = os.path.basename(path)
+    if base.startswith("BENCH_") and base.endswith(".json"):
+        return base[len("BENCH_"):-len(".json")]
+    return os.path.splitext(base)[0]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", nargs="?", help="baseline BENCH_*.json")
+    ap.add_argument("fresh", nargs="?", help="fresh BENCH_*.json")
+    ap.add_argument("--baseline-dir", default=None)
+    ap.add_argument("--fresh-dir", default=None)
+    ap.add_argument("--names", default="cluster,traversal,pq",
+                    help="comma-separated artifact stems for directory mode")
+    ap.add_argument("--qps-drop-pct", type=float, default=QPS_DROP_PCT)
+    args = ap.parse_args(argv)
+
+    if args.baseline_dir and args.fresh_dir:
+        names = [n.strip() for n in args.names.split(",") if n.strip()]
+        pairs = _pairs_from_dirs(args.baseline_dir, args.fresh_dir, names)
+    elif args.baseline and args.fresh:
+        pairs = [(_stem(args.fresh), args.baseline, args.fresh)]
+    else:
+        ap.error("give BASELINE FRESH files, or --baseline-dir/--fresh-dir")
+
+    any_problem = False
+    for name, bpath, fpath in pairs:
+        problems, warnings = compare(name, _load(bpath), _load(fpath),
+                                     qps_drop_pct=args.qps_drop_pct)
+        for w in warnings:
+            print(f"[bench-compare] warn: {w}")
+        if problems:
+            any_problem = True
+            for p in problems:
+                print(f"[bench-compare] REGRESSION: {p}")
+        else:
+            print(f"[bench-compare] {name}: OK "
+                  f"({bpath} vs {fpath})")
+    if any_problem:
+        print("[bench-compare] FAILED")
+        return 1
+    print("[bench-compare] all artifacts clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

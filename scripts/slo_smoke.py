@@ -1,0 +1,190 @@
+#!/usr/bin/env python
+"""CI slo-smoke: SLO burn-rate accounting, continuous profiling, and
+cost-model calibration over the real serving stack, end to end (ISSUE 10).
+
+Serves a tiny query stream through SearchServer -> batcher -> replica pool
+-> csd SearchService with an impossible latency SLO attached, then ASSERTS
+the phase-2 observability acceptance bounds:
+
+  * breach accounting is EXACT: every request misses a 0.001 ms p99
+    target, so the latency SLO must show samples == NQ, bad == NQ, burn
+    100x over budget on both windows, exactly one edge-triggered breach
+    event, and `slo_breaches_total` == 1 in the snapshot — while the
+    error-rate SLO (no failures injected) stays clean;
+  * the continuous profiler's live `profile_report()` covers every
+    request and telescopes to the measured e2e latency (queue + exec ==
+    e2e; traversal net of store reads; residue in dispatch_other);
+  * `calibrate()` on the emitted metrics snapshot fits >= 3 cost-model
+    terms (storage / fanout / dispatch) with finite values, and the
+    calibrated storage seconds/query lands within 2x of measured;
+  * `ann_dryrun --calibrated <snapshot>` surfaces the same table from a
+    fresh process (capacity planning on observed numbers, ROADMAP 5).
+
+  PYTHONPATH=src python scripts/slo_smoke.py [--skip-dryrun]
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.api import IndexSpec, SearchService  # noqa: E402
+from repro.core.hnsw_graph import HNSWConfig  # noqa: E402
+from repro.data import clustered_vectors  # noqa: E402
+from repro.obs import (PROFILER, SLOTracker, default_slos,  # noqa: E402
+                       load_calibration, compare_terms, profile_report,
+                       write_snapshot)
+from repro.serve import SearchServer  # noqa: E402
+
+N, DIM, K, EF = 1200, 32, 10, 40
+NQ = 64
+
+
+def check_slo_accounting(slo) -> None:
+    rows = {r["slo"]: r for r in slo.evaluate()}
+    lat, err = rows["latency_p99"], rows["error_rate"]
+    assert lat["samples"] == NQ, \
+        f"latency SLO saw {lat['samples']} samples, served {NQ}"
+    assert lat["bad"] == NQ, \
+        f"every request must miss a 0.001ms target; bad={lat['bad']}"
+    # bad_frac 1.0 over a 0.01 budget: burn 100x on both windows
+    assert lat["burn_long"] == 100.0 and lat["burn_short"] == 100.0, lat
+    assert lat["breaching"], "latency SLO must be breaching"
+    assert err["samples"] == NQ and err["bad"] == 0, err
+    assert not err["breaching"], "no errors injected, yet error SLO fired"
+    events = slo.breaches()
+    assert len(events) == 1 and events[0]["slo"] == "latency_p99", \
+        f"expected exactly one edge-triggered breach event, got {events}"
+    # re-evaluating while still breaching must NOT re-fire the edge
+    slo.evaluate()
+    assert len(slo.breaches()) == 1, "breach event re-fired on re-evaluate"
+
+
+def check_profile(rep: dict) -> None:
+    assert rep["requests"] == NQ, \
+        f"profiler saw {rep['requests']} requests, served {NQ}"
+    assert rep["sum_matches_e2e"], \
+        f"stage attribution does not telescope to e2e: {rep}"
+    assert abs(rep["stage_sum_ms"] - rep["e2e_ms"]) \
+        <= 0.02 * max(1.0, rep["e2e_ms"]), rep
+    stages = rep["stage_ms"]
+    assert stages["store_read"] > 0.0, \
+        "csd traffic must attribute store-read time"
+    assert stages["traversal"] >= 0.0 and stages["queue"] >= 0.0, stages
+
+
+def check_calibration(snap_path: str) -> dict:
+    cal = load_calibration(snap_path)
+    assert cal.queries and cal.queries >= NQ, cal.queries
+    terms = compare_terms(cal)
+    available = [k for k, t in terms.items() if not t.get("unavailable")]
+    assert set(available) >= {"storage", "fanout", "dispatch"}, \
+        f"expected >=3 fitted terms, got {available}"
+    st = terms["storage"]
+    ratio = st["calibrated"] / st["measured"]
+    assert 0.5 <= ratio <= 2.0, \
+        f"calibrated storage {st['calibrated']:.3e}s/q is {ratio:.2f}x " \
+        f"measured {st['measured']:.3e}s/q (must be within 2x)"
+    fo = terms["fanout"]
+    assert fo["calibrated_rel_error"] == 0.0, \
+        "fanout fit must reproduce the measured blocks/query exactly"
+    assert terms["dispatch"]["measured"] >= 0.0
+    return terms
+
+
+def check_dryrun(snap_path: str) -> None:
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    t0 = time.time()
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.ann_dryrun",
+         "--calibrated", snap_path],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=900)
+    assert out.returncode == 0, \
+        f"ann_dryrun --calibrated failed:\n{out.stderr[-2000:]}"
+    rec = json.loads(out.stdout)
+    calib = rec["calibration"]
+    assert calib["source"] == snap_path
+    available = [k for k, t in calib["terms"].items()
+                 if not t.get("unavailable")]
+    assert set(available) >= {"storage", "fanout", "dispatch"}, available
+    st = calib["terms"]["storage"]
+    ratio = st["calibrated"] / st["measured"]
+    assert 0.5 <= ratio <= 2.0, st
+    assert calib["fitted"]["effective_ssd_bw"] > 0
+    mw = calib.get("measured_workload")
+    assert mw and mw["calibrated_qps_per_device"] > 0, mw
+    print(f"[slo-smoke] ann_dryrun --calibrated OK in {time.time()-t0:.0f}s "
+          f"(storage calibrated/measured = {ratio:.2f}x, "
+          f"calibrated {mw['calibrated_qps_per_device']} QPS/device)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--skip-dryrun", action="store_true",
+                    help="skip the ann_dryrun subprocess (compiles the "
+                         "full distributed search; minutes on CPU)")
+    args = ap.parse_args()
+
+    root = tempfile.mkdtemp(prefix="slo-smoke-")
+    vecs = clustered_vectors(N, DIM, k=10, seed=0)
+    rng = np.random.default_rng(1)
+    queries = (vecs[rng.integers(0, N, NQ)]
+               + rng.normal(scale=1.0, size=(NQ, DIM))).astype(np.float32)
+    spec = IndexSpec(backend="csd", num_partitions=2,
+                     hnsw=HNSWConfig(M=8, ef_construction=50, seed=0),
+                     block_size=512, cache_bytes=1 << 20, prefetch=False,
+                     storage_path=os.path.join(root, "store"))
+    svc = SearchService.build(vecs, spec)
+
+    # impossible latency target -> every request is a bad sample; stock
+    # error-rate SLO rides along and must stay clean
+    slo = SLOTracker(default_slos(p99_ms=0.001, error_rate=0.01))
+    PROFILER.configure(enabled=True)
+    PROFILER.reset()
+    with SearchServer(svc, replicas=2, max_batch=8, max_wait_ms=1.0,
+                      slo=slo) as srv:
+        futs = [srv.submit(q, k=K, ef=EF, rerank=True) for q in queries]
+        [f.result(timeout=120) for f in futs]
+        srv.drain()
+        assert srv.slo is slo
+
+    check_slo_accounting(slo)
+    rep = profile_report()
+    check_profile(rep)
+
+    snap_path = write_snapshot(os.path.join(root, "metrics.json"))
+    with open(snap_path) as f:
+        snap = json.load(f)
+    breach_counters = [c for c in snap["counters"]
+                       if c["name"] == "slo_breaches_total"]
+    by_slo = {c["labels"]["slo"]: c["value"] for c in breach_counters}
+    assert by_slo.get("latency_p99") == 1, by_slo
+    assert by_slo.get("error_rate") == 0, by_slo
+    assert any(c["name"] == "profile_requests_total" and c["value"] >= NQ
+               for c in snap["counters"])
+
+    terms = check_calibration(snap_path)
+    st = terms["storage"]
+    print(f"[slo-smoke] slo accounting exact ({NQ}/{NQ} bad, burn 100x, "
+          f"1 breach event); profiler attribution sums to "
+          f"{rep['e2e_ms']}ms e2e over {rep['requests']} requests; "
+          f"storage term calibrated within "
+          f"{st['calibrated'] / st['measured']:.2f}x of measured")
+
+    if args.skip_dryrun:
+        print("[slo-smoke] OK (dryrun skipped)")
+        return
+    check_dryrun(snap_path)
+    print("[slo-smoke] OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -60,7 +60,7 @@ def make_shard(vectors, spec, *, name: str, gid_map, shard_index: int = 0,
 
 
 def build_cluster(vectors, spec, n_shards: int, *, replicas: int = 1,
-                  path: str | None = None) -> ClusterRouter:
+                  path: str | None = None, slo=None) -> ClusterRouter:
     """Shard `vectors` N ways and stand up the full serving cluster.
 
     The returned router's results are bit-identical to a single
@@ -95,4 +95,4 @@ def build_cluster(vectors, spec, n_shards: int, *, replicas: int = 1,
             vectors[lo:hi], spec, name=f"shard-{i:03d}",
             gid_map=np.arange(lo, hi, dtype=np.int64), shard_index=i,
             replicas=replicas, storage_root=storage_root))
-    return ClusterRouter(spec, clients, path=path)
+    return ClusterRouter(spec, clients, path=path, slo=slo)

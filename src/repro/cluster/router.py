@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
@@ -44,6 +45,7 @@ from repro.cluster.shard import ShardFault, ShardWorker, to_wire, from_wire
 from repro.cluster.topology import (ClusterTopology, ShardInfo,
                                     write_topology)
 from repro.obs.metrics import REGISTRY, next_uid
+from repro.obs.slo import SLOTracker
 from repro.obs.trace import TRACER
 
 __all__ = ["ShardClient", "ClusterRouter", "ClusterStats"]
@@ -163,6 +165,10 @@ class ClusterStats:
     cache_hit_rate: float | None    # weighted over csd replicas
     row_skew: float                 # max/mean shard rows (1.0 == balanced)
     query_skew: float               # max/mean replica queries
+    # per-shard SLO status rows (slo-enabled routers only): each entry is
+    # {"shard": name, "slo": [per-objective status dicts]}
+    slo: tuple = ()
+    slo_breaching: tuple = ()       # names of shards currently breaching
 
 
 def _collect_router(router: "ClusterRouter"):
@@ -190,7 +196,7 @@ class ClusterRouter:
     backend = None                  # no single-box backend behind this
 
     def __init__(self, spec, shards, *, path: str | None = None,
-                 version: int = 0, publish: bool = True):
+                 version: int = 0, publish: bool = True, slo=None):
         dtype = getattr(spec, "dtype", "float32")
         if dtype == "pq":
             # PQ is the one quantized dtype clusters support: the fitted
@@ -218,6 +224,12 @@ class ClusterRouter:
             max_workers=16, thread_name_prefix="cluster-router")
         self._monitor = None        # HealthMonitor attaches here
         self.uid = next_uid()
+        # optional per-shard SLO tracking: `slo` is an iterable of
+        # obs.slo.SLO objects; each shard gets its OWN tracker (labeled
+        # {router, shard}) fed from the scatter path, so a breaching shard
+        # is attributable in ClusterStats and the slo_* series
+        self._slo_spec = None if slo is None else tuple(slo)
+        self._slo_trackers: dict[str, SLOTracker] = {}
         REGISTRY.register_collector(self, _collect_router)
         if publish and path is not None:
             self._publish()
@@ -371,18 +383,41 @@ class ClusterRouter:
         return SearchResponse(ids=ids, dists=np.asarray(dists),
                               stats=stats)
 
+    def _slo_for(self, name: str) -> SLOTracker:
+        tr = self._slo_trackers.get(name)
+        if tr is None:
+            tr = self._slo_trackers.setdefault(
+                name, SLOTracker(self._slo_spec,
+                                 labels={"router": self.uid, "shard": name}))
+        return tr
+
     def _scatter(self, shards, msg: dict) -> list:
         # the fan-out crosses onto the router pool threads: capture the
         # caller's ctx here and parent each per-shard span on it explicitly
         ctx = TRACER.current_ctx()
 
         def _one(c):
-            if ctx is None:
-                return c.request(msg)
-            with TRACER.span("shard", parent=ctx, shard=c.name) as sp:
-                m = dict(msg)
-                m["trace"] = sp.ctx.wire()   # rides the JSON wire header
-                return c.request(m)
+            slo = (self._slo_for(c.name) if self._slo_spec is not None
+                   else None)
+            t0 = time.perf_counter()
+            try:
+                if ctx is None:
+                    r = c.request(msg)
+                else:
+                    with TRACER.span("shard", parent=ctx,
+                                     shard=c.name) as sp:
+                        m = dict(msg)
+                        m["trace"] = sp.ctx.wire()   # JSON wire header
+                        r = c.request(m)
+            except Exception:
+                # failover already exhausted inside ShardClient.request —
+                # what escapes here is a real per-shard failure
+                if slo is not None:
+                    slo.record_error()
+                raise
+            if slo is not None:
+                slo.record_latency((time.perf_counter() - t0) * 1e3)
+            return r
 
         futs = [self._pool.submit(_one, c) for c in shards]
         return [f.result() for f in futs]          # shard order preserved
@@ -428,6 +463,14 @@ class ClusterRouter:
         dh = sum(r.get("cache_hits", 0) for r in csd)
         dm = sum(r.get("cache_misses", 0) for r in csd)
         hit = ((dh / (dh + dm) if (dh + dm) else 0.0) if csd else None)
+        slo_rows: list = []
+        breaching: list = []
+        if self._slo_spec is not None:
+            for name in sorted(self._slo_trackers):
+                status = self._slo_trackers[name].evaluate()
+                slo_rows.append({"shard": name, "slo": status})
+                if any(row["breaching"] for row in status):
+                    breaching.append(name)
         return ClusterStats(
             n_shards=len(shards),
             n_replicas=sum(c.live() for c in shards),
@@ -441,7 +484,9 @@ class ClusterRouter:
             row_skew=float(rows.max() / rows.mean()) if rows.size and
             rows.mean() > 0 else 1.0,
             query_skew=float(rep_q.max() / rep_q.mean()) if rep_q.size and
-            rep_q.mean() > 0 else 1.0)
+            rep_q.mean() > 0 else 1.0,
+            slo=tuple(slo_rows),
+            slo_breaching=tuple(breaching))
 
     def close(self) -> None:
         if self._monitor is not None:

@@ -56,6 +56,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--calibrated", default=None, metavar="METRICS_JSON",
+                    help="fit the cost-model HW parameters (effective SSD "
+                         "bandwidth, cache hit rate, dispatch overhead) "
+                         "from this metrics snapshot (the exporter's .json "
+                         "output) and report per-term modeled-vs-measured "
+                         "error alongside the prior-based numbers")
     args = ap.parse_args()
     mesh = make_production_mesh(multi_pod=args.multi_pod)
     db, n_pad, d_pad, m0p = sift1b_db_specs(mesh)
@@ -194,6 +200,35 @@ def main():
         "note": ("stage-2 merge traffic per query = P*k*(4+4)B across "
                  "`model` — negligible vs stage-1 HBM reads (paper: 0.2%)"),
     }
+
+    if args.calibrated:
+        # capacity planning on observed numbers (ROADMAP item 5): fit the
+        # HW parameters from the snapshot, report per-term error, and
+        # reprice the MEASURED workload with the fitted parameters
+        from repro.launch.costmodel import dispatch_cost
+        from repro.obs.calibrate import compare_terms, load_calibration
+        cal = load_calibration(args.calibrated)
+        section = {
+            "source": args.calibrated,
+            "fitted": cal.asdict(),
+            "terms": compare_terms(cal, hw=hw),
+        }
+        if (cal.queries and cal.blocks_per_query and cal.block_size
+                and cal.effective_ssd_bw):
+            sc = storage_cost(cal.blocks_per_query, cal.block_size,
+                              cache_hit_rate=cal.cache_hit_rate or 0.0,
+                              ssd_bw=cal.effective_ssd_bw)
+            dc = dispatch_cost(cal.supersteps_per_query or 0.0,
+                               cal.dispatch_overhead_s or 0.0)
+            total_s = sc.storage_s + dc.dispatch_s
+            section["measured_workload"] = {
+                "storage_s_per_query": sc.storage_s,
+                "dispatch_s_per_query": dc.dispatch_s,
+                "calibrated_qps_per_device": (round(1.0 / total_s, 2)
+                                              if total_s > 0 else None),
+            }
+        rec["calibration"] = section
+
     print(json.dumps(rec, indent=2))
 
 

@@ -30,6 +30,7 @@ from repro.models.transformer import LayerSpec, ModelConfig
 __all__ = ["cell_costs", "StorageCost", "storage_cost",
            "CompactionCost", "compaction_cost",
            "ClusterFanoutCost", "cluster_fanout_cost",
+           "DispatchCost", "dispatch_cost",
            "VECTOR_DTYPE_BYTES", "vector_row_bytes"]
 
 
@@ -297,6 +298,37 @@ def storage_cost(block_accesses: float, block_size: int,
         bytes_from_flash=float(nbytes),
         storage_s=float(nbytes / ssd_bw),
         hit_rate=float(cache_hit_rate),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchCost:
+    """Host-side dispatch tax of the superstep traversal loop.
+
+    Each superstep is one host<->device round trip (launch + sync); the
+    per-superstep overhead is NOT in the analytic flash/flops terms, and
+    the fused-hop driver (fused_hops=H) exists precisely to divide it by
+    H. The overhead itself is a measured quantity — `repro.obs.calibrate`
+    fits it from the continuous profiler's superstep vs hop-kernel span
+    times — so this term prices observed sync cost, not a guess.
+    """
+
+    supersteps: float                  # supersteps per query
+    overhead_s_per_superstep: float
+    dispatch_s: float                  # host seconds per query
+
+
+def dispatch_cost(supersteps: float,
+                  overhead_s_per_superstep: float) -> DispatchCost:
+    """Price `supersteps` host round trips per query at a (measured)
+    per-superstep overhead."""
+    if supersteps < 0 or overhead_s_per_superstep < 0:
+        raise ValueError("supersteps and overhead must be >= 0, got "
+                         f"{supersteps}, {overhead_s_per_superstep}")
+    return DispatchCost(
+        supersteps=float(supersteps),
+        overhead_s_per_superstep=float(overhead_s_per_superstep),
+        dispatch_s=float(supersteps * overhead_s_per_superstep),
     )
 
 

@@ -71,21 +71,29 @@ def serve_loop(service, queries, batch: int, k: int, ef: int,
 
 def serve_async(service, queries, *, k: int, ef: int, rerank: bool = False,
                 replicas: int = 2, max_batch: int = 64,
-                max_wait_ms: float = 2.0, log=print):
+                max_wait_ms: float = 2.0, slo=None,
+                flight_out: str | None = None, log=print):
     """Per-query submission through repro.serve; returns (ids, stats dict).
 
     Queries are submitted one by one — the dynamic batcher, not the caller,
-    decides the accelerator batch shapes.
+    decides the accelerator batch shapes. `slo` attaches an SLOTracker
+    (breach summary printed at drain); `flight_out` writes the slow-query
+    flight recorder's Perfetto dump there after drain.
     """
     from repro.serve import SearchServer
 
     svc = service
     with SearchServer(svc, replicas=replicas, max_batch=max_batch,
-                      max_wait_ms=max_wait_ms) as srv:
+                      max_wait_ms=max_wait_ms, slo=slo) as srv:
         futs = srv.submit_many(queries, k=k, ef=ef, rerank=rerank)
         results = [f.result() for f in futs]
         srv.drain()
         roll = srv.stats()
+        if srv.slo is not None:
+            for line in srv.slo.summary().splitlines():
+                log(f"[serve-async] {line}")
+        if flight_out:
+            log(f"[serve-async] flight  -> {srv.debug_dump(flight_out)}")
     log(f"[serve-async] {roll.summary()}")
     for r in roll.replicas:
         extra = ("" if "block_reads" not in r else
@@ -183,11 +191,31 @@ def main(argv=None):
     ap.add_argument("--metrics-interval", type=float, default=0.0,
                     help="with --metrics-out: re-emit the file every N "
                          "seconds while serving (0 = once, at the end)")
+    ap.add_argument("--slo", action="store_true",
+                    help="track the stock SLOs (p99 e2e latency, error "
+                         "rate) and print a breach summary at drain "
+                         "(async path only)")
+    ap.add_argument("--slo-p99-ms", type=float, default=50.0,
+                    help="latency SLO: 99%% of requests under this many ms")
+    ap.add_argument("--slo-error-rate", type=float, default=0.01,
+                    help="error-rate SLO: failed-request budget fraction")
+    ap.add_argument("--flight-out", default=None,
+                    help="write the slow-query flight recorder's Perfetto "
+                         "JSON dump here at drain (async path only)")
     args = ap.parse_args(argv)
 
     from repro.obs import PeriodicExporter, TRACER, write_snapshot
     if args.trace or args.trace_out:
         TRACER.configure(enabled=True, sample_rate=args.trace_sample)
+
+    slo_tracker = None
+    if args.slo:
+        from repro.obs import SLOTracker, default_slos
+        slo_tracker = SLOTracker(default_slos(
+            p99_ms=args.slo_p99_ms, error_rate=args.slo_error_rate))
+    if (args.slo or args.flight_out) and not args.serve_async:
+        print("[serve] note: --slo/--flight-out need the async serve path; "
+              "pass --serve-async (ignored on the sync loop)")
 
     ds = VectorDataset(args.n, args.dim)
     service = build_service(args, ds)
@@ -205,7 +233,8 @@ def main(argv=None):
                 service, queries, k=args.k, ef=args.ef, rerank=args.rerank,
                 replicas=args.replicas,
                 max_batch=args.max_batch or args.batch,
-                max_wait_ms=args.max_wait_ms)
+                max_wait_ms=args.max_wait_ms, slo=slo_tracker,
+                flight_out=args.flight_out)
         else:
             _, stats = serve_loop(service, queries, args.batch, args.k,
                                   args.ef, rerank=args.rerank)

@@ -120,6 +120,7 @@ class PeriodicExporter:
         self.emits = 0
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
+        self._final_emitted = False
 
     def emit(self) -> None:
         _atomic_write(self.path, _render(self.path, self.registry))
@@ -130,6 +131,8 @@ class PeriodicExporter:
 
     def start(self) -> "PeriodicExporter":
         if self._thread is None:
+            self._stop.clear()              # restartable after stop()
+            self._final_emitted = False
             self.emit()                     # a scrape target exists at once
             self._thread = threading.Thread(
                 target=self._loop, daemon=True, name="obs-exporter")
@@ -144,11 +147,20 @@ class PeriodicExporter:
                 pass                        # serving process
 
     def stop(self) -> None:
+        """Idempotent shutdown with EXACTLY ONE final emission.
+
+        The final emit happens after the thread has joined, so metrics
+        recorded between the last periodic tick and stop() always land in
+        the file; a second stop() (or stop() without start()) must not
+        emit again — callers treat the file as complete at first return.
+        """
         self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout=5.0)
             self._thread = None
-        self.emit()                         # final, complete snapshot
+        if not self._final_emitted:
+            self._final_emitted = True
+            self.emit()                     # final, complete snapshot
 
     def __enter__(self) -> "PeriodicExporter":
         return self.start()

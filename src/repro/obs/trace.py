@@ -170,6 +170,12 @@ class Tracer:
         self._epoch = time.perf_counter()
         self._rng = random.Random()
         self.dropped = 0
+        # Optional continuous profiler fed at span close (obs phase 2).
+        # Left None on private tracers; repro.obs.__init__ attaches the
+        # global PROFILER to the global TRACER so stage timings keep
+        # flowing even with tracing disabled (span() hands out a
+        # lightweight profiler span instead of the shared no-op).
+        self.profiler = None
 
     # -- configuration -------------------------------------------------------
 
@@ -213,6 +219,11 @@ class Tracer:
 
     def _record(self, name, t0, t1, trace_id, span_id, parent_id, tid,
                 attrs) -> None:
+        p = self.profiler
+        if p is not None and p.enabled:
+            # before the max_events bound: profiling aggregates are O(1)
+            # per stage name, so they never drop with the event buffer
+            p.observe(name, (t1 - t0) * 1e3)
         ev = {"name": name, "t0": t0, "t1": t1, "trace": trace_id,
               "id": span_id, "parent": parent_id,
               "tid": tid if tid is not None else threading.current_thread().name,
@@ -234,6 +245,9 @@ class Tracer:
         parent=None    : force a new root trace.
         """
         if not self.enabled:
+            p = self.profiler
+            if p is not None and p.enabled:
+                return p.span(name)
             return _NOOP
         stack = self._stack()
         if parent is _AMBIENT:
@@ -263,6 +277,9 @@ class Tracer:
         segments) use this so background work (prefetch threads, health
         probes) cannot spawn stray root traces."""
         if not self.enabled:
+            p = self.profiler
+            if p is not None and p.enabled:
+                return p.span(name)
             return _NOOP
         stack = self._stack()
         top = stack[-1] if stack else None
@@ -336,14 +353,21 @@ class Tracer:
         with self._lock:
             return list(self._events)
 
-    def export(self) -> dict:
+    def export(self, trace_ids=None) -> dict:
         """Chrome trace-event JSON object (loads in chrome://tracing and
         https://ui.perfetto.dev): complete ('X') events, ts/dur in us
-        relative to the tracer epoch."""
+        relative to the tracer epoch.
+
+        `trace_ids` (an iterable of trace ids) restricts the export to
+        those traces — the flight recorder uses this to dump only the
+        span trees of the requests it captured."""
         with self._lock:
             events = list(self._events)
             epoch = self._epoch
             dropped = self.dropped
+        if trace_ids is not None:
+            keep = set(trace_ids)
+            events = [ev for ev in events if ev["trace"] in keep]
         tids: dict[str, int] = {}
         out = []
         for ev in events:
@@ -363,9 +387,9 @@ class Tracer:
         return {"traceEvents": meta + out, "displayTimeUnit": "ms",
                 "otherData": {"dropped_events": dropped}}
 
-    def write(self, path: str) -> str:
+    def write(self, path: str, trace_ids=None) -> str:
         with open(path, "w") as f:
-            json.dump(self.export(), f)
+            json.dump(self.export(trace_ids), f)
         return path
 
 

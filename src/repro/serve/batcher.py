@@ -71,12 +71,15 @@ class DynamicBatcher:
         batch while this one executes; a plain response (direct service)
         makes the batcher synchronous.
     collector : optional stats sink with record_batch(size) /
-        record_done(result, t_done) (see server._Collector).
+        record_done(result, t_done) / record_error(n)
+        (see server._Collector).
+    flight : optional FlightRecorder capturing the slowest + errored
+        requests at scatter time.
     """
 
     def __init__(self, queue: RequestQueue, dispatch, *, max_batch: int = 32,
                  max_wait_ms: float = 2.0, pad_to_bucket: bool = True,
-                 collector=None):
+                 collector=None, flight=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.queue = queue
@@ -85,6 +88,7 @@ class DynamicBatcher:
         self.max_wait_ms = float(max_wait_ms)
         self.pad_to_bucket = pad_to_bucket
         self.collector = collector
+        self.flight = flight
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="serve-batcher")
 
@@ -187,10 +191,22 @@ class DynamicBatcher:
                                    parent=p.trace, tid=lane)
             if self.collector is not None:
                 self.collector.record_done(res, t_done)
+            if self.flight is not None:
+                self.flight.record(seq=p.seq, e2e_ms=res.e2e_ms,
+                                   queue_ms=res.queue_ms,
+                                   exec_ms=res.exec_ms, k=p.k, ef=head.ef,
+                                   trace=p.trace, stats=stats)
             p.future.set_result(res)
 
-    @staticmethod
-    def _fail(batch: list[PendingQuery], exc: Exception) -> None:
+    def _fail(self, batch: list[PendingQuery], exc: Exception) -> None:
+        n = 0
         for p in batch:
             if not p.future.done():
                 p.future.set_exception(exc)
+                n += 1
+                if self.flight is not None:
+                    self.flight.record_error(
+                        seq=p.seq, error=f"{type(exc).__name__}: {exc}",
+                        k=p.k, trace=p.trace)
+        if n and self.collector is not None:
+            self.collector.record_error(n)

@@ -32,6 +32,7 @@ import jax
 import numpy as np
 
 from repro.obs.metrics import REGISTRY, next_uid
+from repro.obs.profile import PROFILER
 from repro.obs.trace import TRACER
 
 __all__ = ["Replica", "ReplicaPool"]
@@ -62,9 +63,14 @@ class Replica:
         else:
             sp = TRACER.child_span("dispatch", replica=self.rid)
         t0 = time.perf_counter()
-        with sp:
-            resp = self.service.search(request)
-            jax.block_until_ready((resp.ids, resp.dists))
+        # every stage span closed on this thread (traversal, store-read,
+        # rerank, hops) weights by the batch's real request count in the
+        # continuous profiler: a stage shared by B co-riders is B requests'
+        # worth of that stage (fig_obs's size/n_req weighting, live)
+        with PROFILER.weighted(n_queries):
+            with sp:
+                resp = self.service.search(request)
+                jax.block_until_ready((resp.ids, resp.dists))
         self.busy_s += time.perf_counter() - t0
         self.batches += 1
         self.queries += n_queries

@@ -32,8 +32,12 @@ from concurrent.futures import Future
 import numpy as np
 
 from repro.obs import export as _export
+from repro.obs.flight import FlightRecorder
 from repro.obs.metrics import REGISTRY
+from repro.obs.profile import PROFILER
+from repro.obs.slo import SLOTracker
 from repro.obs.stats import latency_summary
+from repro.obs.trace import TRACER
 from repro.serve.batcher import DynamicBatcher
 from repro.serve.dispatch import ReplicaPool
 from repro.serve.queue import QueryResult, RequestQueue, ServeClosed
@@ -72,7 +76,8 @@ class ServeStats:
 class _Collector:
     """Thread-safe sink the batcher reports into."""
 
-    def __init__(self) -> None:
+    def __init__(self, slo: SLOTracker | None = None) -> None:
+        self._slo = slo
         self._lock = threading.Lock()
         self.queue_ms: list[float] = []
         self.exec_ms: list[float] = []
@@ -88,6 +93,7 @@ class _Collector:
         self._m_e2e = REGISTRY.histogram("serve_e2e_ms")
         self._m_bsz = REGISTRY.histogram("serve_batch_size",
                                          buckets=_BATCH_BUCKETS)
+        self._m_errors = REGISTRY.counter("serve_errors_total")
 
     def mark_enqueue(self, t: float) -> None:
         with self._lock:
@@ -111,6 +117,18 @@ class _Collector:
         self._m_queue.observe(res.queue_ms)
         self._m_exec.observe(res.exec_ms)
         self._m_e2e.observe(res.e2e_ms)
+        # the continuous profiler sees EVERY request here (the batcher's
+        # retroactive request/queue/exec spans exist only when sampled)
+        if PROFILER.enabled:
+            PROFILER.request(res.queue_ms, res.exec_ms, res.e2e_ms)
+        if self._slo is not None:
+            self._slo.record_latency(res.e2e_ms)
+
+    def record_error(self, n: int = 1) -> None:
+        """Requests failed by a dispatch exception (batcher _fail path)."""
+        self._m_errors.inc(n)
+        if self._slo is not None:
+            self._slo.record_error(n)
 
     def rollup(self, replica_stats: list[dict]) -> ServeStats:
         with self._lock:
@@ -137,15 +155,25 @@ class SearchServer:
     """Async serving over one SearchService (or a prebuilt ReplicaPool)."""
 
     def __init__(self, service, *, replicas: int = 1, max_batch: int = 32,
-                 max_wait_ms: float = 2.0, pad_to_bucket: bool = True):
+                 max_wait_ms: float = 2.0, pad_to_bucket: bool = True,
+                 slo=None, flight: int | FlightRecorder | None = 16):
+        """`slo` is an SLOTracker (or an iterable of SLO objects, wrapped
+        into one); `flight` sizes the slow-query flight recorder
+        (int capacity, a prebuilt FlightRecorder, or None/0 to disable)."""
         self.pool = (service if isinstance(service, ReplicaPool)
                      else ReplicaPool.replicate(service, replicas))
         self.queue = RequestQueue()
-        self._collector = _Collector()
+        if slo is not None and not isinstance(slo, SLOTracker):
+            slo = SLOTracker(slo)
+        self.slo = slo
+        if isinstance(flight, int):
+            flight = FlightRecorder(capacity=flight) if flight > 0 else None
+        self.flight = flight
+        self._collector = _Collector(slo=slo)
         self.batcher = DynamicBatcher(
             self.queue, self.pool.submit, max_batch=max_batch,
             max_wait_ms=max_wait_ms, pad_to_bucket=pad_to_bucket,
-            collector=self._collector)
+            collector=self._collector, flight=self.flight)
         self._outstanding = 0
         self._drain_cond = threading.Condition()
         self._shutdown = False
@@ -245,6 +273,21 @@ class SearchServer:
 
     def stats(self) -> ServeStats:
         return self._collector.rollup(self.pool.stats())
+
+    def slo_status(self) -> list[dict] | None:
+        """Evaluate the attached SLOs now (None when none attached)."""
+        return None if self.slo is None else self.slo.evaluate()
+
+    def debug_dump(self, path: str | None = None):
+        """The flight recorder's Perfetto document: span trees of the
+        slowest/errored captured requests + their records under
+        otherData.flight. Writes to `path` when given (returns the path),
+        else returns the document dict."""
+        if self.flight is None:
+            raise RuntimeError("flight recorder disabled (flight=None)")
+        if path is not None:
+            return self.flight.write(path, tracer=TRACER)
+        return self.flight.export(tracer=TRACER)
 
     def metrics(self, fmt: str = "prometheus") -> str:
         """Process-wide metrics snapshot (this server's series included),

@@ -49,7 +49,7 @@ IS the distance to the reconstruction.
 from __future__ import annotations
 
 import functools
-
+import threading
 import typing
 
 import jax
@@ -61,7 +61,7 @@ from repro.core.partitioned import (build_partitioned_db, merge_topk,
 from repro.core.search import (SearchParams, bitmap_words, merge_sorted,
                                metric_distance, pq_lut_distances)
 from repro.optim.compression import build_pq_lut
-from repro.obs.metrics import REGISTRY
+from repro.obs.metrics import REGISTRY, next_uid
 from repro.obs.trace import TRACER
 from repro.store.layout import StoreReader, open_store, write_store
 
@@ -687,6 +687,34 @@ def store_search(reader: StoreReader, queries, params: SearchParams,
 # ---------------------------------------------------------------------------
 
 
+def _collect_csd(be: "CSDBackend"):
+    """Snapshot-time metric samples per live csd backend (repro.obs).
+
+    Publishes the per-query counters `QueryStats` carries (supersteps,
+    dist_calcs, bytes_read) as cumulative REGISTRY series — the ADC and
+    fused-superstep wins in the Prometheus export, not just per query —
+    plus the store geometry gauges `repro.obs.calibrate` needs to price
+    the workload (padded graph degree, vector row bytes, block size)."""
+    r = be.reader
+    labels = {"backend": be.uid}
+    with be._tlock:
+        q, hops, calcs, steps = (be._queries, be._hops, be._dist_calcs,
+                                 be._supersteps)
+    t = r.blockfile.tables["vectors"]
+    row_bytes = int(t["cols"]) * np.dtype(t["dtype"]).itemsize
+    return [
+        ("counter", "csd_queries_total", labels, q),
+        ("counter", "csd_hops_total", labels, hops),
+        ("counter", "csd_supersteps_total", labels, steps),
+        ("counter", "search_dist_calcs_total", labels, calcs),
+        ("counter", "csd_bytes_read_total", labels,
+         r.cache.snapshot()["bytes_read"]),
+        ("gauge", "csd_graph_degree", labels, r.m0_pad),
+        ("gauge", "csd_vector_row_bytes", labels, row_bytes),
+        ("gauge", "csd_block_size", labels, r.block_size),
+    ]
+
+
 class CSDBackend:
     """Storage-resident two-stage engine (registered as `csd`).
 
@@ -703,6 +731,14 @@ class CSDBackend:
         self.reader = reader
         self.quant = spec.quantizer()
         self.is_pq = spec.dtype == "pq"
+        # cumulative engine counters behind the csd_*/search_* series
+        self.uid = next_uid()
+        self._tlock = threading.Lock()
+        self._queries = 0
+        self._hops = 0
+        self._dist_calcs = 0
+        self._supersteps = 0
+        REGISTRY.register_collector(self, _collect_csd)
 
     @staticmethod
     def _storage_path(spec: IndexSpec) -> str:
@@ -792,6 +828,11 @@ class CSDBackend:
             if self.quant is not None and not self.is_pq:
                 # code-space -> real-space (ADC is already real-space)
                 dists = dists * jnp.float32(self.quant.dist_scale)
+        with self._tlock:
+            self._queries += int(np.asarray(queries).shape[0])
+            self._hops += int(np.asarray(hops).sum())
+            self._dist_calcs += int(np.asarray(calcs).sum())
+            self._supersteps += int(steps)
         stats = None
         if with_stats:
             from repro.api.types import QueryStats

@@ -1,0 +1,281 @@
+"""repro.obs.flight: the slow-query flight recorder (obs phase 2).
+
+Acceptance bars (ISSUE 10):
+
+  * the recorder keeps exactly the N slowest completed requests (min-heap
+    semantics: a new request only displaces the fastest capture) plus
+    every errored request in a bounded ring;
+  * an injected slow query is captured END TO END through the real stack
+    (SearchServer -> batcher -> replica pool), with its latency split and
+    — when traced — its span tree in the Perfetto dump;
+  * `debug_dump()` emits valid Perfetto/Chrome trace JSON whose events
+    are filtered to the captured trace ids, with the capture records
+    under `otherData.flight`.
+"""
+
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.obs import FlightRecorder, TRACER
+from repro.obs.metrics import MetricsRegistry
+
+
+def make(capacity=4):
+    return FlightRecorder(capacity=capacity, registry=MetricsRegistry())
+
+
+# ---------------------------------------------------------------------------
+# recorder mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_keeps_n_slowest():
+    fr = make(capacity=3)
+    for seq, ms in enumerate([10.0, 50.0, 5.0, 30.0, 40.0, 1.0]):
+        fr.record(seq=seq, e2e_ms=ms)
+    snap = fr.snapshot()
+    assert [r["e2e_ms"] for r in snap["slowest"]] == [50.0, 40.0, 30.0]
+    assert snap["captured_total"] == 5          # 1.0 never made the cut
+    assert snap["capacity"] == 3
+
+
+def test_fast_request_rejected_cheaply():
+    fr = make(capacity=2)
+    assert fr.record(seq=0, e2e_ms=10.0)
+    assert fr.record(seq=1, e2e_ms=20.0)
+    assert not fr.record(seq=2, e2e_ms=5.0)     # below the heap floor
+    assert fr.record(seq=3, e2e_ms=15.0)        # displaces the 10ms one
+    assert [r["e2e_ms"] for r in fr.snapshot()["slowest"]] == [20.0, 15.0]
+
+
+def test_capacity_validated():
+    with pytest.raises(ValueError, match="capacity"):
+        FlightRecorder(capacity=0, registry=MetricsRegistry())
+
+
+def test_errors_always_kept_newest():
+    fr = make(capacity=2)
+    for i in range(5):
+        fr.record_error(seq=i, error=f"boom-{i}")
+    snap = fr.snapshot()
+    assert [e["seq"] for e in snap["errored"]] == [3, 4]
+    assert snap["errors_total"] == 5
+
+
+def test_record_payload_is_json_safe():
+    """QueryStats-style payloads with numpy arrays/scalars must survive
+    json.dumps round-trip."""
+    fr = make()
+    fr.record(seq=0, e2e_ms=12.0, queue_ms=2.0, exec_ms=10.0, k=10, ef=40,
+              stats={"hops": np.int64(7),
+                     "dist_calcs": np.array([3, 4]),
+                     "nested": {"rate": np.float32(0.5)}})
+    doc = json.loads(json.dumps(fr.export()))
+    rec = doc["otherData"]["flight"]["slowest"][0]
+    assert rec["stats"]["hops"] == 7
+    assert rec["stats"]["dist_calcs"] == [3, 4]
+    assert rec["k"] == 10 and rec["queue_ms"] == 2.0
+
+
+def test_trace_id_kept_only_when_sampled():
+    from repro.obs.trace import SpanCtx
+
+    fr = make()
+    fr.record(seq=0, e2e_ms=10.0, trace=SpanCtx(7, 1, 0, True))
+    fr.record(seq=1, e2e_ms=20.0, trace=SpanCtx(8, 1, 0, False))
+    fr.record(seq=2, e2e_ms=30.0, trace=None)
+    by_seq = {r["seq"]: r for r in fr.snapshot()["slowest"]}
+    assert by_seq[0]["trace_id"] == 7
+    assert by_seq[1]["trace_id"] is None        # unsampled: no id to replay
+    assert by_seq[2]["trace_id"] is None
+    assert fr.trace_ids() == {7}
+
+
+def test_export_without_tracer_is_valid_trace_json():
+    fr = make()
+    fr.record(seq=0, e2e_ms=10.0)
+    doc = json.loads(json.dumps(fr.export()))
+    assert doc["traceEvents"] == []
+    assert doc["otherData"]["flight"]["slowest"][0]["seq"] == 0
+
+
+def test_export_filters_tracer_to_captured_ids(tmp_path):
+    """Only the captured requests' span trees land in the dump — the
+    point of the recorder is NOT keeping everything."""
+    from repro.obs import Tracer
+
+    t = Tracer(enabled=True, sample_rate=1.0)
+    ctxs = []
+    for name in ("fast", "slow"):
+        with t.span(name) as sp:
+            ctxs.append(sp.ctx)
+    fr = make()
+    fr.record(seq=0, e2e_ms=99.0, trace=ctxs[1])     # capture only "slow"
+    path = str(tmp_path / "flight.json")
+    fr.write(path, tracer=t)
+    with open(path) as f:
+        doc = json.load(f)
+    events = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    assert {e["name"] for e in events} == {"slow"}
+    assert doc["otherData"]["flight"]["captured_total"] == 1
+
+
+def test_registry_series():
+    reg = MetricsRegistry()
+    fr = FlightRecorder(capacity=2, registry=reg)
+    fr.record(seq=0, e2e_ms=10.0)
+    fr.record(seq=1, e2e_ms=30.0)
+    fr.record_error(seq=2, error="x")
+    snap = reg.snapshot()
+    counters = {c["name"]: c["value"] for c in snap["counters"]}
+    gauges = {g["name"]: g["value"] for g in snap["gauges"]}
+    assert counters["flight_captured_total"] == 2
+    assert counters["flight_errors_total"] == 1
+    assert gauges["flight_slowest_ms"] == 10.0  # heap floor once full
+
+
+# ---------------------------------------------------------------------------
+# end-to-end through the serving stack
+# ---------------------------------------------------------------------------
+
+
+class SlowOnce:
+    """Service delegate that injects one slow search (the tail outlier
+    the recorder exists to catch)."""
+
+    def __init__(self, service, sleep_s=0.08):
+        self._service = service
+        self._sleep_s = sleep_s
+        self._fired = False
+        self.spec = service.spec
+        self.backend = service.backend
+
+    def search(self, request):
+        if not self._fired:
+            self._fired = True
+            time.sleep(self._sleep_s)
+        return self._service.search(request)
+
+
+def test_injected_slow_query_captured_end_to_end(backend_zoo):
+    from repro.serve import SearchServer
+
+    svc = SlowOnce(backend_zoo.service("partitioned", "l2"), sleep_s=0.08)
+    q = backend_zoo.queries()
+    TRACER.configure(enabled=True, sample_rate=1.0)
+    TRACER.clear()
+    try:
+        with SearchServer(svc, replicas=1, max_batch=1, max_wait_ms=0.1,
+                          flight=4) as srv:
+            futs = [srv.submit(x, k=5, ef=40) for x in q[:8]]
+            [f.result(timeout=60) for f in futs]
+            srv.drain()
+            doc = srv.debug_dump()
+            path_doc = None
+    finally:
+        TRACER.configure(enabled=False)
+        TRACER.clear()
+
+    flight = doc["otherData"]["flight"]
+    slowest = flight["slowest"]
+    assert 1 <= len(slowest) <= 4
+    # the injected outlier leads, with its full latency split
+    head = slowest[0]
+    assert head["e2e_ms"] >= 80.0, \
+        f"injected 80ms query not at the head of the captures: {slowest}"
+    assert head["e2e_ms"] >= head["exec_ms"] >= 80.0 * 0.9
+    assert head["trace_id"] is not None         # fully sampled run
+    # its span tree is in the dump: every layer of the request path
+    doc2 = json.loads(json.dumps(doc))          # valid JSON end to end
+    names = {e["name"] for e in doc2["traceEvents"] if e.get("ph") == "X"}
+    assert {"request", "queue", "exec", "batch", "dispatch",
+            "search"} <= names
+    captured_ids = {r["trace_id"] for r in slowest
+                    if r["trace_id"] is not None}
+    event_traces = {e["args"]["trace_id"]
+                    for e in doc2["traceEvents"] if e.get("ph") == "X"}
+    assert event_traces == captured_ids         # filtered, not everything
+
+
+def test_debug_dump_untraced_still_has_records(backend_zoo):
+    """Tracing off (production default): no span trees, but the capture
+    records — latency split, params, stats — are all there."""
+    from repro.serve import SearchServer
+
+    svc = SlowOnce(backend_zoo.service("partitioned", "l2"), sleep_s=0.05)
+    q = backend_zoo.queries()
+    with SearchServer(svc, replicas=1, max_batch=4, max_wait_ms=0.5,
+                      flight=2) as srv:
+        futs = [srv.submit(x, k=5, ef=40) for x in q[:6]]
+        [f.result(timeout=60) for f in futs]
+        srv.drain()
+        doc = srv.debug_dump()
+    flight = doc["otherData"]["flight"]
+    assert flight["slowest"][0]["e2e_ms"] >= 50.0
+    assert flight["slowest"][0]["trace_id"] is None
+    assert doc["traceEvents"] == []
+
+
+def test_debug_dump_writes_file(backend_zoo, tmp_path):
+    from repro.serve import SearchServer
+
+    svc = backend_zoo.service("partitioned", "l2")
+    q = backend_zoo.queries()
+    with SearchServer(svc, replicas=1, max_batch=4, max_wait_ms=0.5,
+                      flight=2) as srv:
+        [f.result(timeout=60) for f in
+         [srv.submit(x, k=5, ef=40) for x in q[:4]]]
+        srv.drain()
+        path = srv.debug_dump(str(tmp_path / "flight.json"))
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["otherData"]["flight"]["captured_total"] >= 1
+
+
+def test_flight_disabled(backend_zoo):
+    from repro.serve import SearchServer
+
+    svc = backend_zoo.service("partitioned", "l2")
+    q = backend_zoo.queries()
+    with SearchServer(svc, replicas=1, max_batch=4, max_wait_ms=0.5,
+                      flight=None) as srv:
+        [f.result(timeout=60) for f in
+         [srv.submit(x, k=5, ef=40) for x in q[:4]]]
+        srv.drain()
+        assert srv.flight is None
+        with pytest.raises(RuntimeError, match="flight recorder disabled"):
+            srv.debug_dump()
+
+
+def test_batcher_failure_lands_in_flight_and_error_counters(backend_zoo):
+    """A dispatch exception fails the futures AND records every rider in
+    the flight recorder's error ring + serve_errors_total."""
+    from repro.serve import SearchServer
+
+    class Exploding:
+        def __init__(self, service):
+            self.spec = service.spec
+            self.backend = service.backend
+
+        def search(self, request):
+            raise RuntimeError("injected engine failure")
+
+    svc = Exploding(backend_zoo.service("partitioned", "l2"))
+    q = backend_zoo.queries()
+    with SearchServer(svc, replicas=1, max_batch=4, max_wait_ms=0.5,
+                      flight=4) as srv:
+        futs = [srv.submit(x, k=5, ef=40) for x in q[:4]]
+        for f in futs:
+            with pytest.raises(RuntimeError, match="injected engine"):
+                f.result(timeout=60)
+        srv.drain()
+        snap = srv.flight.snapshot()
+        rows = {r["slo"]: r for r in srv.slo_status()} \
+            if srv.slo is not None else {}
+    assert snap["errors_total"] == 4
+    assert all("injected engine failure" in e["error"]
+               for e in snap["errored"])
+    assert snap["slowest"] == []               # nothing completed

@@ -518,6 +518,118 @@ def test_periodic_exporter_emits_and_final_snapshot(tmp_path):
     assert ex.emits >= 2
 
 
+def test_periodic_exporter_stop_is_idempotent(tmp_path):
+    """Exactly ONE final emission: a second stop() must not rewrite the
+    file (callers treat it as complete at first return)."""
+    reg = _tiny_registry()
+    path = str(tmp_path / "metrics.prom")
+    ex = PeriodicExporter(path, interval_s=60.0, registry=reg).start()
+    ex.stop()
+    emits_after_stop = ex.emits
+    reg.counter("reads_total", table="vectors").inc(1000)
+    ex.stop()                                   # no thread, no re-emit
+    assert ex.emits == emits_after_stop
+    with open(path) as f:
+        assert 'reads_total{table="vectors"} 7' in f.read()  # pre-inc
+
+
+def test_periodic_exporter_stop_without_start_emits_once(tmp_path):
+    """stop() on a never-started exporter still leaves one complete
+    snapshot behind (the serve CLI's finally-block contract)."""
+    reg = _tiny_registry()
+    path = str(tmp_path / "metrics.prom")
+    ex = PeriodicExporter(path, interval_s=60.0, registry=reg)
+    ex.stop()
+    assert ex.emits == 1
+    with open(path) as f:
+        assert "reads_total" in f.read()
+    ex.stop()
+    assert ex.emits == 1                        # still exactly one
+
+
+def test_periodic_exporter_restarts_after_stop(tmp_path):
+    reg = _tiny_registry()
+    path = str(tmp_path / "metrics.prom")
+    ex = PeriodicExporter(path, interval_s=60.0, registry=reg)
+    ex.start()
+    ex.stop()
+    first_round = ex.emits
+    reg.counter("reads_total", table="vectors").inc(3)
+    ex.start()                                  # must arm a fresh thread
+    ex.stop()
+    assert ex.emits == first_round + 2          # start-emit + final emit
+    with open(path) as f:
+        assert 'reads_total{table="vectors"} 10' in f.read()
+
+
+def test_concurrent_clients_trace_export_consistent(tmp_path, backend_zoo):
+    """N client threads against a 2-replica server while a PeriodicExporter
+    re-emits metrics + trace on a hot interval: the final trace is
+    parseable, no span is double-emitted, and every client's results are
+    bit-identical to the untraced direct path (csd backend — profiler
+    hooks active on every span close)."""
+    from repro.api import SearchRequest
+    from repro.obs import PROFILER
+    from repro.serve import SearchServer
+
+    svc = backend_zoo.service("csd", "l2")
+    q = backend_zoo.queries()
+    n_clients, per_client = 4, 6
+
+    TRACER.configure(enabled=False)
+    want = np.asarray(svc.search(
+        SearchRequest(queries=q[:per_client], k=10, ef=40)).ids)
+
+    PROFILER.configure(enabled=True)
+    TRACER.configure(enabled=True, sample_rate=1.0)
+    TRACER.clear()
+    trace_path = str(tmp_path / "trace.json")
+    metrics_path = str(tmp_path / "metrics.json")
+    got: dict[int, np.ndarray] = {}
+    try:
+        with PeriodicExporter(metrics_path, interval_s=0.02,
+                              tracer=TRACER, trace_path=trace_path):
+            with SearchServer(svc, replicas=2, max_batch=4,
+                              max_wait_ms=1.0) as srv:
+
+                def client(cid):
+                    futs = [srv.submit(x, k=10, ef=40)
+                            for x in q[:per_client]]
+                    got[cid] = np.stack(
+                        [np.asarray(f.result(timeout=120).ids)
+                         for f in futs])
+
+                ts = [threading.Thread(target=client, args=(i,))
+                      for i in range(n_clients)]
+                for t in ts:
+                    t.start()
+                for t in ts:
+                    t.join()
+                srv.drain()
+    finally:
+        TRACER.configure(enabled=False)
+        TRACER.clear()
+
+    # every client bit-identical to the untraced direct path
+    assert len(got) == n_clients
+    for cid, ids in got.items():
+        np.testing.assert_array_equal(ids, want)
+
+    # the exporter's final emission (stop() after the server closed) is
+    # complete and parseable; spans are unique — re-emitting on a hot
+    # interval never double-records
+    with open(trace_path) as f:
+        doc = json.load(f)
+    events = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    keys = [(e["args"]["trace_id"], e["args"]["span_id"]) for e in events]
+    assert len(keys) == len(set(keys)), "double-emitted spans in export"
+    n_requests = sum(1 for e in events if e["name"] == "request")
+    assert n_requests == n_clients * per_client
+    with open(metrics_path) as f:
+        snap = json.load(f)
+    assert any(c["name"] == "serve_requests_total" for c in snap["counters"])
+
+
 def test_server_metrics_endpoint(backend_zoo):
     from repro.serve import SearchServer
 

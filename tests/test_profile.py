@@ -1,0 +1,187 @@
+"""repro.obs.profile: the continuous per-stage profiler (obs phase 2).
+
+Acceptance bars (ISSUE 10):
+
+  * always-on stage timings flow with tracing DISABLED (the tracer's
+    disabled path hands out profiler spans) and with tracing enabled
+    (Tracer._record feeds the same observe());
+  * `report()` reproduces fig_obs's batch-weighted attribution — queue /
+    traversal / store_read / rerank / dispatch_other — and telescopes to
+    the measured e2e latency exactly;
+  * disabled, the profiler hands back one shared no-op object (no
+    per-span allocation), and private Tracer() instances stay unlinked
+    (their disabled path still returns the shared tracer no-op);
+  * REGISTRY publication: `profile_stage_ms` histograms plus the
+    weighted totals the report is derived from.
+"""
+
+import threading
+
+import pytest
+
+from repro.obs import PROFILER, TRACER, Tracer, profile_report
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.profile import Profiler
+
+
+@pytest.fixture
+def prof():
+    """A private profiler wired to a private registry."""
+    return Profiler(enabled=True, registry=MetricsRegistry())
+
+
+@pytest.fixture
+def global_prof():
+    """The global PROFILER, reset before and after one test."""
+    PROFILER.configure(enabled=True)
+    PROFILER.reset()
+    yield PROFILER
+    PROFILER.configure(enabled=True)
+    PROFILER.reset()
+
+
+def test_span_times_and_aggregates(prof):
+    with prof.span("traversal"):
+        pass
+    with prof.span("traversal"):
+        pass
+    rep = prof.report()
+    assert rep["spans"]["traversal"]["count"] == 2
+    assert rep["spans"]["traversal"]["total_ms"] >= 0.0
+
+
+def test_disabled_span_is_shared_noop(prof):
+    prof.configure(enabled=False)
+    a, b = prof.span("x"), prof.span("y")
+    assert a is b                       # one shared object, no allocation
+    with a:
+        pass
+    assert prof.report()["spans"] == {}
+
+
+def test_observe_feeds_registry_histogram():
+    reg = MetricsRegistry()
+    p = Profiler(enabled=True, registry=reg)
+    p.observe("store-read", 2.5)
+    p.observe("store-read", 7.5)
+    snap = reg.snapshot()
+    h = next(h for h in snap["histograms"]
+             if h["name"] == "profile_stage_ms"
+             and h["labels"]["stage"] == "store-read")
+    assert h["count"] == 2 and h["sum"] == 10.0
+
+
+def test_registry_collector_publishes_weighted_totals():
+    reg = MetricsRegistry()
+    p = Profiler(enabled=True, registry=reg)
+    with p.weighted(4):
+        p.observe("traversal", 10.0)
+    p.request(1.0, 2.0, 3.0)
+    counters = {(s["name"], s["labels"].get("stage")): s["value"]
+                for s in reg.snapshot()["counters"]}
+    assert counters[("profile_requests_total", None)] == 1
+    assert counters[("profile_stage_weighted_ms_total", "traversal")] == 40.0
+
+
+def test_reset_zeroes_report_but_not_histograms():
+    reg = MetricsRegistry()
+    p = Profiler(enabled=True, registry=reg)
+    p.observe("hop", 1.0)
+    p.request(1.0, 2.0, 3.0)
+    p.reset()
+    assert p.report() == {"requests": 0, "spans": {}}
+    h = next(h for h in reg.snapshot()["histograms"]
+             if h["labels"].get("stage") == "hop")
+    assert h["count"] == 1              # Prometheus series never reset
+
+
+def test_report_attribution_telescopes_exactly(prof):
+    """Synthetic two-request window: queue+exec == e2e, traversal net of
+    store reads, residue in dispatch_other — all exact."""
+    # one batch of 2 requests: traversal 10ms (6 of it store reads),
+    # rerank 2ms, each weighted by batch size 2
+    with prof.weighted(2):
+        prof.observe("store-read", 6.0)
+        prof.observe("traversal", 10.0)
+        prof.observe("rerank", 2.0)
+    prof.request(queue_ms=1.0, exec_ms=15.0, e2e_ms=16.0)
+    prof.request(queue_ms=3.0, exec_ms=15.0, e2e_ms=18.0)
+    rep = prof.report()
+    assert rep["requests"] == 2
+    assert rep["e2e_ms"] == 17.0
+    st = rep["stage_ms"]
+    assert st["queue"] == 2.0
+    assert st["traversal"] == 4.0       # (10-6) * weight 2 / 2 requests
+    assert st["store_read"] == 6.0
+    assert st["rerank"] == 2.0
+    assert st["dispatch_other"] == 3.0  # exec 15 - traversal 10 - rerank 2
+    assert rep["stage_sum_ms"] == rep["e2e_ms"]
+    assert rep["sum_matches_e2e"]
+
+
+def test_weighted_is_thread_local(prof):
+    """A prefetcher-style background thread must not inherit the serving
+    thread's batch weight."""
+    done = threading.Event()
+
+    def background():
+        prof.observe("store-read", 5.0)     # no weight on this thread
+        done.set()
+
+    with prof.weighted(8):
+        th = threading.Thread(target=background)
+        th.start()
+        done.wait(5)
+        th.join()
+        prof.observe("traversal", 1.0)
+    prof.request(0.0, 1.0, 1.0)
+    rep = prof.report()
+    # traversal weighted x8; the background store-read contributed to the
+    # histograms but NOT to the weighted attribution
+    assert rep["stage_ms"]["traversal"] == 8.0
+    assert rep["stage_ms"]["store_read"] == 0.0
+    assert rep["spans"]["store-read"]["count"] == 1
+
+
+def test_tracer_disabled_path_feeds_profiler(global_prof):
+    """With tracing off (production default), TRACER.span() returns a
+    profiler span — stage timings still flow."""
+    TRACER.configure(enabled=False)
+    with TRACER.span("traversal"):
+        pass
+    with TRACER.child_span("store-read"):
+        pass
+    rep = profile_report(reset=True)
+    assert rep["spans"]["traversal"]["count"] == 1
+    assert rep["spans"]["store-read"]["count"] == 1
+
+
+def test_tracer_enabled_path_feeds_profiler(global_prof):
+    TRACER.configure(enabled=True, sample_rate=1.0)
+    TRACER.clear()
+    try:
+        with TRACER.span("traversal"):
+            pass
+    finally:
+        TRACER.configure(enabled=False)
+        TRACER.clear()
+    assert profile_report(reset=True)["spans"]["traversal"]["count"] == 1
+
+
+def test_profiler_disabled_tracer_disabled_is_shared_noop(global_prof):
+    """Both tiers off: the original zero-cost contract still holds."""
+    global_prof.configure(enabled=False)
+    TRACER.configure(enabled=False)
+    assert TRACER.span("a") is TRACER.span("b") is TRACER.child_span("c")
+
+
+def test_private_tracers_stay_unlinked():
+    """Only the global TRACER carries the global PROFILER; private
+    instances keep the shared-noop disabled path (test isolation)."""
+    t = Tracer(enabled=False)
+    assert t.profiler is None
+    assert t.span("a") is t.span("b")
+
+
+def test_empty_report_shape(prof):
+    assert prof.report() == {"requests": 0, "spans": {}}

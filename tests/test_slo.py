@@ -1,0 +1,309 @@
+"""repro.obs.slo: declarative SLOs with multi-window burn-rate breaches.
+
+Acceptance bars (ISSUE 10):
+
+  * the SRE two-window rule, exactly: a breach needs BOTH windows over
+    the burn threshold AND min_samples in the long window — brief spikes
+    (short hot, long cool) and stale pain (long hot, short recovered)
+    both stay quiet;
+  * breach events are edge-triggered and bounded; `slo_breaches_total` /
+    `slo_burn_rate` / `slo_breaching` land in the registry;
+  * the serve and cluster integrations feed it from real traffic.
+
+Time is injected (FakeClock) — no sleeps, no wall-clock flakes.
+"""
+
+import pytest
+
+from repro.obs import SLO, SLOTracker, default_slos
+from repro.obs.metrics import MetricsRegistry
+
+
+class FakeClock:
+    def __init__(self, t=1000.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def make_tracker(slos=None, **kw):
+    clock = FakeClock()
+    reg = MetricsRegistry()
+    tr = SLOTracker(slos or default_slos(p99_ms=10.0, window_s=60.0),
+                    clock=clock, registry=reg, **kw)
+    return tr, clock, reg
+
+
+# ---------------------------------------------------------------------------
+# SLO declaration
+# ---------------------------------------------------------------------------
+
+
+def test_slo_kinds_validated():
+    with pytest.raises(ValueError, match="unknown SLO kind"):
+        SLO(name="x", kind="throughput", target=1.0)
+
+
+def test_slo_without_budget_rejected():
+    with pytest.raises(ValueError, match="no error budget"):
+        SLO(name="x", kind="latency", target=10.0, objective=1.0)
+    with pytest.raises(ValueError, match="no error budget"):
+        SLO(name="x", kind="error_rate", target=0.0)
+
+
+def test_budget_by_kind():
+    assert SLO(name="l", kind="latency", target=10.0,
+               objective=0.99).budget() == pytest.approx(0.01)
+    assert SLO(name="e", kind="error_rate", target=0.05).budget() == 0.05
+
+
+def test_default_slos_shape():
+    slos = default_slos(p99_ms=25.0, error_rate=0.02, recall_floor=0.9)
+    by_name = {s.name: s for s in slos}
+    assert by_name["latency_p99"].target == 25.0
+    assert by_name["error_rate"].budget() == 0.02
+    assert by_name["recall_floor"].kind == "recall"
+    assert "recall_floor" not in {s.name for s in default_slos()}
+
+
+def test_tracker_requires_slos():
+    with pytest.raises(ValueError, match="at least one"):
+        SLOTracker([])
+
+
+# ---------------------------------------------------------------------------
+# burn-rate mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_all_good_never_breaches():
+    tr, clock, _ = make_tracker()
+    for _ in range(100):
+        tr.record_latency(1.0)          # all within the 10ms target
+        clock.advance(0.1)
+    rows = {r["slo"]: r for r in tr.evaluate()}
+    assert rows["latency_p99"]["burn_long"] == 0.0
+    assert not rows["latency_p99"]["breaching"]
+    assert tr.breaches() == []
+
+
+def test_sustained_badness_breaches_with_exact_accounting():
+    tr, clock, _ = make_tracker()
+    for _ in range(50):
+        tr.record_latency(100.0)        # every sample misses 10ms
+        clock.advance(0.1)
+    rows = {r["slo"]: r for r in tr.evaluate()}
+    lat = rows["latency_p99"]
+    assert lat["samples"] == 50 and lat["bad"] == 50
+    assert lat["bad_frac"] == 1.0
+    assert lat["burn_long"] == 100.0    # 1.0 bad over a 0.01 budget
+    assert lat["burn_short"] == 100.0
+    assert lat["breaching"]
+    # error_rate saw the same 50 requests, all successes
+    err = rows["error_rate"]
+    assert err["samples"] == 50 and err["bad"] == 0 and not err["breaching"]
+
+
+def test_min_samples_gate():
+    tr, clock, _ = make_tracker()
+    for _ in range(19):                 # default min_samples = 20
+        tr.record_latency(100.0)
+        clock.advance(0.1)
+    assert not any(r["breaching"] for r in tr.evaluate())
+    tr.record_latency(100.0)
+    assert any(r["breaching"] for r in tr.evaluate())
+
+
+def test_short_window_vetoes_recovered_pain():
+    """Long window still hot, short window fully recovered: no breach —
+    the two-window rule's whole point (no alerting on stale pain)."""
+    tr, clock, _ = make_tracker()
+    for _ in range(40):
+        tr.record_latency(100.0)        # bad burst
+        clock.advance(0.1)
+    # recover: short window (60/12 = 5s) fills with good samples
+    for _ in range(80):
+        tr.record_latency(1.0)
+        clock.advance(0.1)
+    rows = {r["slo"]: r for r in tr.evaluate()}
+    lat = rows["latency_p99"]
+    assert lat["burn_long"] > 2.0       # long window still over threshold
+    assert lat["burn_short"] < 2.0      # but the pain stopped
+    assert not lat["breaching"]
+
+
+def test_window_pruning_forgets_old_badness():
+    tr, clock, _ = make_tracker()
+    for _ in range(50):
+        tr.record_latency(100.0)
+        clock.advance(0.1)
+    clock.advance(120.0)                # everything ages out of 60s window
+    for _ in range(30):
+        tr.record_latency(1.0)
+        clock.advance(0.1)
+    lat = {r["slo"]: r for r in tr.evaluate()}["latency_p99"]
+    assert lat["samples"] == 30 and lat["bad"] == 0
+    assert not lat["breaching"]
+
+
+def test_breach_events_edge_triggered_and_counted():
+    tr, clock, reg = make_tracker()
+    for _ in range(30):
+        tr.record_latency(100.0)
+        clock.advance(0.1)
+    tr.evaluate()
+    tr.evaluate()                       # still breaching: no second event
+    assert len(tr.breaches()) == 1
+    ev = tr.breaches()[0]
+    assert ev["slo"] == "latency_p99" and ev["burn_long"] == 100.0
+    # recover, then breach again -> second edge
+    clock.advance(120.0)
+    for _ in range(30):
+        tr.record_latency(1.0)
+        clock.advance(0.1)
+    tr.evaluate()
+    for _ in range(30):
+        tr.record_latency(100.0)
+        clock.advance(0.1)
+    tr.evaluate()
+    assert len(tr.breaches()) == 2
+    counters = {s["labels"]["slo"]: s["value"]
+                for s in reg.snapshot()["counters"]
+                if s["name"] == "slo_breaches_total"}
+    assert counters["latency_p99"] == 2
+
+
+def test_record_error_burns_error_budget():
+    tr, clock, _ = make_tracker(default_slos(p99_ms=10.0, error_rate=0.01,
+                                             window_s=60.0))
+    for _ in range(20):
+        tr.record_latency(1.0)          # 20 successes
+        clock.advance(0.1)
+    tr.record_error(20)                 # then a failure burst
+    rows = {r["slo"]: r for r in tr.evaluate()}
+    err = rows["error_rate"]
+    assert err["samples"] == 40 and err["bad"] == 20
+    assert err["burn_long"] == pytest.approx(50.0)   # 0.5 over 0.01
+    assert err["breaching"]
+    assert not rows["latency_p99"]["breaching"]      # latencies were fine
+
+
+def test_recall_probes_feed_recall_slo():
+    slos = default_slos(p99_ms=10.0, recall_floor=0.9, window_s=60.0)
+    tr, clock, _ = make_tracker(slos)
+    for _ in range(25):
+        tr.record_recall(0.5)           # below the 0.9 floor
+        clock.advance(0.1)
+    rec = {r["slo"]: r for r in tr.evaluate()}["recall_floor"]
+    assert rec["bad"] == 25 and rec["breaching"]
+    # good probes don't burn
+    clock.advance(120.0)
+    for _ in range(25):
+        tr.record_recall(0.95)
+        clock.advance(0.1)
+    rec = {r["slo"]: r for r in tr.evaluate()}["recall_floor"]
+    assert rec["bad"] == 0 and not rec["breaching"]
+
+
+def test_gauges_and_sample_counters_in_registry():
+    tr, clock, reg = make_tracker(labels={"router": "r1"})
+    for _ in range(30):
+        tr.record_latency(100.0)
+        clock.advance(0.1)
+    tr.evaluate()
+    snap = reg.snapshot()
+    gauges = {(g["name"], g["labels"].get("slo"), g["labels"].get("window")):
+              g["value"] for g in snap["gauges"]}
+    assert gauges[("slo_burn_rate", "latency_p99", "long")] == 100.0
+    assert gauges[("slo_breaching", "latency_p99", None)] == 1.0
+    counters = {(c["name"], c["labels"].get("slo")): c["value"]
+                for c in snap["counters"]}
+    assert counters[("slo_samples_total", "latency_p99")] == 30
+    # custom labels ride along on every series
+    assert all(g["labels"].get("router") == "r1" for g in snap["gauges"]
+               if g["name"].startswith("slo_"))
+
+
+def test_bounded_memory():
+    tr, clock, _ = make_tracker(max_samples=100, max_events=4)
+    for _ in range(1000):
+        tr.record_latency(100.0)
+    lat = {r["slo"]: r for r in tr.evaluate()}["latency_p99"]
+    assert lat["samples"] <= 100        # window deque bounded
+    assert len(tr.breaches()) <= 4
+
+
+def test_summary_mentions_breach():
+    tr, clock, _ = make_tracker()
+    for _ in range(30):
+        tr.record_latency(100.0)
+        clock.advance(0.1)
+    text = tr.summary()
+    assert "BREACH" in text and "latency_p99" in text
+    assert "breach events: 1" in text
+
+
+# ---------------------------------------------------------------------------
+# serve / cluster integration
+# ---------------------------------------------------------------------------
+
+
+def test_search_server_feeds_slo(backend_zoo):
+    from repro.serve import SearchServer
+
+    svc = backend_zoo.service("partitioned", "l2")
+    q = backend_zoo.queries()
+    slo = SLOTracker(default_slos(p99_ms=0.001),  # impossible target
+                     registry=MetricsRegistry())
+    with SearchServer(svc, replicas=1, max_batch=4, max_wait_ms=1.0,
+                      slo=slo) as srv:
+        futs = [srv.submit(x, k=5, ef=40) for x in q[:8]]
+        [f.result(timeout=60) for f in futs]
+        srv.drain()
+        rows = {r["slo"]: r for r in srv.slo_status()}
+    lat = rows["latency_p99"]
+    assert lat["samples"] == 8 and lat["bad"] == 8
+    assert rows["error_rate"]["samples"] == 8
+
+
+def test_search_server_accepts_slo_list(backend_zoo):
+    """Passing raw SLO objects (not a tracker) wraps them."""
+    from repro.serve import SearchServer
+
+    svc = backend_zoo.service("partitioned", "l2")
+    q = backend_zoo.queries()
+    with SearchServer(svc, replicas=1, max_batch=4, max_wait_ms=1.0,
+                      slo=default_slos(p99_ms=1000.0)) as srv:
+        [f.result(timeout=60) for f in
+         [srv.submit(x, k=5, ef=40) for x in q[:4]]]
+        srv.drain()
+        assert isinstance(srv.slo, SLOTracker)
+        rows = {r["slo"]: r for r in srv.slo_status()}
+    assert rows["latency_p99"]["samples"] == 4
+
+
+def test_cluster_router_per_shard_slo(backend_zoo):
+    from repro.api import SearchRequest
+    from repro.cluster import build_cluster
+
+    svc = backend_zoo.service("partitioned", "l2")
+    q = backend_zoo.queries()
+    cluster = build_cluster(
+        backend_zoo.data["vectors"], svc.spec, 2, replicas=1,
+        slo=default_slos(p99_ms=0.001))     # impossible target
+    try:
+        for _ in range(3):
+            cluster.search(SearchRequest(queries=q, k=5, ef=40))
+        stats = cluster.stats()
+        shards = {row["shard"]: {r["slo"]: r for r in row["slo"]}
+                  for row in stats.slo}
+        assert len(shards) == 2             # one tracker per shard
+        for rows in shards.values():
+            lat = rows["latency_p99"]
+            assert lat["samples"] == 3 and lat["bad"] == 3
+    finally:
+        cluster.close()
